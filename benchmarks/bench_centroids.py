@@ -1,0 +1,32 @@
+"""Figure 11: EcoVector memory / latency / power across centroid counts."""
+from __future__ import annotations
+
+from benchmarks.common import datasets, emit, ground_truth, recall_and_qps
+from repro.core.analytical import HW, energy_mj, memory_bytes
+from repro.core.ecovector import EcoVector
+
+
+def run(mode="quick"):
+    for dset, (X, Q) in datasets(mode).items():
+        gt = ground_truth(X, Q)
+        for nc in (16, 32, 64, 128):
+            if nc * 4 > len(X):
+                continue
+            idx = EcoVector(X.shape[1], n_clusters=nc).build(X)
+            idx.stats.distance_ops = 0
+            idx.stats.disk_bytes = 0
+            idx.stats.disk_loads = 0
+            rec, qps, per = recall_and_qps(idx, Q, gt, n_probe=8,
+                                           ef_search=32)
+            nq = len(Q)
+            t_s = per * 1e3  # measured ms as CPU proxy
+            t_d = idx.stats.disk_time_s / nq * 1e3
+            e = energy_mj(t_s - t_d, t_d)
+            model = memory_bytes("EcoVector", N=len(X), d=X.shape[1], Nc=nc)
+            emit(f"centroids.{dset}.Nc={nc}", per * 1e6,
+                 f"recall={rec:.3f};ram_MB={idx.ram_bytes()/1e6:.3f};"
+                 f"model_MB={model/1e6:.3f};energy_mJ={e:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks (interpret-mode on CPU: correctness-grade
+timing only; real perf numbers come from the dry-run roofline terms)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(mode="quick"):
+    k0 = jax.random.PRNGKey(0)
+    B, d, NC, CAP, P = 8, 128, 64, 256, 8
+    q = jax.random.normal(k0, (B, d))
+    data = jax.random.normal(k0, (NC, CAP, d))
+    lens = jnp.full((NC,), CAP, jnp.int32)
+    probes = jnp.tile(jnp.arange(P, dtype=jnp.int32)[None], (B, 1))
+    t_ref = _time(ops.ecoscan, q, data, lens, probes, use_pallas=False)
+    t_pal = _time(ops.ecoscan, q, data, lens, probes, use_pallas=True)
+    emit("kernel.ecoscan.ref", t_ref * 1e6, f"B={B};P={P};CAP={CAP}")
+    emit("kernel.ecoscan.pallas_interpret", t_pal * 1e6, "correctness-mode")
+
+    x = jax.random.normal(k0, (4096, 128))
+    c = jax.random.normal(k0, (64, 128))
+    emit("kernel.kmeans_assign.ref",
+         _time(ops.kmeans_assign, x, c, use_pallas=False) * 1e6, "N=4096")
+    emit("kernel.kmeans_assign.pallas_interpret",
+         _time(ops.kmeans_assign, x, c, use_pallas=True) * 1e6, "N=4096")
+
+    w = jax.random.normal(k0, (4, 512, 384))
+    qq = jax.random.normal(k0, (4, 384))
+    emit("kernel.scr_score.ref",
+         _time(ops.scr_score, w, qq, use_pallas=False) * 1e6, "NW=512")
+    emit("kernel.scr_score.pallas_interpret",
+         _time(ops.scr_score, w, qq, use_pallas=True) * 1e6, "NW=512")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Figure 6 / Table 1: measured RAM footprint vs the analytical model, per
+algorithm per dataset (plus the paper-scale analytical numbers at N=1M)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import IDX_KW, build, datasets, emit
+from repro.core.analytical import memory_bytes
+from repro.core.baselines import ALL_BASELINES
+
+
+def run(mode="quick"):
+    for dset, (X, Q) in datasets(mode).items():
+        nc = max(16, len(X) // 256)
+        for name in ALL_BASELINES:
+            idx, t_build = build(name, X, nc)
+            measured = idx.ram_bytes()
+            model = memory_bytes(name, N=len(X), d=X.shape[1], Nc=nc)
+            emit(f"memory.{dset}.{name}", t_build * 1e6,
+                 f"measured_MB={measured/1e6:.3f};model_MB={model/1e6:.3f}")
+    # paper-scale analytical rows (SIFT-1M regime)
+    for name in ALL_BASELINES:
+        model = memory_bytes(name, N=1_000_000, d=128, Nc=4096)
+        emit(f"memory.model@1M.{name}", 0.0, f"model_MB={model/1e6:.1f}")
+
+
+if __name__ == "__main__":
+    run()

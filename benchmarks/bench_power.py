@@ -1,0 +1,35 @@
+"""Figure 9 / §3.4.3: per-search energy via the paper's power model,
+driven by *measured* distance-op and disk-byte counters from real searches
+(CPU current for t_s, disk current for t_d)."""
+from __future__ import annotations
+
+from benchmarks.common import build, datasets, emit
+from repro.core.analytical import HW, energy_mj
+from repro.core.baselines import ALL_BASELINES
+
+
+def run(mode="quick"):
+    for dset, (X, Q) in datasets(mode).items():
+        d = X.shape[1]
+        for name in ALL_BASELINES:
+            idx, _ = build(name, X)
+            idx.stats.reset() if hasattr(idx.stats, "reset") else None
+            idx.stats.distance_ops = 0
+            idx.stats.disk_loads = 0
+            idx.stats.disk_bytes = 0
+            for q in Q:
+                idx.search(q, k=10, n_probe=8)
+            nq = len(Q)
+            t_s = (idx.stats.distance_ops / nq) * HW.t_op_ms(d)
+            dbytes = idx.stats.disk_bytes / nq
+            nseek = idx.stats.disk_loads / nq
+            t_d = nseek * (HW.t_seek_ms + HW.t_cmd_ms
+                           + dbytes / max(nseek, 1e-9)
+                           * HW.t_transfer_ms_per_byte) if nseek else 0.0
+            e = energy_mj(t_s, t_d)
+            emit(f"power.{dset}.{name}", (t_s + t_d) * 1e3,
+                 f"energy_mJ={e:.4f};t_s_ms={t_s:.3f};t_d_ms={t_d:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Table 5: Accuracy / TTFT / Power per (sLM x RAG method x dataset).
+
+Accuracy = answer-in-final-context proxy (retrieval+SCR quality; no phone
+sLM here). TTFT/Power combine measured retrieval/post-processing time with
+the paper's Table-6 prompt-eval speeds and battery-impact coefficients.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.data.synthetic import make_qa_corpus
+from repro.serving.embedder import HashEmbedder
+from repro.serving.rag import PIPELINES, SLM_SPEEDS, accuracy
+
+STYLES = {"SQuAD-like": "squad", "HotpotQA-like": "hotpot",
+          "TriviaQA-like": "trivia"}
+
+
+def run(mode="quick"):
+    nq = 20 if mode == "quick" else 80
+    for label, style in STYLES.items():
+        corpus = make_qa_corpus(style, n_docs=150, n_questions=nq, seed=0)
+        emb = HashEmbedder(dim=128).fit(corpus.docs)
+        for slm in SLM_SPEEDS:
+            for pname, cls in PIPELINES.items():
+                pipe = cls(corpus.docs, emb, top_k=3, slm=slm)
+                acc = accuracy(pipe, corpus.examples, max_q=nq)
+                answers = [pipe.answer(e.question)
+                           for e in corpus.examples[:nq]]
+                ttft = np.mean([a.ttft_model_s for a in answers])
+                power = np.mean([a.energy_model_j for a in answers])
+                tok = np.mean([a.prompt_tokens for a in answers])
+                emit(f"rag.{slm}.{label}.{pname}", ttft * 1e6,
+                     f"acc={acc:.2f};ttft_s={ttft:.2f};"
+                     f"power_J={power:.2f};tokens={tok:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Figure 7 (recall vs QPS) + Figure 8 (cluster sizes, efSearch width)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build, datasets, emit, ground_truth, recall_and_qps
+from repro.core.baselines import ALL_BASELINES
+
+SWEEPS = {
+    "IVF": [{"n_probe": p} for p in (1, 2, 4, 8, 16)],
+    "IVFPQ": [{"n_probe": p} for p in (1, 2, 4, 8, 16)],
+    "IVF-DISK": [{"n_probe": p} for p in (1, 2, 4, 8, 16)],
+    "IVFPQ-DISK": [{"n_probe": p} for p in (1, 2, 4, 8, 16)],
+    "IVF-HNSW": [{"n_probe": p} for p in (1, 2, 4, 8, 16)],
+    "HNSW": [{"ef_search": e} for e in (8, 16, 32, 64, 128)],
+    "HNSWPQ": [{"ef_search": e} for e in (8, 16, 32, 64, 128)],
+    "EcoVector": [{"n_probe": p, "ef_search": e}
+                  for p, e in ((1, 8), (2, 16), (4, 16), (8, 32), (16, 64))],
+}
+
+
+def run(mode="quick"):
+    for dset, (X, Q) in datasets(mode).items():
+        gt = ground_truth(X, Q)
+        for name in ALL_BASELINES:
+            idx, _ = build(name, X)
+            for kw in SWEEPS[name]:
+                rec, qps, per = recall_and_qps(idx, Q, gt, **kw)
+                tag = ";".join(f"{k}={v}" for k, v in kw.items())
+                emit(f"recall_qps.{dset}.{name}.{tag}", per * 1e6,
+                     f"recall@10={rec:.3f};qps={qps:.1f}")
+            if name == "EcoVector":
+                sizes = idx.cluster_sizes()
+                emit(f"cluster_sizes.{dset}", 0.0,
+                     f"mean={sizes.mean():.1f};p90="
+                     f"{np.percentile(sizes, 90):.0f};max={sizes.max()}")
+                # Fig 8b: efSearch width needed for >=0.9 recall
+                for ef in (4, 8, 16, 32, 64):
+                    rec, _, per = recall_and_qps(idx, Q, gt, n_probe=8,
+                                                 ef_search=ef)
+                    if rec >= 0.9:
+                        emit(f"ef_width.{dset}.EcoVector", per * 1e6,
+                             f"ef_for_0.9={ef}")
+                        break
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Figure 10: insertion and deletion latency per algorithm."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build, datasets, emit
+
+UPDATABLE = ["IVF", "IVF-DISK", "IVF-HNSW", "HNSW", "EcoVector"]
+
+
+def run(mode="quick"):
+    for dset, (X, Q) in datasets(mode).items():
+        rng = np.random.default_rng(0)
+        new_vecs = X[rng.choice(len(X), 32)] + 0.01 * rng.normal(
+            size=(32, X.shape[1])).astype(np.float32)
+        for name in UPDATABLE:
+            idx, _ = build(name, X)
+            base = 1_000_000
+            t0 = time.perf_counter()
+            for i, v in enumerate(new_vecs):
+                idx.insert(base + i, v)
+            t_ins = (time.perf_counter() - t0) / len(new_vecs)
+            t0 = time.perf_counter()
+            for i in range(len(new_vecs)):
+                idx.delete(base + i)
+            t_del = (time.perf_counter() - t0) / len(new_vecs)
+            emit(f"update.{dset}.{name}", (t_ins + t_del) / 2 * 1e6,
+                 f"insert_ms={t_ins*1e3:.3f};delete_ms={t_del*1e3:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Shared benchmark fixtures: datasets scaled for a 1-core CPU container
+(paper runs SIFT-1M on a phone; we distribution-match at reduced N and keep
+every derived quantity in the analytical models at the paper's N too)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import make_index
+from repro.data.synthetic import nytimes_like, sift_like
+
+SIZES = {"quick": (2500, 40), "full": (30000, 200)}
+
+_INDEX_CACHE: dict = {}
+_DATA_CACHE: dict = {}
+
+IDX_KW = {
+    "IVF": lambda nc: {"n_clusters": nc},
+    "IVFPQ": lambda nc: {"n_clusters": nc, "m_pq": 8},
+    "HNSW": lambda nc: {},
+    "HNSWPQ": lambda nc: {"m_pq": 8},
+    "IVF-DISK": lambda nc: {"n_clusters": nc},
+    "IVFPQ-DISK": lambda nc: {"n_clusters": nc, "m_pq": 8},
+    "IVF-HNSW": lambda nc: {"n_clusters": nc},
+    "EcoVector": lambda nc: {"n_clusters": nc},
+}
+
+
+def datasets(mode="quick"):
+    if mode not in _DATA_CACHE:
+        n, nq = SIZES[mode]
+        sX, sQ = sift_like(n=n, nq=nq)
+        nX, nQ = nytimes_like(n=max(n // 2, 1000), nq=nq)
+        _DATA_CACHE[mode] = {"SIFT-like": (sX, sQ), "NYTimes-like": (nX, nQ)}
+    return _DATA_CACHE[mode]
+
+
+def build(name, X, nc=None):
+    """Build (or fetch the cached) index — suites share builds since the
+    graph-based builds dominate benchmark wall time."""
+    nc = nc or max(16, len(X) // 256)
+    key = (name, id(X), nc)
+    if key in _INDEX_CACHE:
+        return _INDEX_CACHE[key]
+    kw = dict(IDX_KW[name](nc))
+    if name in ("HNSW", "HNSWPQ", "EcoVector"):
+        kw.setdefault("M", 12)
+        kw.setdefault("ef_construction", 60)
+    idx = make_index(name, X.shape[1], **kw)
+    t0 = time.perf_counter()
+    idx.build(X)
+    _INDEX_CACHE[key] = (idx, time.perf_counter() - t0)
+    return _INDEX_CACHE[key]
+
+
+def ground_truth(X, Q, k=10):
+    out = []
+    for q in Q:
+        d = np.sum((X - q) ** 2, axis=1)
+        out.append(set(np.argsort(d)[:k].tolist()))
+    return out
+
+
+def recall_and_qps(idx, Q, gt, k=10, **search_kw):
+    t0 = time.perf_counter()
+    recs = []
+    for q, g in zip(Q, gt):
+        ids, _ = idx.search(q, k=k, **search_kw)
+        recs.append(len(set(map(int, ids)) & g) / k)
+    dt = time.perf_counter() - t0
+    return float(np.mean(recs)), len(Q) / dt, dt / len(Q)
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

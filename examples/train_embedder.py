@@ -1,0 +1,54 @@
+"""Train a ~100M-parameter embedding-model-family LM for a few hundred
+steps on synthetic text (the gte-small architecture at ~its real size),
+with checkpoint/restart and the step watchdog.
+
+  PYTHONPATH=src python examples/train_embedder.py --steps 200
+  (add --tiny for a fast smoke run)
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_config, get_reduced
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (seconds instead of minutes)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_embedder_ckpt")
+    args = ap.parse_args()
+
+    from repro.launch import train as T
+
+    if args.tiny:
+        losses = T.run("gte_small", reduced=True, steps=args.steps,
+                       batch=8, seq=64, ckpt_dir=args.ckpt_dir,
+                       ckpt_interval=50)
+    else:
+        # full gte-small (~33M) is the paper's embedder; scale d_ff/layers
+        # up to ~100M to satisfy the "~100M model" driver requirement
+        import repro.launch.train as LT
+        from repro.configs import gte_small
+        cfg = dataclasses.replace(gte_small.CONFIG, name="gte-100m",
+                                  num_layers=18, d_model=512, num_heads=8,
+                                  d_ff=2048)
+        print(f"[example] params ~= {cfg.param_count()/1e6:.0f}M")
+
+        # route through the same driver with a custom config
+        import repro.configs as configs_mod
+
+        class _Shim:
+            CONFIG = cfg
+        sys.modules["repro.configs.gte_100m"] = _Shim
+        losses = T.run("gte_100m", reduced=False, steps=args.steps,
+                       batch=8, seq=128, ckpt_dir=args.ckpt_dir,
+                       ckpt_interval=100)
+    print(f"[example] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

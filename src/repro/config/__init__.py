@@ -1,0 +1,258 @@
+"""Config system: typed dataclasses + flat-override CLI parsing.
+
+Every architecture in ``repro.configs`` produces a :class:`ModelConfig`;
+launchers combine it with a :class:`ShapeConfig` and :class:`MeshConfig`
+into a :class:`RunConfig`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    # Arctic-style: a dense FFN runs in parallel with the MoE residual.
+    dense_residual: bool = False
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25
+    # ZeRO++-style int8 quantised FSDP weight gathers (halves ICI bytes;
+    # straight-through custom_vjp keeps the backward identical)
+    int8_gather: bool = False
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    ssm_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk_size: int = 256  # SSD chunked scan block
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0            # defaults to d_model
+    local_window: int = 2048
+    # repeating block pattern; "r"=recurrent, "a"=local attention
+    pattern: str = "rra"
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 12
+    decoder_layers: int = 12
+    cross_kv_len: int = 1500      # whisper: 30s audio -> 1500 frames
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | encdec | rglru | mamba2
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    act: str = "swiglu"           # swiglu | sq_relu | gelu
+    sliding_window: Optional[int] = None
+    rope_type: str = "rope"       # rope | mrope | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    norm_eps: float = 1e-5
+    causal: bool = True           # False -> bidirectional encoder (gte)
+    tie_embeddings: bool = False
+    modality: str = "text"        # text | audio | vision
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mamba: MambaConfig = field(default_factory=MambaConfig)
+    rglru: RGLRUConfig = field(default_factory=RGLRUConfig)
+    encdec: EncDecConfig = field(default_factory=EncDecConfig)
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    # int8 KV cache (dense family): halves decode HBM traffic + footprint;
+    # per-token-per-head scales applied on the score/probability side so
+    # the cache operand feeds the MXU through free converts (see
+    # EXPERIMENTS.md §Perf hillclimb 2)
+    kv_quant: bool = False
+    # long_500k eligibility: sub-quadratic attention path exists
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to 256 so embedding/lm_head shard on any mesh."""
+        return -(-self.vocab_size // 256) * 256
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + per-layer weights)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        att = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) \
+            + (self.num_heads * hd) * d
+        if self.family == "mamba2":
+            m = self.mamba
+            d_in = m.expand * d
+            nheads = d_in // m.head_dim
+            # in_proj: d -> (2*d_in + 2*ssm_state + nheads); out_proj: d_in -> d
+            per = d * (2 * d_in + 2 * m.ssm_state + nheads) + d_in * d + nheads
+            return emb + self.num_layers * (per + 2 * d)
+        ffn_mult = 3 if self.act == "swiglu" else 2
+        ffn = ffn_mult * d * self.d_ff if self.d_ff else 0
+        per = att + ffn + 2 * d
+        if self.family == "moe":
+            e_ffn = ffn_mult * d * self.moe.expert_d_ff
+            per = att + 2 * d + self.moe.num_experts * e_ffn + d * self.moe.num_experts
+            if self.moe.dense_residual:
+                per += ffn
+        if self.family == "encdec":
+            # decoder adds cross-attention
+            per_dec = per + att
+            return emb + self.encdec.encoder_layers * per + self.encdec.decoder_layers * per_dec
+        if self.family == "rglru":
+            w = self.rglru.lru_width or d
+            rec = d * w * 2 + w * d + 2 * w * w + 3 * w + w * self.rglru.conv_width
+            n_att = sum(1 for c in (self.rglru.pattern * self.num_layers)[: self.num_layers] if c == "a")
+            n_rec = self.num_layers - n_att
+            return emb + n_att * per + n_rec * (rec + ffn + 2 * d)
+        return emb + self.num_layers * per
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only top_k experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        ffn_mult = 3 if self.act == "swiglu" else 2
+        e_ffn = ffn_mult * d * self.moe.expert_d_ff
+        inactive = (self.moe.num_experts - self.moe.top_k) * e_ffn
+        return self.param_count() - self.num_layers * inactive
+
+    def reduced(self, **over: Any) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        kw: dict[str, Any] = dict(
+            name=self.name + "-reduced",
+            num_layers=min(self.num_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2),
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=32,
+        )
+        if self.family == "moe":
+            kw["moe"] = MoEConfig(
+                num_experts=4, top_k=min(self.moe.top_k, 2), expert_d_ff=64,
+                dense_residual=self.moe.dense_residual)
+        if self.family == "mamba2":
+            kw["mamba"] = MambaConfig(ssm_state=16, head_dim=32, expand=2,
+                                      chunk_size=32)
+            kw["num_heads"] = 8  # d_inner/head_dim = 256/32
+        if self.family == "rglru":
+            kw["rglru"] = RGLRUConfig(lru_width=128, local_window=64,
+                                      pattern=self.rglru.pattern)
+        if self.family == "encdec":
+            kw["encdec"] = EncDecConfig(encoder_layers=2, decoder_layers=2,
+                                        cross_kv_len=enc_len_for_tests())
+        if self.sliding_window:
+            kw["sliding_window"] = 64
+        kw.update(over)
+        return dataclasses.replace(self, **kw)
+
+
+def enc_len_for_tests() -> int:
+    return 24
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def num_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    microbatches: int = 1            # gradient accumulation steps
+    zero3: bool = True               # shard params/opt state over data axis
+    grad_compression: str = "none"   # none | int8_ef
+    z_loss: float = 0.0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    seed: int = 0
+
+
+def apply_overrides(cfg: Any, overrides: dict[str, Any]) -> Any:
+    """Apply dotted-key overrides to nested frozen dataclasses."""
+    for key, val in overrides.items():
+        parts = key.split(".")
+        cfg = _set_path(cfg, parts, val)
+    return cfg
+
+
+def _set_path(obj: Any, parts: list, val: Any) -> Any:
+    if len(parts) == 1:
+        fld = {f.name: f for f in dataclasses.fields(obj)}[parts[0]]
+        typ = fld.type
+        if isinstance(val, str):
+            if typ in ("int", int):
+                val = int(val)
+            elif typ in ("float", float):
+                val = float(val)
+            elif typ in ("bool", bool):
+                val = val.lower() in ("1", "true", "yes")
+        return dataclasses.replace(obj, **{parts[0]: val})
+    child = getattr(obj, parts[0])
+    return dataclasses.replace(obj, **{parts[0]: _set_path(child, parts[1:], val)})

@@ -1,0 +1,59 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the full-size :class:`ModelConfig`;
+``get_reduced(arch_id)`` returns the CPU smoke-test configuration.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig, ShapeConfig, SHAPES
+
+ARCH_IDS = [
+    "arctic_480b",
+    "granite_moe_1b_a400m",
+    "qwen2_72b",
+    "mistral_large_123b",
+    "nemotron_4_15b",
+    "h2o_danube_1_8b",
+    "whisper_small",
+    "qwen2_vl_2b",
+    "recurrentgemma_9b",
+    "mamba2_780m",
+]
+
+# Paper-side models (MobileRAG's own components)
+PAPER_IDS = ["gte_small", "qwen25_0_5b"]
+
+
+def _norm(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_norm(arch)}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return get_config(arch).reduced()
+
+
+def cells(arch: str) -> list[ShapeConfig]:
+    """The (arch x shape) cells this arch participates in.
+
+    long_500k requires a sub-quadratic attention path; decode shapes are
+    skipped for encoder-only archs (none assigned here).
+    """
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        out.append(s)
+    return out
+
+
+def skipped_cells(arch: str) -> list[str]:
+    cfg = get_config(arch)
+    return [] if cfg.subquadratic else ["long_500k"]

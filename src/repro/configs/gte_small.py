@@ -1,0 +1,22 @@
+"""GTE-Small-like encoder (~33M params): the paper's embedding model for
+queries/documents/SCR windows (384-d sentence embeddings). [arXiv:2308.03281]
+Implemented as a bidirectional (non-causal) mean-pooled encoder.
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gte-small",
+    family="dense",
+    num_layers=12,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=30522,
+    head_dim=64,
+    act="gelu",
+    rope_type="rope",
+    causal=False,
+    tie_embeddings=True,
+    subquadratic=False,
+)

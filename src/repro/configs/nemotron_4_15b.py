@@ -1,0 +1,19 @@
+"""Nemotron-4 15B: GQA + squared-ReLU FFN (non-gated).
+
+[arXiv:2402.16819; unverified]
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256000,
+    head_dim=128,
+    act="sq_relu",
+    subquadratic=False,
+)

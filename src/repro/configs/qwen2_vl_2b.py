@@ -1,0 +1,23 @@
+"""Qwen2-VL-2B backbone: M-RoPE, dynamic-resolution vision frontend is a
+STUB (input_specs provides precomputed patch embeddings). [arXiv:2409.12191]
+"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    qkv_bias=True,
+    rope_type="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+    modality="vision",
+    tie_embeddings=True,
+    subquadratic=False,
+)

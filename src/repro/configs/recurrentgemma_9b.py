@@ -1,0 +1,21 @@
+"""RecurrentGemma-9B: RG-LRU recurrent blocks + local attention, 2:1
+pattern (r,r,a repeating). [arXiv:2402.19427; unverified]
+Sub-quadratic: recurrent state + bounded local window -> long_500k runs.
+"""
+from repro.config import ModelConfig, RGLRUConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="rglru",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    head_dim=256,
+    act="gelu",
+    rglru=RGLRUConfig(lru_width=4096, local_window=2048, pattern="rra"),
+    tie_embeddings=True,
+    subquadratic=True,
+)

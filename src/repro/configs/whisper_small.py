@@ -1,0 +1,22 @@
+"""Whisper-small backbone: enc-dec transformer; conv frontend is a STUB
+(input_specs provides precomputed frame embeddings). [arXiv:2212.04356]
+"""
+from repro.config import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    head_dim=64,
+    act="gelu",
+    rope_type="none",          # whisper uses learned/sinusoidal positions
+    modality="audio",
+    encdec=EncDecConfig(encoder_layers=12, decoder_layers=12,
+                        cross_kv_len=1500),
+    subquadratic=False,
+)

@@ -1,0 +1,3 @@
+"""MobileRAG core: EcoVector index, SCR, baselines, analytical models."""
+from repro.core.ecovector import EcoVector  # noqa: F401
+from repro.core.scr import SCRConfig, apply_scr, build_prompt  # noqa: F401

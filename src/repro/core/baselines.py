@@ -1,0 +1,400 @@
+"""The paper's seven retrieval baselines (§3.4, Tables 1-2, Figures 6-10):
+IVF, IVFPQ, HNSW, HNSWPQ, IVF-DISK, IVFPQ-DISK, IVF-HNSW.
+
+Common interface: build / search / insert / delete / ram_bytes, plus a
+`stats` counter of distance ops and disk traffic so the power model
+(§3.4.3) can be evaluated per search.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.hnsw import HNSW
+from repro.core.kmeans import kmeans
+from repro.core.pq import PQ
+
+
+@dataclass
+class SearchStats:
+    distance_ops: int = 0
+    disk_loads: int = 0
+    disk_bytes: int = 0
+    disk_time_s: float = 0.0
+
+    def reset(self):
+        self.distance_ops = 0
+        self.disk_loads = 0
+        self.disk_bytes = 0
+        self.disk_time_s = 0.0
+
+
+def _topk(ids, d2, k):
+    order = np.argsort(d2)[:k]
+    return ids[order].astype(np.int64), d2[order].astype(np.float32)
+
+
+class _ClusteredBase:
+    """Shared IVF machinery: k-means + inverted lists."""
+
+    def __init__(self, dim, n_clusters=64, seed=0):
+        self.dim = dim
+        self.n_clusters = n_clusters
+        self.seed = seed
+        self.centroids: Optional[np.ndarray] = None
+        self.lists: List[np.ndarray] = []      # ids per cluster
+        self.stats = SearchStats()
+
+    def _partition(self, vectors, ids):
+        self.centroids, assign = kmeans(vectors, min(self.n_clusters,
+                                                     len(vectors)),
+                                        seed=self.seed)
+        self.n_clusters = self.centroids.shape[0]
+        self.lists = [ids[assign == c] for c in range(self.n_clusters)]
+        return assign
+
+    def _probe(self, q, n_probe):
+        d2 = np.sum((self.centroids - q) ** 2, axis=1)
+        self.stats.distance_ops += self.n_clusters
+        return np.argsort(d2)[:n_probe]
+
+    def _nearest_cluster(self, vec):
+        return int(np.argmin(np.sum((self.centroids - vec) ** 2, axis=1)))
+
+
+class IVF(_ClusteredBase):
+    name = "IVF"
+    on_disk = False
+
+    def build(self, vectors, ids=None):
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.arange(len(vectors), dtype=np.int64) if ids is None else ids
+        self._partition(vectors, ids)
+        self.vecs: Dict[int, np.ndarray] = {int(i): v for i, v in
+                                            zip(ids, vectors)}
+        return self
+
+    def _cluster_vectors(self, c):
+        ids = self.lists[c]
+        return ids, np.stack([self.vecs[int(i)] for i in ids]) \
+            if len(ids) else (ids, np.zeros((0, self.dim), np.float32))
+
+    def search(self, q, k=10, n_probe=4, **kw):
+        q = np.asarray(q, np.float32)
+        probes = self._probe(q, n_probe)
+        all_ids, all_d = [], []
+        for c in probes:
+            ids = self.lists[c]
+            if not len(ids):
+                continue
+            vecs = np.stack([self.vecs[int(i)] for i in ids])
+            d2 = np.sum((vecs - q) ** 2, axis=1)
+            self.stats.distance_ops += len(ids)
+            all_ids.append(ids)
+            all_d.append(d2)
+        if not all_ids:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        return _topk(np.concatenate(all_ids), np.concatenate(all_d), k)
+
+    def insert(self, vid, vec):
+        c = self._nearest_cluster(vec)
+        self.lists[c] = np.append(self.lists[c], vid)
+        self.vecs[int(vid)] = np.asarray(vec, np.float32)
+
+    def delete(self, vid):
+        for c in range(self.n_clusters):
+            m = self.lists[c] != vid
+            if m.sum() != len(self.lists[c]):
+                self.lists[c] = self.lists[c][m]
+        self.vecs.pop(int(vid), None)
+
+    def ram_bytes(self):
+        n = len(self.vecs)
+        return (self.n_clusters * self.dim * 4 + n * 8 + n * self.dim * 4)
+
+
+class IVFPQ(IVF):
+    name = "IVFPQ"
+
+    def __init__(self, dim, n_clusters=64, m_pq=8, nbits=8, seed=0):
+        super().__init__(dim, n_clusters, seed)
+        self.pq = PQ(dim, m_pq, nbits)
+
+    def build(self, vectors, ids=None):
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.arange(len(vectors), dtype=np.int64) if ids is None else ids
+        self._partition(vectors, ids)
+        self.pq.train(vectors[np.random.default_rng(0).choice(
+            len(vectors), min(len(vectors), 4096), replace=False)])
+        self.codes: Dict[int, np.ndarray] = {
+            int(i): c for i, c in zip(ids, self.pq.encode(vectors))}
+        return self
+
+    def search(self, q, k=10, n_probe=4, **kw):
+        q = np.asarray(q, np.float32)
+        probes = self._probe(q, n_probe)
+        tabs = self.pq.adc_table(q)
+        all_ids, all_d = [], []
+        for c in probes:
+            ids = self.lists[c]
+            if not len(ids):
+                continue
+            codes = np.stack([self.codes[int(i)] for i in ids])
+            d = tabs[np.arange(self.pq.m)[None, :],
+                     codes.astype(np.int64)].sum(axis=1)
+            self.stats.distance_ops += len(ids)
+            all_ids.append(ids)
+            all_d.append(d)
+        if not all_ids:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        return _topk(np.concatenate(all_ids), np.concatenate(all_d), k)
+
+    def insert(self, vid, vec):
+        c = self._nearest_cluster(vec)
+        self.lists[c] = np.append(self.lists[c], vid)
+        self.codes[int(vid)] = self.pq.encode(vec[None])[0]
+
+    def delete(self, vid):
+        super().delete(vid)
+        self.codes.pop(int(vid), None)
+
+    def ram_bytes(self):
+        n = len(self.codes)
+        return (self.n_clusters * self.dim * 4 + n * 8
+                + n * self.pq.m * self.pq.nbits // 8
+                + self.pq.ksub * self.dim * 4)
+
+
+class HNSWIndex:
+    name = "HNSW"
+    on_disk = False
+
+    def __init__(self, dim, M=16, ef_construction=100, seed=0, **kw):
+        self.dim = dim
+        self.g = HNSW(dim, M=M, ef_construction=ef_construction, seed=seed)
+        self.stats = SearchStats()
+
+    def build(self, vectors, ids=None):
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.arange(len(vectors), dtype=np.int64) if ids is None else ids
+        for i, v in zip(ids, vectors):
+            self.g.insert(int(i), v)
+        return self
+
+    def search(self, q, k=10, ef_search=64, **kw):
+        ids, d = self.g.search(np.asarray(q, np.float32), k, ef_search)
+        self.stats.distance_ops += ef_search * self.g.M
+        return ids, d
+
+    def insert(self, vid, vec):
+        self.g.insert(int(vid), np.asarray(vec, np.float32))
+
+    def delete(self, vid):
+        self.g.delete(int(vid))
+
+    def ram_bytes(self):
+        return self.g.memory_bytes()
+
+
+class HNSWPQ(HNSWIndex):
+    name = "HNSWPQ"
+
+    def __init__(self, dim, M=16, ef_construction=100, m_pq=8, nbits=8,
+                 seed=0):
+        super().__init__(dim, M, ef_construction, seed)
+        self.pq = PQ(dim, m_pq, nbits)
+        self.codes: Dict[int, np.ndarray] = {}
+
+    def build(self, vectors, ids=None):
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.arange(len(vectors), dtype=np.int64) if ids is None else ids
+        self.pq.train(vectors[np.random.default_rng(0).choice(
+            len(vectors), min(len(vectors), 4096), replace=False)])
+        # graph built over reconstructed (quantised) vectors
+        recon = self.pq.decode(self.pq.encode(vectors))
+        for i, v, c in zip(ids, recon, self.pq.encode(vectors)):
+            self.g.insert(int(i), v)
+            self.codes[int(i)] = c
+        return self
+
+    def ram_bytes(self):
+        n = len(self.codes)
+        links = self.g.memory_bytes() - len(self.g) * self.dim * 4
+        return (n * self.pq.m * self.pq.nbits // 8 + links
+                + self.pq.ksub * self.dim * 4)
+
+
+class _DiskListMixin:
+    """Store inverted lists (vectors or codes) on real disk files."""
+
+    def _init_disk(self, tag):
+        self.storage_dir = tempfile.mkdtemp(prefix=f"{tag}_")
+        self.on_disk = True
+
+    def _lpath(self, c):
+        return os.path.join(self.storage_dir, f"list_{c:05d}.bin")
+
+    def _store_list(self, c, payload):
+        with open(self._lpath(c), "wb") as f:
+            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+
+    def _load_list(self, c):
+        t0 = time.perf_counter()
+        with open(self._lpath(c), "rb") as f:
+            data = f.read()
+        payload = pickle.loads(data)
+        self.stats.disk_loads += 1
+        self.stats.disk_bytes += len(data)
+        self.stats.disk_time_s += time.perf_counter() - t0
+        return payload
+
+
+class IVFDisk(_ClusteredBase, _DiskListMixin):
+    name = "IVF-DISK"
+
+    def __init__(self, dim, n_clusters=64, seed=0):
+        super().__init__(dim, n_clusters, seed)
+        self._init_disk("ivfdisk")
+
+    def build(self, vectors, ids=None):
+        vectors = np.asarray(vectors, np.float32)
+        ids = np.arange(len(vectors), dtype=np.int64) if ids is None else ids
+        assign = self._partition(vectors, ids)
+        for c in range(self.n_clusters):
+            m = assign == c
+            self._store_list(c, (ids[m], vectors[m]))
+        self.n_total = len(vectors)
+        return self
+
+    def search(self, q, k=10, n_probe=4, **kw):
+        q = np.asarray(q, np.float32)
+        probes = self._probe(q, n_probe)
+        all_ids, all_d = [], []
+        for c in probes:
+            lids, lvecs = self._load_list(int(c))
+            if not len(lids):
+                continue
+            d2 = np.sum((lvecs - q) ** 2, axis=1)
+            self.stats.distance_ops += len(lids)
+            all_ids.append(lids)
+            all_d.append(d2)
+        if not all_ids:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        return _topk(np.concatenate(all_ids), np.concatenate(all_d), k)
+
+    def insert(self, vid, vec):
+        c = self._nearest_cluster(vec)
+        lids, lvecs = self._load_list(c)
+        self._store_list(c, (np.append(lids, vid),
+                             np.vstack([lvecs, vec[None]])))
+        self.lists[c] = np.append(self.lists[c], vid)
+        self.n_total += 1
+
+    def delete(self, vid):
+        for c in range(self.n_clusters):
+            if vid in self.lists[c]:
+                lids, lvecs = self._load_list(c)
+                m = lids != vid
+                self._store_list(c, (lids[m], lvecs[m]))
+                self.lists[c] = self.lists[c][m]
+                self.n_total -= 1
+                return
+
+    def ram_bytes(self):
+        # centroids + ids + one loaded list (Table 1 IVF-DISK row)
+        avg = int(np.mean([len(l) for l in self.lists])) if self.lists else 0
+        return (self.n_clusters * self.dim * 4 + self.n_total * 8
+                + avg * self.dim * 4)
+
+
+class IVFPQDisk(IVFPQ, _DiskListMixin):
+    name = "IVFPQ-DISK"
+
+    def __init__(self, dim, n_clusters=64, m_pq=8, nbits=8, seed=0):
+        super().__init__(dim, n_clusters, m_pq, nbits, seed)
+        self._init_disk("ivfpqdisk")
+
+    def build(self, vectors, ids=None):
+        super().build(vectors, ids)
+        for c in range(self.n_clusters):
+            lids = self.lists[c]
+            codes = (np.stack([self.codes[int(i)] for i in lids])
+                     if len(lids) else np.zeros((0, self.pq.m), np.uint8))
+            self._store_list(c, (lids, codes))
+        self.codes = {}  # codes live on disk now
+        return self
+
+    def search(self, q, k=10, n_probe=4, **kw):
+        q = np.asarray(q, np.float32)
+        probes = self._probe(q, n_probe)
+        tabs = self.pq.adc_table(q)
+        all_ids, all_d = [], []
+        for c in probes:
+            lids, codes = self._load_list(int(c))
+            if not len(lids):
+                continue
+            d = tabs[np.arange(self.pq.m)[None, :],
+                     codes.astype(np.int64)].sum(axis=1)
+            self.stats.distance_ops += len(lids)
+            all_ids.append(lids)
+            all_d.append(d)
+        if not all_ids:
+            return np.zeros(0, np.int64), np.zeros(0, np.float32)
+        return _topk(np.concatenate(all_ids), np.concatenate(all_d), k)
+
+    def ram_bytes(self):
+        n = sum(len(l) for l in self.lists)
+        avg = int(np.mean([len(l) for l in self.lists])) if self.lists else 0
+        return (self.n_clusters * self.dim * 4 + n * 8
+                + avg * self.pq.m * self.pq.nbits // 8
+                + self.pq.ksub * self.dim * 4)
+
+
+class IVFHNSW(IVFDisk):
+    """Centroid HNSW + flat inverted lists on disk."""
+    name = "IVF-HNSW"
+
+    def build(self, vectors, ids=None):
+        super().build(vectors, ids)
+        self.centroid_graph = HNSW(self.dim, M=self.M_cent,
+                                   ef_construction=64, seed=self.seed,
+                                   max_elements=self.n_clusters)
+        for c in range(self.n_clusters):
+            self.centroid_graph.insert(c, self.centroids[c])
+        return self
+
+    def __init__(self, dim, n_clusters=64, M_cent=16, seed=0):
+        super().__init__(dim, n_clusters, seed)
+        self.M_cent = M_cent
+
+    def _probe(self, q, n_probe):
+        cids, _ = self.centroid_graph.search(q, n_probe,
+                                             ef_search=max(16, 2 * n_probe))
+        self.stats.distance_ops += 16 * self.M_cent
+        return cids
+
+    def ram_bytes(self):
+        avg = int(np.mean([len(l) for l in self.lists])) if self.lists else 0
+        return (self.centroid_graph.memory_bytes() + self.n_total * 8
+                + avg * self.dim * 4)
+
+
+def make_index(name: str, dim: int, **kw):
+    table = {
+        "IVF": IVF, "IVFPQ": IVFPQ, "HNSW": HNSWIndex, "HNSWPQ": HNSWPQ,
+        "IVF-DISK": IVFDisk, "IVFPQ-DISK": IVFPQDisk, "IVF-HNSW": IVFHNSW,
+    }
+    if name == "EcoVector":
+        from repro.core.ecovector import EcoVector
+        return EcoVector(dim, **kw)
+    return table[name](dim, **kw)
+
+
+ALL_BASELINES = ["IVF", "IVFPQ", "HNSW", "HNSWPQ", "IVF-DISK", "IVFPQ-DISK",
+                 "IVF-HNSW", "EcoVector"]

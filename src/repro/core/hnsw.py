@@ -1,0 +1,290 @@
+"""Faithful HNSW with the paper's update algorithms.
+
+Insertion follows Algorithm 1 (greedy descent -> expandCandidates ->
+robustPrune -> connectTwoWay); deletion follows Algorithm 2 (entry-point /
+max-level maintenance -> recNeighbors with robust pruning -> physical
+removal). This is the host-side index-maintenance structure: on a real TPU
+deployment it lives on the host CPUs that own the index, and devices consume
+immutable snapshots (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+
+class HNSW:
+    def __init__(self, dim: int, M: int = 16, ef_construction: int = 100,
+                 alpha: float = 1.0, seed: int = 0, max_elements: int = 1024):
+        self.dim = dim
+        self.M = M
+        self.M0 = 2 * M
+        self.efc = ef_construction
+        self.alpha = alpha
+        self.rng = np.random.default_rng(seed)
+        self.ml = 1.0 / math.log(M)
+        self.vectors = np.zeros((max_elements, dim), np.float32)
+        self.levels: Dict[int, int] = {}
+        # neighbors[level][node] -> list of node ids
+        self.neighbors: List[Dict[int, List[int]]] = [dict()]
+        self.is_deleted: Dict[int, bool] = {}
+        self.entry_point = -1
+        self.max_level = 0
+        self._count = 0
+        self.n_dist = 0  # distance-computation counter (power model)
+
+    # ------------------------------------------------------------ utils
+
+    def __len__(self):
+        return sum(1 for v in self.is_deleted.values() if not v)
+
+    def _dist(self, vid: int, vec: np.ndarray) -> float:
+        self.n_dist += 1
+        d = self.vectors[vid] - vec
+        return float(d @ d)
+
+    def _dists(self, ids: List[int], vec: np.ndarray) -> np.ndarray:
+        self.n_dist += len(ids)
+        arr = self.vectors[np.asarray(ids, np.int64)]
+        diff = arr - vec
+        return np.einsum("nd,nd->n", diff, diff)
+
+    def _ensure_capacity(self, vid: int):
+        if vid >= self.vectors.shape[0]:
+            new = np.zeros((max(vid + 1, 2 * self.vectors.shape[0]),
+                            self.dim), np.float32)
+            new[: self.vectors.shape[0]] = self.vectors
+            self.vectors = new
+
+    def _nbrs(self, vid: int, level: int) -> List[int]:
+        if level >= len(self.neighbors):
+            return []
+        return self.neighbors[level].get(vid, [])
+
+    def reconstruct(self, vid: int) -> np.ndarray:
+        return self.vectors[vid]
+
+    def get_random_level(self) -> int:
+        return int(-math.log(max(self.rng.random(), 1e-12)) * self.ml)
+
+    # ----------------------------------------------------------- search
+
+    def _greedy_descend(self, vec, cur: int, level: int) -> int:
+        cur_d = self._dist(cur, vec)
+        while True:
+            nbrs = [nb for nb in self._nbrs(cur, level)
+                    if nb >= 0 and not self.is_deleted.get(nb, False)]
+            if not nbrs:
+                return cur
+            ds = self._dists(nbrs, vec)                 # batched
+            j = int(np.argmin(ds))
+            if ds[j] >= cur_d:
+                return cur
+            cur, cur_d = nbrs[j], float(ds[j])
+
+    def _search_layer(self, vec, entries: List[int], ef: int,
+                      level: int) -> List[int]:
+        """Beam search on one layer (batched neighbor distances)."""
+        import heapq
+        visited: Set[int] = set(entries)
+        cand = [(self._dist(e, vec), e) for e in entries]
+        heapq.heapify(cand)
+        best = sorted([(-d, e) for d, e in cand])  # max-heap of results
+        heapq.heapify(best)
+        while cand:
+            d, e = heapq.heappop(cand)
+            if best and d > -best[0][0] and len(best) >= ef:
+                break
+            fresh = [nb for nb in self._nbrs(e, level)
+                     if nb >= 0 and nb not in visited]
+            if not fresh:
+                continue
+            visited.update(fresh)
+            ds = self._dists(fresh, vec)               # one numpy call
+            for nb, nd in zip(fresh, ds):
+                nd = float(nd)
+                if len(best) < ef or nd < -best[0][0]:
+                    heapq.heappush(cand, (nd, nb))
+                    heapq.heappush(best, (-nd, nb))
+                    if len(best) > ef:
+                        heapq.heappop(best)
+        out = sorted([(-d, e) for d, e in best])
+        return [e for _, e in out]
+
+    def expand_candidates(self, cur: int, vec, level: int,
+                          ef: int) -> List[int]:
+        return self._search_layer(vec, [cur], ef, level)
+
+    def robust_prune(self, cand: List[int], vec, max_m: int) -> List[int]:
+        """Select up to max_m diverse neighbors (alpha-pruning heuristic)."""
+        cand = [c for c in cand if not self.is_deleted.get(c, False)]
+        if not cand:
+            return []
+        dq = self._dists(cand, vec)
+        order = np.argsort(dq)
+        ordered = [cand[i] for i in order]
+        dq_ord = dq[order]
+        chosen: List[int] = []
+        for c, dqc in zip(ordered, dq_ord):
+            if len(chosen) >= max_m:
+                break
+            if chosen:
+                diffs = self.vectors[np.asarray(chosen)] - self.vectors[c]
+                dd = np.einsum("nd,nd->n", diffs, diffs)
+                if np.any(dd * self.alpha < dqc):
+                    continue
+            chosen.append(c)
+        # backfill with nearest if diversity pruned too much
+        for c in ordered:
+            if len(chosen) >= max_m:
+                break
+            if c not in chosen:
+                chosen.append(c)
+        return chosen
+
+    def _connect_two_way(self, vid: int, fnbr: List[int], level: int):
+        while level >= len(self.neighbors):
+            self.neighbors.append(dict())
+        layer = self.neighbors[level]
+        layer[vid] = list(fnbr)
+        cap = self.M0 if level == 0 else self.M
+        for nb in fnbr:
+            lst = layer.setdefault(nb, [])
+            if vid not in lst:
+                lst.append(vid)
+            if len(lst) > cap:
+                layer[nb] = self.robust_prune(lst, self.vectors[nb], cap)
+
+    # -------------------------------------------------- Algorithm 1: insert
+
+    def insert(self, vid: int, vec: np.ndarray, level: Optional[int] = None):
+        self._ensure_capacity(vid)
+        self.vectors[vid] = vec
+        lvl = self.levels.get(vid, 0) if level is None else level
+        if lvl <= 0:
+            lvl = self.get_random_level()
+        self.levels[vid] = lvl
+        self.is_deleted[vid] = False
+        self._count += 1
+
+        if self.entry_point == -1:
+            self.entry_point = vid
+            self.max_level = lvl
+            for l in range(lvl + 1):
+                while l >= len(self.neighbors):
+                    self.neighbors.append(dict())
+                self.neighbors[l][vid] = []
+            return
+
+        cur = self.entry_point
+        for l in range(self.max_level, lvl, -1):
+            cur = self._greedy_descend(vec, cur, l)
+        for l in range(min(lvl, self.max_level), -1, -1):
+            cand = self.expand_candidates(cur, vec, l, self.efc)
+            max_m = self.M0 if l == 0 else self.M
+            fnbr = self.robust_prune(cand, vec, max_m)
+            self._connect_two_way(vid, fnbr, l)
+            if cand:
+                cur = cand[0]
+        for l in range(self.max_level + 1, lvl + 1):
+            while l >= len(self.neighbors):
+                self.neighbors.append(dict())
+            self.neighbors[l][vid] = []
+        if lvl > self.max_level:
+            self.max_level = lvl
+            self.entry_point = vid
+
+    # ------------------------------------------------- Algorithm 2: delete
+
+    def _rec_neighbors(self, vid: int, old_neighbors: List[int], level: int):
+        """Reconnect the ex-neighbors of a deleted node on one layer."""
+        layer = self.neighbors[level]
+        alive = [n for n in old_neighbors
+                 if not self.is_deleted.get(n, False) and n != vid]
+        for n in alive:
+            lst = [x for x in layer.get(n, []) if x != vid and
+                   not self.is_deleted.get(x, False)]
+            # candidate set: existing neighbors + the deleted node's other
+            # neighbors (restores connectivity through the hole)
+            cand = set(lst)
+            cand.update(a for a in alive if a != n)
+            cap = self.M0 if level == 0 else self.M
+            layer[n] = self.robust_prune(list(cand), self.vectors[n], cap)
+
+    def _check_and_decrease_max_level(self):
+        while self.max_level > 0:
+            layer = self.neighbors[self.max_level]
+            occupied = [v for v, l in self.levels.items()
+                        if l >= self.max_level and
+                        not self.is_deleted.get(v, False)]
+            if occupied:
+                break
+            self.max_level -= 1
+        # keep entry point consistent
+        if self.entry_point != -1 and \
+                self.levels.get(self.entry_point, 0) < self.max_level:
+            for v, l in self.levels.items():
+                if l >= self.max_level and not self.is_deleted.get(v, False):
+                    self.entry_point = v
+                    break
+
+    def delete(self, vid: int):
+        if self.is_deleted.get(vid, True):
+            return
+        if vid == self.entry_point:
+            new_ep, new_max = -1, -1
+            for v, l in sorted(self.levels.items(), key=lambda kv: -kv[1]):
+                if v != vid and not self.is_deleted.get(v, False):
+                    new_ep, new_max = v, l
+                    break
+            if new_ep == -1:
+                self.entry_point = -1
+                self.max_level = 0
+            else:
+                self.entry_point = new_ep
+                self.max_level = new_max
+        elif self.levels.get(vid, 0) == self.max_level:
+            pass  # handled below by _check_and_decrease_max_level
+        self.is_deleted[vid] = True
+        for l in range(len(self.neighbors)):
+            layer = self.neighbors[l]
+            old = layer.pop(vid, [])
+            # robustPrune during connectTwoWay can leave asymmetric edges:
+            # also collect nodes that still point at vid
+            incoming = [n for n, lst in layer.items() if vid in lst]
+            for n in incoming:
+                layer[n] = [x for x in layer[n] if x != vid]
+            affected = list(dict.fromkeys(list(old) + incoming))
+            if affected:
+                self._rec_neighbors(vid, affected, l)
+        self._check_and_decrease_max_level()
+
+    # ----------------------------------------------------------- queries
+
+    def search(self, vec: np.ndarray, k: int, ef_search: int = 64):
+        if self.entry_point == -1:
+            return np.zeros((0,), np.int64), np.zeros((0,), np.float32)
+        cur = self.entry_point
+        for l in range(self.max_level, 0, -1):
+            cur = self._greedy_descend(vec, cur, l)
+        cand = self._search_layer(vec, [cur], max(ef_search, k), 0)
+        cand = [c for c in cand if not self.is_deleted.get(c, False)][:k]
+        return (np.asarray(cand, np.int64),
+                self._dists(cand, vec) if cand else np.zeros((0,), np.float32))
+
+    # --------------------------------------------------------- accounting
+
+    def memory_bytes(self) -> int:
+        """Vectors + neighbor links (paper Table 1 convention)."""
+        n_links = sum(len(lst) for layer in self.neighbors
+                      for lst in layer.values())
+        n = len(self)
+        return n * self.dim * 4 + n_links * 4
+
+    def graph_arrays(self):
+        """Export ids/vectors for device-side dense scans."""
+        ids = np.asarray([v for v, d in self.is_deleted.items() if not d],
+                         np.int64)
+        return ids, self.vectors[ids]

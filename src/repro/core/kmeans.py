@@ -1,0 +1,56 @@
+"""Batched k-means for cluster partitioning (EcoVector §3.1.1).
+
+Assignment runs on the device via the `kmeans_assign` Pallas kernel (MXU
+distance matmuls); the update step is a segment-sum. k-means++-style
+seeding by distance-weighted sampling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def kmeans_pp_init(x: np.ndarray, k: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    n = x.shape[0]
+    centroids = [x[rng.integers(n)]]
+    d2 = None
+    for _ in range(1, k):
+        c = np.asarray(centroids[-1])
+        nd = np.sum((x - c) ** 2, axis=1)
+        d2 = nd if d2 is None else np.minimum(d2, nd)
+        p = d2 / max(d2.sum(), 1e-12)
+        centroids.append(x[rng.choice(n, p=p)])
+    return np.stack(centroids).astype(np.float32)
+
+
+def kmeans(x, k: int, iters: int = 10, seed: int = 0, use_pallas: bool = True):
+    """x: [N, d] -> (centroids [k, d], assign [N] i32)."""
+    x = np.asarray(x, np.float32)
+    n, d = x.shape
+    k = min(k, n)
+    cent = kmeans_pp_init(x, k, seed)
+    xj = jnp.asarray(x)
+    for _ in range(iters):
+        assign, _ = ops.kmeans_assign(xj, jnp.asarray(cent),
+                                      use_pallas=use_pallas)
+        sums = jax.ops.segment_sum(xj, assign, num_segments=k)
+        cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
+                                  num_segments=k)
+        new = sums / jnp.maximum(cnt[:, None], 1.0)
+        # re-seed empty clusters at the farthest points
+        empty = cnt == 0
+        if bool(jnp.any(empty)):
+            _, dist = ops.kmeans_assign(xj, new, use_pallas=use_pallas)
+            far = np.argsort(-np.asarray(dist))
+            new_np = np.asarray(new)
+            eidx = np.where(np.asarray(empty))[0]
+            new_np[eidx] = x[far[: len(eidx)]]
+            new = jnp.asarray(new_np)
+        cent = np.asarray(new)
+    assign, _ = ops.kmeans_assign(xj, jnp.asarray(cent),
+                                  use_pallas=use_pallas)
+    return cent.astype(np.float32), np.asarray(assign)

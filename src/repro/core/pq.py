@@ -1,0 +1,66 @@
+"""Product quantisation: codebook training, encoding, ADC tables.
+
+Used by the IVFPQ / HNSWPQ / IVFPQ-DISK baselines the paper compares
+against. ADC scoring on-device goes through the `pq_adc` kernel (one-hot
+MXU matmul — see kernels/pq_adc.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.kmeans import kmeans
+
+
+class PQ:
+    def __init__(self, dim: int, m: int = 8, nbits: int = 8):
+        assert dim % m == 0, "dim must divide into m sub-vectors"
+        self.dim = dim
+        self.m = m
+        self.nbits = nbits
+        self.ksub = 2 ** nbits
+        self.dsub = dim // m
+        self.codebooks = np.zeros((m, self.ksub, self.dsub), np.float32)
+
+    def train(self, x: np.ndarray, iters: int = 8, seed: int = 0):
+        x = np.asarray(x, np.float32)
+        for j in range(self.m):
+            sub = x[:, j * self.dsub:(j + 1) * self.dsub]
+            cent, _ = kmeans(sub, min(self.ksub, sub.shape[0]), iters,
+                             seed + j, use_pallas=False)
+            self.codebooks[j, : cent.shape[0]] = cent
+        return self
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        codes = np.zeros((x.shape[0], self.m), np.uint8)
+        for j in range(self.m):
+            sub = x[:, j * self.dsub:(j + 1) * self.dsub]
+            d = (np.sum(sub ** 2, 1)[:, None]
+                 - 2 * sub @ self.codebooks[j].T
+                 + np.sum(self.codebooks[j] ** 2, 1)[None, :])
+            codes[:, j] = np.argmin(d, axis=1)
+        return codes
+
+    def decode(self, codes: np.ndarray) -> np.ndarray:
+        out = np.zeros((codes.shape[0], self.dim), np.float32)
+        for j in range(self.m):
+            out[:, j * self.dsub:(j + 1) * self.dsub] = \
+                self.codebooks[j][codes[:, j].astype(np.int64)]
+        return out
+
+    def adc_table(self, q: np.ndarray) -> np.ndarray:
+        """Distance LUT [m, ksub] for one query (squared L2 per subspace)."""
+        tabs = np.zeros((self.m, self.ksub), np.float32)
+        for j in range(self.m):
+            sub = q[j * self.dsub:(j + 1) * self.dsub]
+            diff = self.codebooks[j] - sub
+            tabs[j] = np.einsum("kd,kd->k", diff, diff)
+        return tabs
+
+    def adc_scores(self, q: np.ndarray, codes: np.ndarray) -> np.ndarray:
+        tabs = self.adc_table(q)
+        return tabs[np.arange(self.m)[None, :],
+                    codes.astype(np.int64)].sum(axis=1)
+
+    def memory_bytes(self, n: int) -> int:
+        return n * self.m * self.nbits // 8 + self.ksub * self.dim * 4

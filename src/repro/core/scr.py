@@ -1,0 +1,123 @@
+"""Selective Content Reduction (paper §4).
+
+Three steps, post-retrieval:
+  1. Similarity Computation — split each retrieved document into sentences,
+     form overlapping sliding windows (`sliding_window_size`, step
+     `sliding_window_size - overlap_size`), embed, score against the query
+     (device path: `scr_score` kernel).
+  2. Selecting & Merging — top-1 window per document, extended by
+     `context_extension_size` sentences each side, merged with source
+     attribution.
+  3. Reordering — documents ordered by their best window score (the
+     implicit re-ranker that replaces Advanced-RAG's model).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import ops
+
+_SENT_RE = re.compile(r"(?<=[.!?])\s+")
+
+
+def split_sentences(text: str) -> List[str]:
+    parts = [s.strip() for s in _SENT_RE.split(text.strip()) if s.strip()]
+    return parts or ([text.strip()] if text.strip() else [])
+
+
+def sliding_windows(sentences: Sequence[str], window: int,
+                    overlap: int) -> List[Tuple[int, int]]:
+    """Return [start, end) sentence spans. step = window - overlap >= 1."""
+    n = len(sentences)
+    if n == 0:
+        return []
+    window = max(1, min(window, n))
+    step = max(1, window - overlap)
+    spans = []
+    i = 0
+    while True:
+        spans.append((i, min(i + window, n)))
+        if i + window >= n:
+            break
+        i += step
+    return spans
+
+
+@dataclass
+class SCRConfig:
+    sliding_window_size: int = 3
+    overlap_size: int = 2
+    context_extension_size: int = 1
+    use_pallas: bool = True
+
+
+@dataclass
+class SCRResult:
+    texts: List[str]             # condensed docs, reordered
+    order: List[int]             # original doc index per output slot
+    scores: List[float]          # best-window score per output doc
+    spans: List[Tuple[int, int]]  # chosen extended span per output doc
+    tokens_before: int
+    tokens_after: int
+
+
+def _count_tokens(text: str) -> int:
+    return len(text.split())
+
+
+def apply_scr(query: str, docs: Sequence[str], embed: Callable,
+              cfg: SCRConfig = SCRConfig()) -> SCRResult:
+    """embed: list[str] -> np.ndarray [n, d] (query embedded with the same
+    model, paper §2.3)."""
+    qv = np.asarray(embed([query]))[0]
+    d = qv.shape[0]
+    doc_sents = [split_sentences(t) for t in docs]
+    doc_spans = [sliding_windows(s, cfg.sliding_window_size, cfg.overlap_size)
+                 for s in doc_sents]
+    # embed all windows of all docs in one batch
+    win_texts, owners = [], []
+    for di, (sents, spans) in enumerate(zip(doc_sents, doc_spans)):
+        for (a, b) in spans:
+            win_texts.append(" ".join(sents[a:b]))
+            owners.append(di)
+    if not win_texts:
+        return SCRResult(list(docs), list(range(len(docs))),
+                         [0.0] * len(docs), [(0, 0)] * len(docs), 0, 0)
+    wv = np.asarray(embed(win_texts), np.float32)      # [NW, d]
+    # device scoring: one batch row (padded) per query — here B=1
+    scores = np.asarray(ops.scr_score(
+        wv[None], qv[None].astype(np.float32), use_pallas=cfg.use_pallas))[0]
+
+    out_texts, out_scores, out_spans = [], [], []
+    for di, (sents, spans) in enumerate(zip(doc_sents, doc_spans)):
+        idx = [i for i, o in enumerate(owners) if o == di]
+        if not idx:
+            out_texts.append(docs[di])
+            out_scores.append(-np.inf)
+            out_spans.append((0, len(sents)))
+            continue
+        best_local = max(idx, key=lambda i: scores[i])
+        a, b = spans[idx.index(best_local)]
+        # context extension both sides
+        a2 = max(0, a - cfg.context_extension_size)
+        b2 = min(len(sents), b + cfg.context_extension_size)
+        out_texts.append(" ".join(sents[a2:b2]))
+        out_scores.append(float(scores[best_local]))
+        out_spans.append((a2, b2))
+
+    order = sorted(range(len(docs)), key=lambda i: -out_scores[i])
+    before = sum(_count_tokens(t) for t in docs)
+    after = sum(_count_tokens(out_texts[i]) for i in order)
+    return SCRResult([out_texts[i] for i in order], order,
+                     [out_scores[i] for i in order],
+                     [out_spans[i] for i in order], before, after)
+
+
+def build_prompt(query: str, result: SCRResult) -> str:
+    ctx = "\n\n".join(f"[Doc {result.order[i] + 1}] {t}"
+                      for i, t in enumerate(result.texts))
+    return f"Context:\n{ctx}\n\nQuestion: {query}\nAnswer:"

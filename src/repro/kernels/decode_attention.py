@@ -1,0 +1,90 @@
+"""Flash-decode GQA attention kernel: one query position against a long KV
+cache, online softmax over KV tiles in VMEM scratch. The serving hot spot
+for decode_32k / long_500k cells."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            ts: int, nsteps: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0]                                   # [Hg, dh]
+    k = k_ref[0, :, 0, :]                             # [TS, dh]
+    v = v_ref[0, :, 0, :]
+    kv_len = len_ref[b]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = s_idx * ts + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG)               # [Hg, TS]
+    m_prev, l_prev = m_ref[...], l_ref[...]           # [Hg, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                            # [Hg, TS]
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == nsteps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("ts", "interpret"))
+def decode_attention(q, k, v, kv_len, ts: int = 512, interpret: bool = True):
+    """q: [B, H, dh]; k, v: [B, S, G, dh] (H % G == 0); kv_len: i32 scalar.
+    Returns [B, H, dh]."""
+    B, H, dh = q.shape
+    S, G = k.shape[1], k.shape[2]
+    Hg = H // G
+    qg = q.reshape(B, G, Hg, dh)
+    pad = (-S) % ts
+    if pad:
+        kz = jnp.zeros((B, pad, G, dh), k.dtype)
+        k = jnp.concatenate([k, kz], axis=1)
+        v = jnp.concatenate([v, kz], axis=1)
+    Sp = k.shape[1]
+    nsteps = Sp // ts
+    scale = 1.0 / (dh ** 0.5)
+    lens = jnp.full((B,), kv_len, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                       # lens
+        grid=(B, G, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, dh), lambda b, g, s, ln: (b, g, 0, 0)),
+            pl.BlockSpec((1, ts, 1, dh), lambda b, g, s, ln: (b, s, g, 0)),
+            pl.BlockSpec((1, ts, 1, dh), lambda b, g, s, ln: (b, s, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, dh), lambda b, g, s, ln: (b, g, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((Hg, 1), jnp.float32),
+                        pltpu.VMEM((Hg, 1), jnp.float32),
+                        pltpu.VMEM((Hg, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, ts=ts, nsteps=nsteps, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, dh), q.dtype),
+        interpret=interpret,
+    )(lens, qg, k, v)
+    return out.reshape(B, H, dh)

@@ -1,0 +1,103 @@
+"""EcoVector inverted-list scan kernel (the paper's §3.2 on TPU).
+
+The mobile algorithm loads one inverted list at a time from flash into RAM
+and searches its small graph. The TPU analogue: cluster blocks live in HBM
+([NC, CAP, d], one block per cluster); the *scalar-prefetched* probe list
+drives the BlockSpec index_map so only the probed clusters' blocks are
+DMA'd into VMEM; distances for the whole (padded) cluster are one MXU
+matmul; a running top-k merge lives in VMEM scratch across grid steps.
+
+Grid: (B, P) — P probes per query, sequential on a TPU core, so the output
+block for query b is revisited P times (init at p == 0, merge otherwise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = 3.4e38  # "+infinity" sentinel (plain float: jnp consts can't be captured)
+
+
+def _merge_topk(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
+    """Merge candidate (dists [1, M], ids [1, M]) into sorted refs [1, K]."""
+    cur_d = out_d_ref[...]
+    cur_i = out_i_ref[...]
+    all_d = jnp.concatenate([cur_d, cand_d], axis=1)   # [1, K+M]
+    all_i = jnp.concatenate([cur_i, cand_i], axis=1)
+
+    def body(j, carry):
+        ad, ai, od, oi = carry
+        pos = jnp.argmin(ad[0])
+        od = jax.lax.dynamic_update_slice(od, ad[0, pos][None, None], (0, j))
+        oi = jax.lax.dynamic_update_slice(oi, ai[0, pos][None, None], (0, j))
+        ad = ad.at[0, pos].set(NEG)
+        return ad, ai, od, oi
+
+    od = jnp.zeros((1, k), jnp.float32)
+    oi = jnp.zeros((1, k), jnp.int32)
+    _, _, od, oi = jax.lax.fori_loop(0, k, body, (all_d, all_i, od, oi))
+    out_d_ref[...] = od
+    out_i_ref[...] = oi
+
+
+def _kernel(probe_ref, lens_ref, q_ref, data_ref, out_d_ref, out_i_ref, *,
+            k: int, cap: int):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        out_d_ref[...] = jnp.full(out_d_ref.shape, NEG, jnp.float32)
+        out_i_ref[...] = jnp.full(out_i_ref.shape, -1, jnp.int32)
+
+    b = pl.program_id(0)
+    cid = probe_ref[b, p]
+    q = q_ref[...]                                  # [1, d]
+    x = data_ref[0]                                 # [CAP, d]
+    # L2 distance via matmul on the MXU:  ||x||^2 - 2 x.q  (+||q||^2 const)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)      # [CAP, 1]
+    xq = jax.lax.dot_general(x, q, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [CAP, 1]
+    dist = (xx - 2.0 * xq).T                        # [1, CAP]
+    qq = jnp.sum(q * q)
+    dist = dist + qq
+    slot = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+    valid = slot < lens_ref[cid]
+    dist = jnp.where(valid, dist, NEG)
+    gids = jnp.where(valid, cid * cap + slot, -1)
+    _merge_topk(dist, gids, out_d_ref, out_i_ref, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True):
+    """q: [B, d] f32; data: [NC, CAP, d] f32; lens: [NC] i32;
+    probe_ids: [B, P] i32. Returns (dists [B, k], ids [B, k])."""
+    B, d = q.shape
+    NC, CAP, _ = data.shape
+    P = probe_ids.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # probe_ids, lens
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, p, pr, ln: (b, 0)),
+            pl.BlockSpec((1, CAP, d), lambda b, p, pr, ln: (pr[b, p], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, p, pr, ln: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, p, pr, ln: (b, 0)),
+        ],
+    )
+    kern = pl.pallas_call(
+        functools.partial(_kernel, k=k, cap=CAP),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, k), jnp.float32),
+                   jax.ShapeDtypeStruct((B, k), jnp.int32)],
+        interpret=interpret,
+    )
+    out_d, out_i = kern(probe_ids.astype(jnp.int32), lens.astype(jnp.int32),
+                        q.astype(jnp.float32), data.astype(jnp.float32))
+    return out_d, out_i

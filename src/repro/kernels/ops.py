@@ -1,0 +1,57 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU (or interpret=True on CPU
+for validation), pure-jnp reference otherwise. `use_pallas` is the build
+switch; interpret mode is selected automatically off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.ecoscan import ecoscan as _ecoscan
+from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
+from repro.kernels.scr_score import scr_score as _scr_score
+from repro.kernels.pq_adc import pq_adc as _pq_adc
+from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ecoscan(q, data, lens, probe_ids, k=10, use_pallas=True):
+    if use_pallas:
+        return _ecoscan(q, data, lens, probe_ids, k=k,
+                        interpret=not _on_tpu())
+    return ref.ecoscan(q, data, lens, probe_ids, k)
+
+
+def kmeans_assign(x, centroids, use_pallas=True):
+    if use_pallas:
+        return _kmeans_assign(x, centroids, interpret=not _on_tpu())
+    return ref.kmeans_assign(x, centroids)
+
+
+def scr_score(windows, q, use_pallas=True):
+    if use_pallas:
+        return _scr_score(windows, q, interpret=not _on_tpu())
+    return ref.scr_score(windows, q)
+
+
+def pq_adc(lut, codes, use_pallas=True):
+    if use_pallas:
+        return _pq_adc(lut, codes, interpret=not _on_tpu())
+    return ref.pq_adc(lut, codes)
+
+
+def decode_attention(q, k, v, kv_len, use_pallas=True):
+    if use_pallas:
+        return _decode_attn(q, k, v, kv_len, interpret=not _on_tpu())
+    return ref.decode_attention(q, k, v, kv_len)
+
+
+def flash_prefill(q, k, v, causal=True, window=None, use_pallas=True):
+    if use_pallas:
+        return _flash_prefill(q, k, v, causal=causal, window=window,
+                              interpret=not _on_tpu())
+    return ref.flash_prefill(q, k, v, causal=causal, window=window)

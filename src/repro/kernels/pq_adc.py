@@ -1,0 +1,48 @@
+"""PQ asymmetric-distance (ADC) kernel for the IVFPQ/HNSWPQ baselines.
+
+GPU/CPU ADC is a gather per sub-quantizer; gathers are poison for the TPU
+vector unit. TPU adaptation: one-hot(codes) @ LUT — the lookup becomes an
+MXU matmul (codes one-hot [TN, 256] x LUT row [256]) per sub-quantizer,
+accumulated in f32. See DESIGN.md §2 (hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(c_ref, l_ref, o_ref, *, M: int):
+    codes = c_ref[...]                                 # [TN, M] i32
+    lut = l_ref[0]                                     # [M, 256]
+    tn = codes.shape[0]
+    acc = jnp.zeros((tn, 1), jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tn, 256), 1)
+    for m in range(M):                                 # static unroll
+        oh = (codes[:, m][:, None] == iota).astype(jnp.float32)  # [TN,256]
+        acc += jax.lax.dot_general(
+            oh, lut[m][None, :], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # [TN, 1]
+    o_ref[...] = acc.T                                 # [1, TN]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def pq_adc(lut, codes, tile: int = 512, interpret: bool = True):
+    """lut: [B, M, 256] f32; codes: [N, M] uint8 -> scores [B, N]."""
+    B, M, _ = lut.shape
+    N = codes.shape[0]
+    pad = (-N) % tile
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad), (0, 0)))
+    grid = (B, cp.shape[0] // tile)
+    out = pl.pallas_call(
+        functools.partial(_kernel, M=M),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, M), lambda b, i: (i, 0)),
+                  pl.BlockSpec((1, M, 256), lambda b, i: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, cp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(cp, lut.astype(jnp.float32))
+    return out[:, :N]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ecoscan(q, data, lens, probe_ids, k):
+    """EcoVector inverted-list scan reference.
+
+    q: [B, d]; data: [NC, CAP, d]; lens: [NC] valid counts;
+    probe_ids: [B, P] cluster ids per query. Returns (dists [B,K], ids [B,K])
+    where ids are global slot ids cluster*CAP+j, L2 distances ascending.
+    """
+    B, d = q.shape
+    NC, CAP, _ = data.shape
+    gathered = data[probe_ids]                    # [B, P, CAP, d]
+    diff = gathered - q[:, None, None, :]
+    dist = jnp.sum(diff * diff, axis=-1)          # [B, P, CAP]
+    slot = jnp.arange(CAP)[None, None, :]
+    valid = slot < lens[probe_ids][:, :, None]
+    dist = jnp.where(valid, dist, jnp.inf)
+    ids = probe_ids[:, :, None] * CAP + slot      # [B, P, CAP]
+    flat_d = dist.reshape(B, -1)
+    flat_i = ids.reshape(B, -1).astype(jnp.int32)
+    vals, idx = jax.lax.top_k(-flat_d, k)
+    return -vals, jnp.take_along_axis(flat_i, idx, axis=1)
+
+
+def kmeans_assign(x, centroids):
+    """x: [N, d]; centroids: [NC, d] -> (assign [N] i32, sqdist [N])."""
+    d2 = (jnp.sum(x * x, 1)[:, None] - 2 * x @ centroids.T +
+          jnp.sum(centroids * centroids, 1)[None, :])
+    a = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return a, jnp.take_along_axis(d2, a[:, None], axis=1)[:, 0]
+
+
+def scr_score(windows, q):
+    """windows: [B, NW, d]; q: [B, d] -> cosine-style scores [B, NW]."""
+    return jnp.einsum("bnd,bd->bn", windows, q)
+
+
+def pq_adc(lut, codes):
+    """lut: [B, M, 256] distance tables; codes: [N, M] uint8 ->
+    scores [B, N] = sum_m lut[b, m, codes[n, m]]."""
+    g = jnp.take_along_axis(
+        lut[:, None, :, :],                          # [B,1,M,256]
+        codes.astype(jnp.int32)[None, :, :, None],   # [1,N,M,1]
+        axis=3)[..., 0]                              # [B,N,M]
+    return jnp.sum(g, axis=-1)
+
+
+def decode_attention(q, k, v, kv_len):
+    """q: [B, H, dh]; k,v: [B, S, G, dh]; H % G == 0. Softmax over the
+    first kv_len positions."""
+    B, H, dh = q.shape
+    S, G = k.shape[1], k.shape[2]
+    qg = q.reshape(B, G, H // G, dh)
+    s = jnp.einsum("bgnd,bsgd->bgns", qg, k) / jnp.sqrt(dh).astype(q.dtype)
+    s = s.astype(jnp.float32)
+    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgns,bsgd->bgnd", p.astype(v.dtype), v)
+    return o.reshape(B, H, dh)
+
+
+def flash_prefill(q, k, v, *, causal=True, window=None):
+    """q,k,v: [B, H, S, dh] (kv pre-expanded to H heads)."""
+    B, H, S, dh = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    s = s.astype(jnp.float32)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

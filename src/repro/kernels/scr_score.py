@@ -1,0 +1,37 @@
+"""SCR window-scoring kernel (§4 step 1): batched query x sliding-window
+similarity. A thin gemv, but the hot inner loop of Selective Content
+Reduction when documents explode into hundreds of windows."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, q_ref, o_ref):
+    w = w_ref[0]                                      # [TN, d]
+    q = q_ref[...]                                    # [1, d]
+    s = jax.lax.dot_general(w, q, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [TN, 1]
+    o_ref[...] = s.T                                  # [1, TN]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def scr_score(windows, q, tile: int = 256, interpret: bool = True):
+    """windows: [B, NW, d]; q: [B, d] -> scores [B, NW] (inner product)."""
+    B, NW, d = windows.shape
+    pad = (-NW) % tile
+    wp = jnp.pad(windows, ((0, 0), (0, pad), (0, 0)))
+    grid = (B, wp.shape[1] // tile)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, tile, d), lambda b, i: (b, i, 0)),
+                  pl.BlockSpec((1, d), lambda b, i: (b, 0))],
+        out_specs=pl.BlockSpec((1, tile), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, wp.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(wp.astype(jnp.float32), q.astype(jnp.float32))
+    return out[:, :NW]

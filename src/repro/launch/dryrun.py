@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (architecture x input shape)
+cell on the production meshes, print memory/cost analysis, and dump the
+roofline terms to JSON.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch h2o_danube_1_8b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # full campaign
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MeshConfig, RunConfig, SHAPES
+from repro.configs import ARCH_IDS, cells, get_config
+from repro.dist.sharding import (set_fsdp_spans_pods, sharding_for,
+                                 spec_tree_to_shardings, use_mesh)
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.roofline.hlo import structural_cost
+from repro.train import optimizer as opt
+from repro.train import trainer
+
+# TPU v5e hardware model (targets; this host is CPU so terms are derived,
+# not measured)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_CAP = 16e9               # bytes per chip
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return model.batch_struct(cfg, shape)
+    if shape.kind == "prefill":
+        b = model.batch_struct(cfg, shape)
+        b.pop("labels", None)
+        return b
+    # decode
+    return model.decode_inputs_struct(cfg, shape)
+
+
+def _prefill_batch_specs(cfg):
+    b = model.batch_specs(cfg)
+    b.pop("labels", None)
+    return b
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True):
+    """Build and lower the step function for one cell. Returns `lowered`."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = RunConfig(model=cfg, shape=shape)
+    pspecs = model.param_specs(cfg)
+
+    if shape.kind == "train":
+        import dataclasses
+        if cfg.family == "moe" and cfg.param_count() > 60e9:
+            # ZeRO++-style int8 weight gathers (EXPERIMENTS §Perf hc-3)
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, int8_gather=True))
+            run = RunConfig(model=cfg, shape=shape)
+        train_step, nmb, mdtype = trainer.make_train_step(run)
+        p_sh, o_sh, b_sh = trainer.state_shardings(run, mesh)
+        params_s, opt_s = trainer.make_states(run, abstract=True)
+        batch_s = model.batch_struct(cfg, shape)
+        jitted = jax.jit(train_step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(params_s, opt_s, batch_s), {"microbatches": nmb,
+                                                        "moments": mdtype}
+
+    # serving cells use bf16 weights
+    params_s = model.param_shapes(cfg, jnp.bfloat16)
+    p_sh = spec_tree_to_shardings(mesh, pspecs, params_s)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(cfg, params, batch)
+        batch_s = input_specs(arch, shape_name)
+        b_sh = spec_tree_to_shardings(mesh, _prefill_batch_specs(cfg),
+                                      batch_s)
+        jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        return jitted.lower(params_s, batch_s), {}
+
+    # decode: int8 KV for the large dense models (EXPERIMENTS §Perf hc-2)
+    import dataclasses
+    if cfg.family == "dense" and cfg.param_count() > 10e9:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(cfg, params, cache, token, pos)
+
+    cache_s = jax.eval_shape(partial(model.init_cache, cfg,
+                                     shape.global_batch, shape.seq_len))
+    c_sh = spec_tree_to_shardings(mesh, model.cache_specs(cfg), cache_s)
+    io0 = input_specs(arch, shape_name)
+    t_sh = sharding_for(mesh, "batch", None, shape=io0["token"].shape)
+    io = input_specs(arch, shape_name)
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, t_sh, None),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,) if donate else ())
+    return jitted.lower(params_s, cache_s, io["token"], io["pos"]), {}
+
+
+def analyze(compiled, mesh, cfg, shape) -> dict:
+    """Three-term roofline from the compiled artifact (per-device module)."""
+    nchips = mesh.devices.size
+    # raw XLA cost analysis (kept for reference; undercounts while bodies)
+    try:
+        xla_cost = compiled.cost_analysis()
+        if isinstance(xla_cost, list):
+            xla_cost = xla_cost[0]
+        xla_flops = float(xla_cost.get("flops", 0.0))
+    except Exception:
+        xla_flops = None
+    # structural analysis with loop trip counts applied
+    sc = structural_cost(compiled.as_text())
+    flops_dev = sc["flops"]
+    bytes_dev = sc["bytes"]
+    coll = {"total": sc["collective_total"], "ops": sc["collective_ops"]}
+    coll.update({k: v for k, v in sc.items()
+                 if k.startswith(("coll_", "n_"))})
+    mem = compiled.memory_analysis()
+    memd = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        memd[attr] = getattr(mem, attr, None)
+    peak_dev = (memd.get("argument_size_in_bytes") or 0) + \
+        (memd.get("temp_size_in_bytes") or 0) + \
+        (memd.get("output_size_in_bytes") or 0) - \
+        (memd.get("alias_size_in_bytes") or 0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll.get("total", 0) / ICI_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+
+    # MODEL_FLOPS: 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch tokens
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2 * n_active * tokens
+    flops_total = flops_dev * nchips
+    return {
+        "chips": int(nchips),
+        "xla_cost_analysis_flops": xla_flops,
+        "flops_per_device": flops_dev,
+        "hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll.get("total", 0),
+        "collectives": {k: v for k, v in coll.items()},
+        "memory_analysis": memd,
+        "peak_bytes_per_device": peak_dev,
+        "fits_hbm_16g": bool(peak_dev <= HBM_CAP) if peak_dev else None,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "hlo_flops_total": flops_total,
+        "useful_flops_ratio": model_flops / flops_total if flops_total else None,
+        "roofline_fraction": (
+            model_flops / PEAK_FLOPS / nchips /
+            max(t_compute, t_memory, t_coll)
+            if max(t_compute, t_memory, t_coll) > 0 else None),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: Path,
+             verbose: bool = True) -> dict:
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    tag = f"{arch}.{shape_name}.{mesh_tag}"
+    outfile = outdir / f"{tag}.json"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # 400B+ on multi-pod: ZeRO state must span pods to fit 16 GB chips
+        set_fsdp_spans_pods(multi_pod and
+                            get_config(arch).param_count() > 3e11)
+        with use_mesh(mesh):
+            lowered, extra = lower_cell(arch, shape_name, mesh)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            res = analyze(compiled, mesh, cfg, shape)
+            res.update(extra)
+            res.update({"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                        "status": "ok", "lower_s": t_lower,
+                        "compile_s": t_compile})
+            if verbose:
+                print(f"[{tag}] memory_analysis:", res["memory_analysis"])
+                print(f"[{tag}] cost: flops/dev={res['flops_per_device']:.3e} "
+                      f"bytes/dev={res['hbm_bytes_per_device']:.3e} "
+                      f"coll/dev={res['collective_bytes_per_device']:.3e}")
+                print(f"[{tag}] roofline: compute={res['t_compute_s']:.4f}s "
+                      f"memory={res['t_memory_s']:.4f}s "
+                      f"collective={res['t_collective_s']:.4f}s "
+                      f"dominant={res['dominant']} "
+                      f"frac={res['roofline_fraction']}")
+    except Exception as e:  # record failures: they are bugs to fix
+        res = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        if verbose:
+            print(f"[{tag}] FAILED: {res['error']}")
+    res["wall_s"] = time.time() - t0
+    outdir.mkdir(parents=True, exist_ok=True)
+    outfile.write_text(json.dumps(res, indent=2, default=str))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.out)
+
+    if args.all:
+        jobs = []
+        for arch in ARCH_IDS:
+            for sh in cells(arch):
+                for mp in ((False, True) if args.both_meshes else
+                           (args.multi_pod,)):
+                    jobs.append((arch, sh.name, mp))
+    else:
+        assert args.arch and args.shape
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        jobs = [(args.arch, args.shape, mp) for mp in meshes]
+
+    ok = bad = 0
+    for arch, sh, mp in jobs:
+        tag = f"{arch}.{sh}.{'pod2' if mp else 'pod1'}"
+        if args.skip_done and (outdir / f"{tag}.json").exists():
+            prev = json.loads((outdir / f"{tag}.json").read_text())
+            if prev.get("status") == "ok":
+                ok += 1
+                continue
+        res = run_cell(arch, sh, mp, outdir)
+        if res["status"] == "ok":
+            ok += 1
+        else:
+            bad += 1
+    print(f"dryrun: {ok} ok, {bad} failed")
+    raise SystemExit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

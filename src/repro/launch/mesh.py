@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, tp: int = 2, pod: int = 1):
+    """Small mesh for subprocess integration tests (8 host devices)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, tp), ("pod", "data", "model"))
+    return jax.make_mesh((data, tp), ("data", "model"))

@@ -1,0 +1,310 @@
+"""Dense decoder LM family: qwen2-72b, mistral-large-123b, nemotron-4-15b,
+h2o-danube-1.8b (SWA), qwen2-vl-2b (M-RoPE + patch stub), gte-small
+(bidirectional encoder), qwen2.5-0.5b.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models.common import ParamDef, attn_defs, embed_defs, mlp_defs
+
+N_IMG = 256          # stubbed visual tokens (dynamic resolution fixed here)
+IMG_GRID = 16        # 16x16 patch grid for M-RoPE spatial ids
+
+
+# ------------------------------------------------------------- params
+
+
+def defs(cfg: ModelConfig) -> dict:
+    Ln = cfg.num_layers
+    d = {"layers": {**attn_defs(cfg, Ln), **mlp_defs(cfg, Ln, cfg.d_ff)}}
+    d.update(embed_defs(cfg))
+    return d
+
+
+# ------------------------------------------------------------- embedding
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """Return (x [B,S,d], positions) handling modality stubs."""
+    tokens = batch["tokens"]
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    if cfg.modality == "vision":
+        patches = batch["patches"]                       # [B, N_IMG, d]
+        txt = jnp.take(params["tok_embed"], tokens[:, N_IMG:], axis=0)
+        img = patches.astype(txt.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([img, txt], axis=1) * emb_scale
+        positions = mrope_positions(tokens.shape[1])[None]  # [1,S,3]
+        positions = jnp.broadcast_to(positions, (x.shape[0],) + positions.shape[1:])
+    else:
+        x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                     tokens.shape)
+    return x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32), positions
+
+
+def mrope_positions(S: int, offset: int = 0):
+    """Qwen2-VL M-RoPE ids [S,3]: patches get (0,h,w) on a grid; text
+    continues at max(grid) + j on all three streams."""
+    idx = jnp.arange(S)
+    is_img = idx < N_IMG
+    t = jnp.where(is_img, 0, IMG_GRID + idx - N_IMG)
+    h = jnp.where(is_img, idx // IMG_GRID, IMG_GRID + idx - N_IMG)
+    w = jnp.where(is_img, idx % IMG_GRID, IMG_GRID + idx - N_IMG)
+    return jnp.stack([t + offset, h + offset, w + offset], axis=-1)
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if cfg.rope_type == "mrope":
+        return L.apply_mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    if cfg.rope_type == "rope":
+        return L.apply_rope(x, positions, cfg.rope_theta)
+    return x
+
+
+# ------------------------------------------------------------- blocks
+
+
+def _qkv(cfg: ModelConfig, lp, x, positions):
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    tp = L.tp_degree()
+    q, _ = L.pad_heads(q, tp)
+    k = L.expand_kv(k, tp)
+    v = L.expand_kv(v, tp)
+    q = shard(q, "batch", None, "tp", None)
+    k = shard(k, "batch", None, "tp", None)
+    v = shard(v, "batch", None, "tp", None)
+    return q, k, v
+
+
+def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool):
+    """One transformer block (training / prefill full-sequence path)."""
+    h = cfg.num_heads
+    res = x
+    y = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, lp, y, positions)
+    ctx = L.attention(q, k, v, causal=cfg.causal, window=cfg.sliding_window)
+    ctx = ctx[:, :, :h, :]                           # drop padded heads
+    y = ctx.reshape(ctx.shape[0], ctx.shape[1], -1) @ lp["wo"]
+    # constrain the TP-contracted projections seq-sharded *pre-residual* so
+    # SPMD lowers their reductions as reduce-scatter, not all-reduce
+    y = shard(y, "batch", "seq_sp" if seq_sp else None, None)
+    x = res + y
+    x = shard(x, "batch", "seq_sp" if seq_sp else None, None)
+    res = x
+    y = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+    y = shard(y, "batch", "seq_sp" if seq_sp else None, None)
+    x = res + y
+    return shard(x, "batch", "seq_sp" if seq_sp else None, None)
+
+
+def block_decode(cfg: ModelConfig, lp, x, pos, cache, idx,
+                 window_cache: bool):
+    """One block for a single decode position.
+
+    cache: dict of FULL stacked arrays [L, B, Sc, G, dh], updated
+    *in place* at layer `idx` (scan-carry form). Writing only the new
+    token's slice and then slicing the layer keeps per-step cache traffic
+    at ~1x the layer cache instead of the 4-6x that scan-ys collection
+    costs (see EXPERIMENTS.md §Perf, hillclimb 1).
+    """
+    h = cfg.num_heads
+    b = x.shape[0]
+    res = x
+    y = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.rope_type == "mrope":
+        positions = mrope_positions_decode(pos, b)
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, lp, y, positions)
+    cache = dict(cache)
+    sc = cache["k"].shape[2]
+    slot = pos % sc if window_cache else pos
+    zero = jnp.int32(0)
+
+    def put(name, val):
+        pos5 = (idx, zero, slot, zero, zero)[: val.ndim + 1]
+        cache[name] = jax.lax.dynamic_update_slice(
+            cache[name], val[None].astype(cache[name].dtype), pos5)
+
+    def layer(name):
+        return jax.lax.dynamic_index_in_dim(cache[name], idx, 0,
+                                            keepdims=False)
+
+    if cfg.kv_quant:
+        kq, ks = L.quantize_kv(k)
+        vq, vs = L.quantize_kv(v)
+        put("k", kq)
+        put("k_s", ks)
+        put("v", vq)
+        put("v_s", vs)
+        ctx = L.decode_attention_q8(
+            q, layer("k"), layer("k_s"), layer("v"), layer("v_s"), pos + 1,
+            window=cfg.sliding_window, ring=window_cache)
+    else:
+        put("k", k)
+        put("v", v)
+        ctx = L.decode_attention(
+            q, layer("k").astype(k.dtype), layer("v").astype(v.dtype),
+            pos + 1, window=cfg.sliding_window, ring=window_cache)
+    ctx = ctx[:, :, :h, :]
+    y = ctx.reshape(b, 1, -1) @ lp["wo"]
+    x = res + y
+    res = x
+    y = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+    return res + y, cache
+
+
+def mrope_positions_decode(pos, b):
+    p = IMG_GRID + pos - N_IMG
+    return jnp.broadcast_to(jnp.stack([p, p, p])[None, None, :], (b, 1, 3))
+
+
+# ------------------------------------------------------------- forward
+
+
+def _scan_blocks(cfg: ModelConfig, params, x, positions, *, seq_sp: bool,
+                 collect_kv: bool = False):
+    stacked = params["layers"]
+
+    def body(xc, lp):
+        if collect_kv:
+            # recompute k/v for the cache (prefill)
+            y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+            _, k, v = _qkv(cfg, lp, y, positions)
+            out = block(cfg, lp, xc, positions, seq_sp=seq_sp)
+            return out, (k, v)
+        return block(cfg, lp, xc, positions, seq_sp=seq_sp), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, kv = jax.lax.scan(body, x, stacked)
+    return x, kv
+
+
+def hidden_states(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    x, positions = embed_inputs(cfg, params, batch)
+    x = shard(x, "batch", "seq_sp" if seq_sp else None, None)
+    x, _ = _scan_blocks(cfg, params, x, positions, seq_sp=seq_sp)
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_from_hidden(cfg: ModelConfig, params, x):
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return shard(logits, "batch", None, "tp")
+
+
+def forward_logits(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    return logits_from_hidden(cfg, params, hidden_states(
+        cfg, params, batch, seq_sp=seq_sp))
+
+
+def encode(cfg: ModelConfig, params, batch):
+    """Mean-pooled, L2-normalised sentence embeddings (gte-small path)."""
+    x = hidden_states(cfg, params, batch)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(batch["tokens"].shape, x.dtype)
+    mask = mask.astype(x.dtype)[..., None]
+    pooled = jnp.sum(x * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1)
+    pooled = pooled.astype(jnp.float32)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+# ------------------------------------------------------------- serving
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def kv_expanded_heads(cfg: ModelConfig) -> int:
+    tp = L.tp_degree()
+    return max(cfg.num_kv_heads, tp)
+
+
+def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
+    g, hd = kv_expanded_heads(cfg), cfg.resolved_head_dim
+    sc = cache_len(cfg, seq_len)
+    shape = (cfg.num_layers, b, sc, g, hd)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg: ModelConfig):
+    axes = (None, "batch", None, "tp", None)
+    if cfg.kv_quant:
+        return {"k": axes, "v": axes, "k_s": axes[:-1], "v_s": axes[:-1]}
+    return {"k": axes, "v": axes}
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence forward; returns (last-position logits, kv cache)."""
+    x, positions = embed_inputs(cfg, params, batch)
+    x = shard(x, "batch", None, None)
+    x, (k, v) = _scan_blocks(cfg, params, x, positions, seq_sp=False,
+                             collect_kv=True)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
+    S = k.shape[2]
+    sc = cache_len(cfg, S)
+    if sc != S:  # SWA ring layout: position p lives in slot p % sc
+        k = jnp.roll(k[:, :, S - sc:], shift=S % sc, axis=2)
+        v = jnp.roll(v[:, :, S - sc:], shift=S % sc, axis=2)
+    if cfg.kv_quant:
+        kq, ks = L.quantize_kv(k)
+        vq, vs = L.quantize_kv(v)
+        return logits, {"k": kq, "k_s": ks, "v": vq, "v_s": vs}
+    return logits, {"k": k, "v": v}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token [B,1] int32; pos scalar int32 (position being written).
+
+    The cache rides in the scan CARRY (in-place per-layer updates), not in
+    xs/ys — collecting updated caches as scan outputs double-buffers the
+    whole cache and (on some backends) round-trips it through f32.
+    """
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    ring = cache["k"].shape[2] != 0 and cfg.sliding_window is not None
+
+    def body(carry, inp):
+        xc, c = carry
+        lp, idx = inp
+        xc, c = block_decode(cfg, lp, xc, pos, c, idx, ring)
+        return (xc, c), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, cache), _ = jax.lax.scan(body, (x, dict(cache)),
+                                 (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, cache

@@ -1,0 +1,277 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, attention (full /
+chunked-flash / sliding-window / decode), MLP variants.
+
+All attention paths support GQA with *activation-level* head padding:
+params stay at the architecture's true head counts; at trace time q-heads
+are zero-padded up to a multiple of the tensor-parallel degree and KV heads
+are broadcast-expanded to the TP degree, so every head dimension shards
+evenly on the mesh. Off-mesh (CPU tests) no padding happens.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import axis_size, get_mesh, shard
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: [B, S, H, dh]; positions: [B, S] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # [dh/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta=1e6):
+    """M-RoPE (Qwen2-VL): positions3 [B, S, 3] = (t, h, w) ids; `sections`
+    partitions the dh/2 frequency slots among the three streams."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # [dh/2]
+    if sum(sections) != dh // 2:  # rescale for reduced head dims
+        f = (dh // 2) / sum(sections)
+        sections = [max(1, int(s * f)) for s in sections]
+        sections[-1] = dh // 2 - sum(sections[:-1])
+    sec = jnp.concatenate([jnp.full((s,), i) for i, s in enumerate(sections)])
+    # pick per-frequency position stream
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                # [B, S, 3]
+        jnp.broadcast_to(sec.astype(jnp.int32),
+                         positions3.shape[:2] + (dh // 2,)),
+        axis=-1)                                       # [B, S, dh/2]
+    ang = pos * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int, offset=0):
+    pos = (jnp.arange(seq_len, dtype=jnp.float32) + offset)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ------------------------------------------------------- head padding
+
+
+def tp_degree() -> int:
+    return axis_size(get_mesh(), "tp")
+
+
+def pad_heads(q, tp: int):
+    """Zero-pad head axis of q [B,S,H,dh] to a multiple of tp."""
+    h = q.shape[2]
+    hp = ((h + tp - 1) // tp) * tp
+    if hp == h:
+        return q, h
+    pad = jnp.zeros(q.shape[:2] + (hp - h, q.shape[3]), q.dtype)
+    return jnp.concatenate([q, pad], axis=2), h
+
+
+def expand_kv(k, tp: int):
+    """Broadcast-expand kv head axis of [B,S,Hkv,dh] to max(Hkv, tp)."""
+    hkv = k.shape[2]
+    if hkv >= tp:
+        return k
+    rep = tp // hkv if tp % hkv == 0 else tp  # uneven -> expand to tp fully
+    if tp % hkv == 0:
+        return jnp.repeat(k, rep, axis=2)
+    # expand to tp by tiling each kv head ceil then slicing (rare path)
+    reps = -(-tp // hkv)
+    return jnp.repeat(k, reps, axis=2)[:, :, :tp, :]
+
+
+# ------------------------------------------------------- attention
+
+
+def _grouped_scores(q, k):
+    """q: [B,Sq,Hp,dh], k: [B,Sk,G,dh] with Hp % G == 0 -> [B,G,Hp/G,Sq,Sk]"""
+    b, sq, hp, dh = q.shape
+    g = k.shape[2]
+    qg = q.reshape(b, sq, g, hp // g, dh)
+    return jnp.einsum("bqgnd,bkgd->bgnqk", qg, k)
+
+
+def _grouped_context(p, v):
+    b, g, n, sq, sk = p.shape
+    ctx = jnp.einsum("bgnqk,bkgd->bqgnd", p, v)
+    return ctx.reshape(b, sq, g * n, v.shape[-1])
+
+
+def attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+              q_offset=0, kv_len=None, chunk: int = 1024,
+              banded: bool = True):
+    """Memory-bounded chunked (flash-style, online-softmax) attention.
+
+    q [B,Sq,H,dh]; k,v [B,Sk,G,dh] (G = expanded kv heads, H % G == 0).
+    `window`: sliding-window width (None = full). `kv_len`: valid kv prefix
+    (for padded caches). Scans kv in chunks; when `window` is set and
+    `banded`, statically skips chunks fully outside the band.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    g = k.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    nchunks = -(-sk // chunk)
+    skp = nchunks * chunk
+    if skp != sk:
+        padk = jnp.zeros((b, skp - sk, g, dh), k.dtype)
+        k = jnp.concatenate([k, padk], axis=1)
+        v = jnp.concatenate([v, padk], axis=1)
+    qpos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, nchunks, chunk, g, dh)
+    vc = v.reshape(b, nchunks, chunk, g, dh)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, kb, vb = inp
+        kpos = ci * chunk + jnp.arange(chunk)
+        s = _grouped_scores(q, kb) * scale              # [B,G,N,Sq,C] f32-ish
+        s = s.astype(jnp.float32)
+        mask = kpos[None, :] <= qpos[:, None] if causal else jnp.ones(
+            (sq, chunk), bool)
+        if window is not None:
+            mask = mask & (qpos[:, None] - kpos[None, :] < window)
+        if kv_len is not None:
+            mask = mask & (kpos[None, :] < kv_len)
+        mask = mask & (kpos[None, :] < sk)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        ctxb = jnp.einsum("bgnqk,bkgd->bgnqd", p.astype(kb.dtype), vb)
+        acc = acc * corr[..., None].astype(acc.dtype) + ctxb.astype(acc.dtype)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, g, h // g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, g, h // g, sq), jnp.float32)
+    a0 = jnp.zeros((b, g, h // g, sq, dh), jnp.float32)
+
+    idx = jnp.arange(nchunks)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (idx, jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out.reshape(b, h, sq, dh), 1, 2)  # [B,Sq,H,dh]
+    return out.astype(q.dtype)
+
+
+def quantize_kv(x):
+    """[.., S, G, dh] -> (int8 values, f32 scales [.., S, G])."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    s = jnp.maximum(s, 1e-10)
+    q = jnp.round(x.astype(jnp.float32) / s[..., None]).astype(jnp.int8)
+    return q, s
+
+
+def decode_attention_q8(q, kq, ks, vq, vs, kv_len, *, window=None,
+                        ring: bool = False):
+    """int8-KV decode attention. kq/vq: [B,S,G,dh] int8; ks/vs: [B,S,G].
+
+    Per-token scales commute through the dot products:
+      scores_t = (q . kq_t) * ks_t      and      ctx = sum_t (p_t*vs_t) vq_t
+    so the cache tensors enter the matmuls via (free) int8->bf16 converts
+    and no dequantised cache copy is ever materialized.
+    """
+    b, _, h, dh = q.shape
+    s_len, g = kq.shape[1], kq.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    scores = _grouped_scores(q, kq.astype(q.dtype)) * scale  # [B,G,N,1,S]
+    scores = scores.astype(jnp.float32) * \
+        ks.transpose(0, 2, 1)[:, :, None, None, :]
+    slots = jnp.arange(s_len)
+    if ring:
+        valid = slots < jnp.minimum(kv_len, s_len)
+    else:
+        valid = slots < kv_len
+        if window is not None:
+            valid = valid & (slots >= kv_len - window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = p * vs.transpose(0, 2, 1)[:, :, None, None, :]
+    ctx = _grouped_context(p.astype(q.dtype), vq.astype(q.dtype))
+    return ctx
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=None,
+                     ring: bool = False):
+    """Single-position attention. q [B,1,H,dh]; caches [B,S,G,dh].
+
+    `ring`: cache is a ring buffer (SWA) — all filled slots are valid.
+    """
+    b, _, h, dh = q.shape
+    s, g = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / math.sqrt(dh)
+    s_scores = _grouped_scores(q, k_cache) * scale       # [B,G,N,1,S]
+    s_scores = s_scores.astype(jnp.float32)
+    slots = jnp.arange(s)
+    if ring:
+        valid = slots < jnp.minimum(kv_len, s)
+    else:
+        valid = slots < kv_len
+        if window is not None:
+            valid = valid & (slots >= kv_len - window)
+    s_scores = jnp.where(valid[None, None, None, None, :], s_scores, -1e30)
+    p = jax.nn.softmax(s_scores, axis=-1)
+    ctx = _grouped_context(p.astype(q.dtype), v_cache)   # [B,1,H,dh]
+    return ctx
+
+
+# ------------------------------------------------------- mlp
+
+
+def mlp(x, w1, w2, w3, act: str):
+    """w1/w3: [d, ff]; w2: [ff, d]. swiglu uses w3 as gate; sq_relu/gelu
+    ignore w3 (may be None)."""
+    h = x @ w1
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ w3)
+    elif act == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    h = shard(h, "batch", None, "tp")
+    return h @ w2
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. Returns (y, new_state)
+    where state is the last K-1 inputs [B,K-1,C] for streaming decode."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    ys = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return ys, new_state

@@ -1,0 +1,233 @@
+"""Mamba2 (SSD — state-space duality) family. [arXiv:2405.21060]
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* a chunk (MXU-friendly masked matmuls) + a short sequential
+recurrence over chunk states. Decode is an O(1) state update: the reason
+this arch serves long_500k with a constant-size cache.
+
+Heads are sharded over "tp"; the SSM state tensor is [B, H, N, P] with H on
+"tp".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import dense
+from repro.models.common import ParamDef, embed_defs
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    H = d_in // m.head_dim
+    return d_in, H, m.head_dim, m.ssm_state
+
+
+def defs(cfg: ModelConfig) -> dict:
+    Ln, d = cfg.num_layers, cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    K = cfg.mamba.conv_width
+    layer = {
+        "norm": ParamDef((Ln, d), (None, "fsdp"), "zeros"),
+        "w_xz": ParamDef((Ln, d, 2 * d_in), (None, "fsdp", "tp")),
+        "w_bc": ParamDef((Ln, d, 2 * N), (None, "fsdp", None)),
+        "w_dt": ParamDef((Ln, d, H), (None, "fsdp", "tp")),
+        "dt_bias": ParamDef((Ln, H), (None, "tp"), "dt_bias"),
+        "A_log": ParamDef((Ln, H), (None, "tp"), "a_log"),
+        "D": ParamDef((Ln, H), (None, "tp"), "zeros"),
+        "conv_w": ParamDef((Ln, K, d_in + 2 * N), (None, None, None)),
+        "ssm_norm": ParamDef((Ln, d_in), (None, "tp"), "zeros"),
+        "w_out": ParamDef((Ln, d_in, d), (None, "tp", "fsdp")),
+    }
+    out = {"layers": layer}
+    out.update(embed_defs(cfg))
+    return out
+
+
+def dt_bias_init(key, shape):
+    # softplus(dt_bias) spread across (1e-3, 1e-1)
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-3, 1e-1)
+    return jnp.log(jnp.expm1(u))
+
+
+def a_log_init(key, shape):
+    return jnp.log(jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0))
+
+
+# ---------------------------------------------------------------- SSD core
+
+
+def _proj(cfg, lp, y):
+    d_in, H, P, N = _dims(cfg)
+    zx = y @ lp["w_xz"]
+    z, xs = jnp.split(zx, 2, axis=-1)                 # [B,S,d_in] each
+    bc = y @ lp["w_bc"]                               # [B,S,2N]
+    dt = jax.nn.softplus((y @ lp["w_dt"]).astype(jnp.float32) + lp["dt_bias"])
+    return z, xs, bc, dt
+
+
+def ssd_chunked(cfg: ModelConfig, lp, xs, Bm, Cm, dt):
+    """xs [B,S,d_in]; Bm,Cm [B,S,N]; dt [B,S,H] -> (y [B,S,d_in],
+    final_state [B,H,N,P])."""
+    d_in, H, P, N = _dims(cfg)
+    b, S, _ = xs.shape
+    Q = min(cfg.mamba.chunk_size, S)
+    pad = (-S) % Q
+    if pad:  # zero dt => identity recurrence on padded tail
+        xs = jnp.concatenate([xs, jnp.zeros((b, pad, d_in), xs.dtype)], 1)
+        Bm = jnp.concatenate([Bm, jnp.zeros((b, pad, N), Bm.dtype)], 1)
+        Cm = jnp.concatenate([Cm, jnp.zeros((b, pad, N), Cm.dtype)], 1)
+        dt = jnp.concatenate([dt, jnp.zeros((b, pad, H), dt.dtype)], 1)
+    S_orig, S = S, S + pad
+    NC = S // Q
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))     # [H], negative
+    x4 = xs.reshape(b, NC, Q, H, P)
+    dtc = dt.reshape(b, NC, Q, H)
+    Bc = Bm.reshape(b, NC, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(b, NC, Q, N).astype(jnp.float32)
+    dA = dtc * A                                      # [B,NC,Q,H]
+    seg = jnp.cumsum(dA, axis=2)
+    xdt = (x4.astype(jnp.float32) * dtc[..., None])   # [B,NC,Q,H,P]
+
+    # intra-chunk (quadratic within chunk, masked lower-triangular)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)    # [B,NC,Q,Q]
+    ldiff = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # [B,NC,Q,K,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, Lmat, xdt)
+
+    # per-chunk terminal states
+    dte = jnp.exp(seg[:, :, -1:, :] - seg)            # decay to chunk end
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc, dte, xdt)
+
+    # inter-chunk recurrence over NC chunk states
+    chunk_decay = jnp.exp(seg[:, :, -1])              # [B,NC,H]
+
+    def step(h, inp):
+        dec, st = inp                                  # [B,H], [B,H,N,P]
+        h_out = h                                      # state entering chunk
+        h = dec[..., None, None] * h + st
+        return h, h_out
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                   # [B,NC,H,N,P]
+
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc, h_in, jnp.exp(seg))
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    y = y + x4.reshape(b, S, H, P).astype(jnp.float32) * lp["D"][None, None, :, None]
+    return (y.reshape(b, S, d_in)[:, :S_orig].astype(xs.dtype), h_final)
+
+
+def mixer(cfg: ModelConfig, lp, x, *, state=None, decode=False):
+    """Full Mamba2 block mixer. state: (h [B,H,N,P] f32, conv [B,K-1,C])."""
+    d_in, H, P, N = _dims(cfg)
+    res = x
+    y = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    z, xs, bc, dt = _proj(cfg, lp, y)
+    conv_in = jnp.concatenate([xs, bc.astype(xs.dtype)], axis=-1)
+    if decode:
+        h_prev, conv_state = state
+        conv_out, conv_state = L.causal_conv1d(conv_in, lp["conv_w"], conv_state)
+        conv_out = jax.nn.silu(conv_out)
+        xs2, bc2 = conv_out[..., :d_in], conv_out[..., d_in:]
+        Bm, Cm = jnp.split(bc2, 2, axis=-1)
+        A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * A)                    # [B,H]
+        x1 = xs2[:, 0].reshape(-1, H, P).astype(jnp.float32)
+        xdt = x1 * dt[:, 0][..., None]
+        h = dA[..., None, None] * h_prev + \
+            jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), xdt)
+        yv = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+        yv = yv + x1 * lp["D"][None, :, None]
+        y_ssm = yv.reshape(-1, 1, d_in).astype(xs.dtype)
+        new_state = (h, conv_state)
+    else:
+        conv_out, _ = L.causal_conv1d(conv_in, lp["conv_w"])
+        conv_out = jax.nn.silu(conv_out)
+        xs2, bc2 = conv_out[..., :d_in], conv_out[..., d_in:]
+        xs2 = shard(xs2, "batch", None, "tp")
+        Bm, Cm = jnp.split(bc2, 2, axis=-1)
+        y_ssm, h_final = ssd_chunked(cfg, lp, xs2, Bm, Cm, dt)
+        new_state = (h_final, conv_in[:, -(cfg.mamba.conv_width - 1):])
+    y_ssm = y_ssm * jax.nn.silu(z)
+    y_ssm = L.rmsnorm(y_ssm, lp["ssm_norm"], cfg.norm_eps)
+    return res + y_ssm @ lp["w_out"], new_state
+
+
+# ---------------------------------------------------------------- forward
+
+
+def hidden_states(cfg: ModelConfig, params, batch, *, seq_sp: bool = False,
+                  collect_state: bool = False):
+    x, _ = dense.embed_inputs(cfg, params, batch)
+    x = shard(x, "batch", "seq_sp" if seq_sp else None, None)
+
+    def body(xc, lp):
+        xc, st = mixer(cfg, lp, xc)
+        if collect_state:
+            return xc, st
+        return xc, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat and not collect_state else body
+    x, states = jax.lax.scan(body_fn, x, params["layers"])
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps), states
+
+
+def forward_logits(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    x, _ = hidden_states(cfg, params, batch, seq_sp=seq_sp)
+    return dense.logits_from_hidden(cfg, params, x)
+
+
+# ---------------------------------------------------------------- serving
+
+
+def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
+    d_in, H, P, N = _dims(cfg)
+    K = cfg.mamba.conv_width
+    Ln = cfg.num_layers
+    return {
+        "h": jnp.zeros((Ln, b, H, N, P), jnp.float32),
+        "conv": jnp.zeros((Ln, b, K - 1, d_in + 2 * N), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    return {"h": (None, "batch", "tp", None, None),
+            "conv": (None, "batch", None, None)}
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    x, states = hidden_states(cfg, params, batch, collect_state=True)
+    logits = dense.logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
+    h, conv = states
+    return logits, {"h": h, "conv": conv.astype(x.dtype)}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+    def body(carry, inp):
+        xc, h_all, conv_all = carry
+        lp, idx = inp
+        h = jax.lax.dynamic_index_in_dim(h_all, idx, 0, keepdims=False)
+        conv = jax.lax.dynamic_index_in_dim(conv_all, idx, 0, keepdims=False)
+        xc, (h, conv) = mixer(cfg, lp, xc, state=(h, conv), decode=True)
+        h_all = jax.lax.dynamic_update_index_in_dim(h_all, h, idx, 0)
+        conv_all = jax.lax.dynamic_update_index_in_dim(
+            conv_all, conv.astype(conv_all.dtype), idx, 0)
+        return (xc, h_all, conv_all), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, h, conv), _ = jax.lax.scan(
+        body, (x, cache["h"], cache["conv"]), (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, {"h": h, "conv": conv}

@@ -1,0 +1,316 @@
+"""MoE decoder family: arctic-480b (128e top-2 + dense residual),
+granite-moe-1b-a400m (32e top-8).
+
+Expert parallelism: activations are replicated along the "model" axis
+(they already are, post-attention-allreduce), experts are sharded along it.
+Each model-shard routes its *local copy* of the tokens, keeps only the
+tokens destined for its resident experts, runs them through a capacity-
+bounded [E_local, C, d] buffer, and the final psum over "model" combines
+expert outputs — the same collective a TP dense FFN already pays, so EP
+here adds **zero** extra all-to-all traffic. This is a deliberate TPU
+adaptation (see DESIGN.md §3): classic all-to-all dispatch assumes token
+shards differ per expert-shard, which is not true in 2-D (data, model)
+meshes with replicated activations.
+
+Dispatch inside a shard uses the sort-based grouping trick (argsort by
+expert id, cumsum offsets, capacity drop) — no [T, E, C] one-hot.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.dist.sharding import (fsdp_spans_pods, get_mesh, logical_to_spec,
+                                 shard)
+from repro.models import layers as L
+from repro.models.common import ParamDef, attn_defs, embed_defs, mlp_defs
+from repro.models import dense
+
+
+def defs(cfg: ModelConfig) -> dict:
+    Ln, d, m = cfg.num_layers, cfg.d_model, cfg.moe
+    layer = {**attn_defs(cfg, Ln)}
+    layer["moe_norm"] = ParamDef((Ln, d), (None, "fsdp"), "zeros")
+    layer["router"] = ParamDef((Ln, d, m.num_experts), (None, "fsdp", None))
+    layer["we1"] = ParamDef((Ln, m.num_experts, d, m.expert_d_ff),
+                            (None, "expert", "fsdp", None))
+    layer["we2"] = ParamDef((Ln, m.num_experts, m.expert_d_ff, d),
+                            (None, "expert", None, "fsdp"))
+    if cfg.act == "swiglu":
+        layer["we3"] = ParamDef((Ln, m.num_experts, d, m.expert_d_ff),
+                                (None, "expert", "fsdp", None))
+    if m.dense_residual:
+        layer.update(mlp_defs(cfg, Ln, cfg.d_ff))
+    else:
+        layer["mlp_norm"] = layer.pop("moe_norm")  # single pre-FFN norm name
+    out = {"layers": layer}
+    out.update(embed_defs(cfg))
+    return out
+
+
+# ------------------------------------------------- quantised FSDP gather
+
+
+def _q8_axis(w, axis):
+    s = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True) \
+        / 127.0
+    s = jnp.maximum(s, 1e-20)
+    q = jnp.round(w.astype(jnp.float32) / s).astype(jnp.int8)
+    return q, s
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def q8_all_gather(w, axis_name, gather_axis, quant_axis):
+    """ZeRO++-style int8 weight all-gather: quantise the local shard
+    (per-row scales along `quant_axis`), gather int8 + scales, dequantise.
+    Halves the FSDP gather's ICI bytes. Backward = the same
+    reduce-scatter the bf16 gather would produce (straight-through)."""
+    q, s = _q8_axis(w, quant_axis)
+    qf = jax.lax.all_gather(q, axis_name, axis=gather_axis, tiled=True)
+    sf = jax.lax.all_gather(s, axis_name, axis=gather_axis, tiled=True)
+    return qf.astype(jnp.bfloat16) * sf.astype(jnp.bfloat16)
+
+
+def _q8_fwd(w, axis_name, gather_axis, quant_axis):
+    return (q8_all_gather(w, axis_name, gather_axis, quant_axis),
+            jnp.zeros((), w.dtype))
+
+
+def _q8_bwd(axis_name, gather_axis, quant_axis, res, g):
+    gw = jax.lax.psum_scatter(g.astype(jnp.float32), axis_name,
+                              scatter_dimension=gather_axis, tiled=True)
+    return (gw.astype(res.dtype),)
+
+
+q8_all_gather.defvjp(_q8_fwd, _q8_bwd)
+
+
+# ----------------------------------------------------------- dispatch core
+
+
+def _local_moe(cfg: ModelConfig, x, router, we1, we2, we3, e_offset, E_total):
+    """Token-choice top-k MoE over the experts resident in this shard.
+
+    x: [T, d] local tokens; we*: [El, ...] local experts covering global
+    ids [e_offset, e_offset + El). Returns (y [T, d] partial sum over local
+    experts, aux load-balance loss term).
+    """
+    m = cfg.moe
+    T, d = x.shape
+    El = we1.shape[0]
+    k = m.top_k
+    logits = (x.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    topv, topi = jax.lax.top_k(probs, k)                        # [T, k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # aux loss (computed identically on every shard; fine under psum/mean)
+    f = jnp.zeros(E_total, jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * k)
+    pbar = probs.mean(0)
+    aux = E_total * jnp.sum(f * pbar)
+
+    C = max(4, int(T * k * m.capacity_factor) // E_total)
+    eids = topi.reshape(-1)                                     # [T*k]
+    local = (eids >= e_offset) & (eids < e_offset + El)
+    leids = jnp.where(local, eids - e_offset, El)               # El = trash
+    order = jnp.argsort(leids)
+    sorted_ids = leids[order]
+    counts = jnp.zeros(El + 1, jnp.int32).at[leids].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[sorted_ids]
+    keep = (sorted_ids < El) & (pos < C)
+    dest = jnp.where(keep, sorted_ids * C + pos, El * C)
+    src_tok = order // k
+    buf = jnp.zeros((El * C + 1, d), x.dtype).at[dest].set(x[src_tok])
+    h = buf[: El * C].reshape(El, C, d)
+    a = jnp.einsum("ecd,edf->ecf", h, we1)
+    if cfg.act == "swiglu":
+        a = jax.nn.silu(a) * jnp.einsum("ecd,edf->ecf", h, we3)
+    elif cfg.act == "sq_relu":
+        a = jnp.square(jax.nn.relu(a))
+    else:
+        a = jax.nn.gelu(a)
+    out = jnp.einsum("ecf,efd->ecd", a, we2).reshape(El * C, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+    slot_vals = out[dest]                                       # [T*k, d]
+    w = topv.reshape(-1)[order].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[src_tok].add(
+        jnp.where(keep[:, None], slot_vals * w[:, None], 0))
+    return y, aux
+
+
+def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False):
+    """x: [B, S, d] -> (y, aux). Uses shard_map EP on-mesh, local off-mesh.
+
+    out_scatter (train/seq_sp path): the combining reduction over "model"
+    is emitted as psum_scatter over the sequence dim instead of a full
+    all-reduce — the residual stream is sequence-sharded anyway, so this
+    halves the combine's ICI traffic and skips the re-shard.
+    """
+    b, s, d = x.shape
+    mesh = get_mesh()
+    m = cfg.moe
+    if mesh is None or "model" not in mesh.axis_names:
+        y, aux = _local_moe(cfg, x.reshape(-1, d), lp["router"], lp["we1"],
+                            lp["we2"], lp.get("we3"), 0, m.num_experts)
+        return y.reshape(b, s, d), aux
+
+    tp = mesh.shape["model"]
+    El = m.num_experts // tp
+    scatter = out_scatter and s % tp == 0
+    batch_spec = logical_to_spec(mesh, ("batch", None, None))
+    out_spec = logical_to_spec(mesh, ("batch", "seq_sp", None)) if scatter \
+        else batch_spec
+    fsdp_ax = ("pod", "data") if (fsdp_spans_pods() and
+                                  "pod" in mesh.axis_names) else "data"
+
+    def gather(wl, gather_axis, quant_axis):
+        if m.int8_gather:
+            return q8_all_gather(wl, fsdp_ax, gather_axis, quant_axis)
+        return jax.lax.all_gather(wl, fsdp_ax, axis=gather_axis, tiled=True)
+
+    def body(xl, router_l, we1_l, we2_l, we3_l):
+        # ZeRO-3 per-layer gather of the FSDP ("data") weight dimension
+        router_f = gather(router_l, 0, 1)
+        we1_f = gather(we1_l, 1, 2)
+        we2_f = gather(we2_l, 2, 1)
+        we3_f = gather(we3_l, 1, 2) if cfg.act == "swiglu" else None
+        midx = jax.lax.axis_index("model")
+        xt = xl.reshape(-1, d)
+        y, aux = _local_moe(cfg, xt, router_f, we1_f, we2_f, we3_f,
+                            midx * El, m.num_experts)
+        y = y.reshape(xl.shape)
+        if scatter:
+            y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                     tiled=True)
+        else:
+            y = jax.lax.psum(y, "model")
+        aux = jax.lax.psum(aux, "model") / tp
+        return y, aux
+
+    specs_in = (batch_spec, P(fsdp_ax, None), P("model", fsdp_ax, None),
+                P("model", None, fsdp_ax),
+                P("model", fsdp_ax, None) if cfg.act == "swiglu" else P())
+    fn = jax.shard_map(body, mesh=mesh, in_specs=specs_in,
+                       out_specs=(out_spec, P()), check_vma=False)
+    we3 = lp.get("we3")
+    if we3 is None:
+        we3 = jnp.zeros((), x.dtype)
+    y, aux = fn(x, lp["router"], lp["we1"], lp["we2"], we3)
+    return y, aux
+
+
+# ----------------------------------------------------------- blocks
+
+
+def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool):
+    h = cfg.num_heads
+    sp = "seq_sp" if seq_sp else None
+    res = x
+    y = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    q, k, v = dense._qkv(cfg, lp, y, positions)
+    ctx = L.attention(q, k, v, causal=True)
+    ctx = ctx[:, :, :h, :]
+    y = ctx.reshape(ctx.shape[0], ctx.shape[1], -1) @ lp["wo"]
+    y = shard(y, "batch", sp, None)   # reduce-scatter, not all-reduce
+    x = res + y
+    x = shard(x, "batch", sp, None)
+    res = x
+    norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
+    y = L.rmsnorm(x, lp[norm_name], cfg.norm_eps)
+    ymoe, aux = moe_ffn(cfg, lp, y, out_scatter=seq_sp)
+    if cfg.moe.dense_residual:
+        yd = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+        ydense = L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+        ymoe = ymoe + shard(ydense, "batch", sp, None)
+    x = res + ymoe
+    return shard(x, "batch", sp, None), aux
+
+
+def hidden_states(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    x, positions = dense.embed_inputs(cfg, params, batch)
+
+    def body(carry, lp):
+        xc, aux = carry
+        xc, a = block(cfg, lp, xc, positions, seq_sp=seq_sp)
+        return (xc, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def forward_logits(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    x, aux = hidden_states(cfg, params, batch, seq_sp=seq_sp)
+    return dense.logits_from_hidden(cfg, params, x), aux
+
+
+# ----------------------------------------------------------- serving
+
+init_cache = dense.init_cache
+cache_specs = dense.cache_specs
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    x, positions = dense.embed_inputs(cfg, params, batch)
+
+    def body(carry, lp):
+        xc, aux = carry
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        _, k, v = dense._qkv(cfg, lp, y, positions)
+        xc, a = block(cfg, lp, xc, positions, seq_sp=False)
+        return (xc, aux + a), (k, v)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), (k, v) = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                  params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, {"k": k, "v": v}
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    zero = jnp.int32(0)
+
+    def body(carry, inp):
+        xc, ck_all, cv_all = carry
+        lp, idx = inp
+        h = cfg.num_heads
+        b = xc.shape[0]
+        res = xc
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        positions = jnp.full((b, 1), pos, jnp.int32)
+        q, k, v = dense._qkv(cfg, lp, y, positions)
+        # in-place carry update (see dense.block_decode)
+        ck_all = jax.lax.dynamic_update_slice(
+            ck_all, k[None].astype(ck_all.dtype), (idx, zero, pos, zero, zero))
+        cv_all = jax.lax.dynamic_update_slice(
+            cv_all, v[None].astype(cv_all.dtype), (idx, zero, pos, zero, zero))
+        ck = jax.lax.dynamic_index_in_dim(ck_all, idx, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, idx, 0, keepdims=False)
+        ctx = L.decode_attention(q, ck.astype(k.dtype), cv.astype(v.dtype),
+                                 pos + 1)
+        ctx = ctx[:, :, :h, :]
+        xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
+        res = xc
+        norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
+        y = L.rmsnorm(xc, lp[norm_name], cfg.norm_eps)
+        ymoe, _ = moe_ffn(cfg, lp, y)
+        if cfg.moe.dense_residual:
+            yd = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+            ymoe = ymoe + L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+        return (res + ymoe, ck_all, cv_all), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, k, v), _ = jax.lax.scan(body, (x, cache["k"], cache["v"]),
+                                (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, {"k": k, "v": v}

@@ -1,0 +1,346 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention,
+repeating pattern "rra" (2 recurrent : 1 local-attn). [arXiv:2402.19427]
+
+Layer stacking: the pattern repeats `NB = num_layers // len(pattern)` times
+as a scanned *super-block* (heterogeneous sub-layers, homogeneous across
+repeats); remainder layers run unrolled as a small "tail".
+
+RG-LRU: a_t = exp(-c * softplus(Λ) * sigmoid(r_t)),
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+Training uses an associative scan (O(S log S), parallel); decode is a
+single-step state update — the reason this arch serves long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import dense
+from repro.models.common import ParamDef, attn_defs, embed_defs, mlp_defs
+
+RG_C = 8.0
+
+
+def _rec_defs(cfg: ModelConfig, NB: int, prefix: str) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    K = cfg.rglru.conv_width
+    return {
+        f"{prefix}norm": ParamDef((NB, d), (None, "fsdp"), "zeros"),
+        f"{prefix}w_in": ParamDef((NB, d, w), (None, "fsdp", "tp")),
+        f"{prefix}w_gate": ParamDef((NB, d, w), (None, "fsdp", "tp")),
+        f"{prefix}conv_w": ParamDef((NB, K, w), (None, None, "tp")),
+        f"{prefix}w_rx": ParamDef((NB, w, 2 * w), (None, "fsdp", "tp")),
+        f"{prefix}b_rx": ParamDef((NB, 2 * w), (None, "tp"), "zeros"),
+        f"{prefix}lam": ParamDef((NB, w), (None, "tp"), "lam"),
+        f"{prefix}w_out": ParamDef((NB, w, d), (None, "tp", "fsdp")),
+        **mlp_defs(cfg, NB, cfg.d_ff, prefix=prefix),
+    }
+
+
+def defs(cfg: ModelConfig) -> dict:
+    pat = cfg.rglru.pattern
+    NB, rem = divmod(cfg.num_layers, len(pat))
+    layer: dict = {}
+    for i, c in enumerate(pat):
+        if c == "r":
+            layer.update(_rec_defs(cfg, NB, f"s{i}_"))
+        else:
+            layer.update(attn_defs(cfg, NB, prefix=f"s{i}_"))
+            layer.update(mlp_defs(cfg, NB, cfg.d_ff, prefix=f"s{i}_"))
+    out = {"layers": layer}
+    for j in range(rem):  # tail layers follow the pattern from the start
+        c = pat[j]
+        if c == "r":
+            out[f"tail{j}"] = _rec_defs(cfg, 1, "")
+        else:
+            out[f"tail{j}"] = {**attn_defs(cfg, 1, ""),
+                               **mlp_defs(cfg, 1, cfg.d_ff, "")}
+    out.update(embed_defs(cfg))
+    return out
+
+
+def lam_init(key, shape):
+    # a = sigmoid(lam)-driven decay in ~(0.9, 0.999)
+    u = jax.random.uniform(key, shape, jnp.float32, 0.38, 0.8)
+    return jnp.log(jnp.exp(-jnp.log(u) / RG_C) - 1.0)  # inverse softplus
+
+
+# ------------------------------------------------------------- RG-LRU core
+
+
+def _gates(lp, xc):
+    g = xc @ lp["w_rx"] + lp["b_rx"]
+    r, i = jnp.split(g, 2, axis=-1)
+    log_a = -RG_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * \
+        jax.nn.sigmoid(r.astype(jnp.float32))
+    gated_x = (xc.astype(jnp.float32) *
+               jax.nn.sigmoid(i.astype(jnp.float32)))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return log_a, beta * gated_x
+
+
+def rglru_scan(lp, xc):
+    """xc: [B, S, w] conv output -> recurrent output [B, S, w] (train)."""
+    log_a, bx = _gates(lp, xc)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    return h.astype(xc.dtype)
+
+
+def rglru_step(lp, xc, h_prev):
+    """xc: [B, 1, w]; h_prev: [B, w] -> (y [B,1,w], h [B,w])."""
+    log_a, bx = _gates(lp, xc)
+    h = jnp.exp(log_a[:, 0]) * h_prev + bx[:, 0]
+    return h.astype(xc.dtype)[:, None], h
+
+
+def rec_block(cfg: ModelConfig, lp, x, *, state=None, decode=False):
+    """Griffin recurrent block. state: (h [B,w] f32, conv [B,K-1,w])."""
+    res = x
+    y = L.rmsnorm(x, lp["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(y @ lp["w_gate"])
+    xin = y @ lp["w_in"]
+    xin = shard(xin, "batch", None, "tp")
+    if decode:
+        h_prev, conv_state = state
+        xc, conv_state = L.causal_conv1d(xin, lp["conv_w"], conv_state)
+        yr, h = rglru_step(lp, xc, h_prev)
+        new_state = (h, conv_state)
+    else:
+        xc, _ = L.causal_conv1d(xin, lp["conv_w"])
+        yr = rglru_scan(lp, xc)
+        new_state = None
+    x = res + (gate * yr) @ lp["w_out"]
+    res = x
+    y = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = res + L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+    return x, new_state
+
+
+def attn_block(cfg: ModelConfig, lp, x, positions, *, cache=None, pos=None):
+    """Local (sliding-window) attention block."""
+    win = cfg.rglru.local_window
+    h = cfg.num_heads
+    res = x
+    y = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
+    if cache is None:
+        q, k, v = dense._qkv(cfg, lp, y, positions)
+        ctx = L.attention(q, k, v, causal=True, window=win)
+        new_cache = None
+    else:
+        ck, cv = cache
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q, k, v = dense._qkv(cfg, lp, y, positions)
+        sc = ck.shape[1]
+        slot = pos % sc
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        ctx = L.decode_attention(q, ck, cv, pos + 1, ring=True)
+        new_cache = (ck, cv)
+    ctx = ctx[:, :, :h, :]
+    x = res + ctx.reshape(ctx.shape[0], ctx.shape[1], -1) @ lp["wo"]
+    res = x
+    y = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = res + L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+    return x, new_cache
+
+
+def _sub(lp, i):
+    pre = f"s{i}_"
+    return {k[len(pre):]: v for k, v in lp.items() if k.startswith(pre)}
+
+
+# ------------------------------------------------------------- forward
+
+
+def hidden_states(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    x, positions = dense.embed_inputs(cfg, params, batch)
+    pat = cfg.rglru.pattern
+
+    def body(xc, lp):
+        for i, c in enumerate(pat):
+            sub = _sub(lp, i)
+            if c == "r":
+                xc, _ = rec_block(cfg, sub, xc)
+            else:
+                xc, _ = attn_block(cfg, sub, xc, positions)
+        return xc, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    rem = cfg.num_layers % len(pat)
+    for j in range(rem):
+        tail = jax.tree.map(lambda a: a[0], params[f"tail{j}"])
+        if pat[j] == "r":
+            x, _ = rec_block(cfg, tail, x)
+        else:
+            x, _ = attn_block(cfg, tail, x, positions)
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward_logits(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
+    return dense.logits_from_hidden(
+        cfg, params, hidden_states(cfg, params, batch, seq_sp=seq_sp))
+
+
+# ------------------------------------------------------------- serving
+
+
+def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
+    pat = cfg.rglru.pattern
+    NB, rem = divmod(cfg.num_layers, len(pat))
+    w = cfg.rglru.lru_width or cfg.d_model
+    K = cfg.rglru.conv_width
+    g = dense.kv_expanded_heads(cfg)
+    hd = cfg.resolved_head_dim
+    win = min(cfg.rglru.local_window, seq_len)
+    cache: dict = {}
+    for i, c in enumerate(pat):
+        if c == "r":
+            cache[f"s{i}_h"] = jnp.zeros((NB, b, w), jnp.float32)
+            cache[f"s{i}_conv"] = jnp.zeros((NB, b, K - 1, w), dtype)
+        else:
+            cache[f"s{i}_k"] = jnp.zeros((NB, b, win, g, hd), dtype)
+            cache[f"s{i}_v"] = jnp.zeros((NB, b, win, g, hd), dtype)
+    for j in range(rem):
+        if pat[j] == "r":
+            cache[f"tail{j}_h"] = jnp.zeros((b, w), jnp.float32)
+            cache[f"tail{j}_conv"] = jnp.zeros((b, K - 1, w), dtype)
+        else:
+            cache[f"tail{j}_k"] = jnp.zeros((b, win, g, hd), dtype)
+            cache[f"tail{j}_v"] = jnp.zeros((b, win, g, hd), dtype)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig):
+    pat = cfg.rglru.pattern
+    rem = cfg.num_layers % len(pat)
+    specs: dict = {}
+    for i, c in enumerate(pat):
+        if c == "r":
+            specs[f"s{i}_h"] = (None, "batch", "tp")
+            specs[f"s{i}_conv"] = (None, "batch", None, "tp")
+        else:
+            specs[f"s{i}_k"] = (None, "batch", None, "tp", None)
+            specs[f"s{i}_v"] = (None, "batch", None, "tp", None)
+    for j in range(rem):
+        if pat[j] == "r":
+            specs[f"tail{j}_h"] = ("batch", "tp")
+            specs[f"tail{j}_conv"] = ("batch", None, "tp")
+        else:
+            specs[f"tail{j}_k"] = ("batch", None, "tp", None)
+            specs[f"tail{j}_v"] = ("batch", None, "tp", None)
+    return specs
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Prefill = full forward while collecting terminal recurrent states and
+    ring-layout local-attention caches."""
+    x, positions = dense.embed_inputs(cfg, params, batch)
+    pat = cfg.rglru.pattern
+    S = x.shape[1]
+    win = min(cfg.rglru.local_window, S)
+
+    def body(xc, lp):
+        outs = {}
+        for i, c in enumerate(pat):
+            sub = _sub(lp, i)
+            if c == "r":
+                y = L.rmsnorm(xc, sub["norm"], cfg.norm_eps)
+                xin = y @ sub["w_in"]
+                xconv, _ = L.causal_conv1d(xin, sub["conv_w"])
+                log_a, bx = _gates(sub, xconv)
+
+                def comb(e1, e2):
+                    return e1[0] + e2[0], jnp.exp(e2[0]) * e1[1] + e2[1]
+                _, hseq = jax.lax.associative_scan(comb, (log_a, bx), axis=1)
+                outs[f"s{i}_h"] = hseq[:, -1]
+                outs[f"s{i}_conv"] = xin[:, S - (cfg.rglru.conv_width - 1):]
+                xc, _ = rec_block(cfg, sub, xc)
+            else:
+                y = L.rmsnorm(xc, sub["attn_norm"], cfg.norm_eps)
+                _, k, v = dense._qkv(cfg, sub, y, positions)
+                kw = jnp.roll(k[:, S - win:], shift=S % win, axis=1)
+                vw = jnp.roll(v[:, S - win:], shift=S % win, axis=1)
+                outs[f"s{i}_k"], outs[f"s{i}_v"] = kw, vw
+                xc, _ = attn_block(cfg, sub, xc, positions)
+        return xc, outs
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    rem = cfg.num_layers % len(pat)
+    for j in range(rem):
+        tail = jax.tree.map(lambda a: a[0], params[f"tail{j}"])
+        if pat[j] == "r":
+            y = L.rmsnorm(x, tail["norm"], cfg.norm_eps)
+            xin = y @ tail["w_in"]
+            xconv, _ = L.causal_conv1d(xin, tail["conv_w"])
+            log_a, bx = _gates(tail, xconv)
+
+            def comb(e1, e2):
+                return e1[0] + e2[0], jnp.exp(e2[0]) * e1[1] + e2[1]
+            _, hseq = jax.lax.associative_scan(comb, (log_a, bx), axis=1)
+            cache[f"tail{j}_h"] = hseq[:, -1]
+            cache[f"tail{j}_conv"] = xin[:, S - (cfg.rglru.conv_width - 1):]
+            x, _ = rec_block(cfg, tail, x)
+        else:
+            y = L.rmsnorm(x, tail["attn_norm"], cfg.norm_eps)
+            _, k, v = dense._qkv(cfg, tail, y, positions)
+            cache[f"tail{j}_k"] = jnp.roll(k[:, S - win:], S % win, axis=1)
+            cache[f"tail{j}_v"] = jnp.roll(v[:, S - win:], S % win, axis=1)
+            x, _ = attn_block(cfg, tail, x, positions)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    pat = cfg.rglru.pattern
+
+    def body(xc, inp):
+        lp = inp
+        outs = {}
+        for i, c in enumerate(pat):
+            sub = _sub(lp, i)
+            if c == "r":
+                st = (lp[f"__c_s{i}_h"], lp[f"__c_s{i}_conv"])
+                xc, (h, conv) = rec_block(cfg, sub, xc, state=st, decode=True)
+                outs[f"s{i}_h"], outs[f"s{i}_conv"] = h, conv
+            else:
+                ck, cv = lp[f"__c_s{i}_k"], lp[f"__c_s{i}_v"]
+                xc, (ck, cv) = attn_block(cfg, sub, xc, None,
+                                          cache=(ck, cv), pos=pos)
+                outs[f"s{i}_k"], outs[f"s{i}_v"] = ck, cv
+        return xc, outs
+
+    xs = dict(params["layers"])
+    for name, arr in cache.items():
+        if not name.startswith("tail"):
+            xs[f"__c_{name}"] = arr
+    x, new_cache = jax.lax.scan(body, x, xs)
+    rem = cfg.num_layers % len(pat)
+    for j in range(rem):
+        tail = jax.tree.map(lambda a: a[0], params[f"tail{j}"])
+        if pat[j] == "r":
+            st = (cache[f"tail{j}_h"], cache[f"tail{j}_conv"])
+            x, (h, conv) = rec_block(cfg, tail, x, state=st, decode=True)
+            new_cache[f"tail{j}_h"], new_cache[f"tail{j}_conv"] = h, conv
+        else:
+            ck, cv = cache[f"tail{j}_k"], cache[f"tail{j}_v"]
+            x, (ck, cv) = attn_block(cfg, tail, x, None, cache=(ck, cv),
+                                     pos=pos)
+            new_cache[f"tail{j}_k"], new_cache[f"tail{j}_v"] = ck, cv
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, new_cache

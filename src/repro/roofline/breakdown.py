@@ -1,0 +1,95 @@
+"""Per-op byte/flop breakdown of a dry-run cell — the 'profile' used by the
+§Perf hypothesis loop (no wall-clock on CPU; structure is the profile)."""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from repro.roofline import hlo as H
+
+
+def breakdown(hlo_text: str, top: int = 25):
+    comps = H.parse_module(hlo_text)
+    shapes = H._global_shapes(comps)
+    entry = H._entry_name(comps, hlo_text)
+    # compute call multiplicity per computation
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps[cname]
+        for ins in comp.instrs:
+            trips = 1
+            subs = []
+            if ins.opcode == "while":
+                b = H._BODY_RE.search(ins.rhs)
+                c = H._COND_RE.search(ins.rhs)
+                if c and c.group(1) in comps:
+                    trips = H._trip_count(comps[c.group(1)])
+                if b:
+                    subs.append(b.group(1))
+            else:
+                for rgx in (H._CALLS_RE, H._TOAPPLY_RE):
+                    m = rgx.search(ins.rhs)
+                    if m:
+                        subs.append(m.group(1))
+            for s in subs:
+                if s in comps:
+                    mult[s] += mult[cname] * trips
+                    if s not in seen:
+                        seen.add(s)
+                        order.append(s)
+
+    per_op_bytes = defaultdict(float)
+    per_instr = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in H._FREE_OPS or op in ("while", "call", "conditional"):
+                continue
+            if op == "dynamic-update-slice":
+                upd = shapes.get(ins.operands[1]) if len(ins.operands) > 1 \
+                    else None
+                b = 2 * (upd.out_bytes if upd else ins.out_bytes)
+            elif op == "dynamic-slice":
+                b = 2 * ins.out_bytes
+            elif op == "fusion":
+                mm = H._CALLS_RE.search(ins.rhs)
+                sub = comps.get(mm.group(1)) if mm else None
+                if sub is not None:
+                    b = H.fusion_bytes(ins, sub, shapes)
+                else:
+                    b = ins.out_bytes + sum(shapes[o].out_bytes
+                                            for o in ins.operands
+                                            if o in shapes)
+            else:
+                b = ins.out_bytes + sum(shapes[o].out_bytes
+                                        for o in ins.operands if o in shapes)
+            per_op_bytes[op] += m * b
+            per_instr.append((m * b, m, ins.name, op,
+                              ins.rhs[:110]))
+    print("== bytes by opcode ==")
+    for op, b in sorted(per_op_bytes.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{op:28s} {b/1e9:10.2f} GB")
+    print("\n== top instructions (bytes x trips) ==")
+    for b, m, name, op, rhs in sorted(per_instr, key=lambda x: -x[0])[:top]:
+        print(f"{b/1e9:9.2f} GB x{m:7.0f} {op:22s} {rhs}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_file")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    breakdown(open(args.hlo_file).read(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,417 @@
+"""Structural cost analysis of post-optimization (per-device SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis visits each
+while-loop body ONCE, so anything under ``lax.scan`` (our layer stacks and
+microbatch accumulation) is undercounted by the trip count (up to ~700x for
+an 88-layer x 8-microbatch step). This module re-derives costs from the HLO
+text itself:
+
+  * builds the computation call graph (fusion/call/while/conditional),
+  * detects while trip counts from the loop condition's ``compare(iv,
+    constant(N)), direction=LT`` pattern,
+  * multiplies per-computation costs by call multiplicity,
+  * counts dot FLOPs exactly from shapes + contracting dims,
+  * counts HBM bytes as operands+outputs per instruction (fusion internals
+    excluded - they are register/VMEM-resident; dynamic-update-slice counts
+    only the updated window, matching in-place TPU semantics),
+  * sums collective operand bytes per opcode (also multiplied by trip
+    counts - a per-layer all-gather inside a scan really happens L times).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"^(?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([\w\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+# ops whose operands/outputs are not real HBM traffic
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id", "copy",
+             "copy-start", "copy-done",
+             # XLA:CPU legalizes bf16 compute via f32 round-trips; on TPU
+             # dtype converts fuse into producers/consumers.
+             "convert"}
+
+
+def _shape_dims(dims: str) -> Tuple[int, ...]:
+    if not dims.strip():
+        return ()
+    return tuple(int(d) for d in dims.split(","))
+
+
+def _tok_bytes(t: str, d: str) -> int:
+    n = 1
+    for x in _shape_dims(d):
+        n *= x
+    return n * DTYPE_BYTES.get(t, 4)
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_shape: Tuple[Tuple[str, Tuple[int, ...]], ...]
+    operands: List[str]
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and line.strip().endswith("{") and " = " not in line:
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        om = _OPCODE_RE.match(rhs)
+        opcode = om.group(1) if om else "?"
+        # output type(s): prefix of rhs before the opcode
+        head = rhs[: om.start(1)] if om else rhs.split(" ", 1)[0]
+        out_types = _TYPE_RE.findall(head)
+        out_bytes = sum(_tok_bytes(t, d) for t, d in out_types)
+        # operand names: inside the first paren group after opcode
+        p0 = rhs.find("(", om.end(1) if om else 0)
+        p1 = rhs.find(")", p0) if p0 >= 0 else -1
+        operands = _NAME_RE.findall(rhs[p0:p1]) if p0 >= 0 else []
+        cur.instrs.append(Instr(
+            name, opcode, out_bytes,
+            tuple((t, _shape_dims(d)) for t, d in out_types), operands, rhs))
+    return comps
+
+
+def _global_shapes(comps) -> Dict[str, Instr]:
+    out = {}
+    for c in comps.values():
+        for i in c.instrs:
+            out[i.name] = i
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Detect `iv < constant(N)` loop bounds; default 1 if unknown."""
+    const = None
+    for i in cond.instrs:
+        m = _CONST_RE.search(i.rhs)
+        if m:
+            const = int(m.group(1))
+    for i in cond.instrs:
+        if i.opcode == "compare" and "direction=LT" in i.rhs and const:
+            return const
+    return const or 1
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, Instr]) -> int:
+    out_elems = 1
+    for _, dims in instr.out_shape:
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+    if not m or not instr.operands:
+        return 2 * out_elems  # fallback
+    lhs = shapes.get(instr.operands[0])
+    if lhs is None or not lhs.out_shape:
+        return 2 * out_elems
+    lhs_dims = lhs.out_shape[0][1]
+    k = 1
+    for idx in _shape_dims(m.group(1)):
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
+    return 2 * out_elems * k
+
+
+def _conv_flops(instr: Instr, shapes: Dict[str, Instr]) -> int:
+    out_elems = 1
+    for _, dims in instr.out_shape:
+        for d in dims:
+            out_elems *= d
+    rhs_op = shapes.get(instr.operands[1]) if len(instr.operands) > 1 else None
+    kelems = 1
+    if rhs_op and rhs_op.out_shape:
+        for d in rhs_op.out_shape[0][1]:
+            kelems *= d
+    return 2 * out_elems * max(kelems, 1)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_n: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+
+def _analyze_comp(comp: Computation, comps, shapes, memo) -> Cost:
+    if comp.name in memo:
+        return memo[comp.name]
+    cost = Cost()
+    memo[comp.name] = cost  # guard cycles (shouldn't exist)
+    for i in comp.instrs:
+        op = i.opcode
+        if op in _FREE_OPS:
+            continue
+        coll_match = next((c for c in COLLECTIVES if op.startswith(c)), None)
+        if coll_match:
+            if op.endswith("-done"):
+                continue
+            in_bytes = sum(shapes[o].out_bytes for o in i.operands
+                           if o in shapes)
+            cost.coll[coll_match] += _wire_bytes(coll_match, i, in_bytes)
+            cost.coll_n[coll_match] += 1
+            cost.bytes += in_bytes + i.out_bytes
+            continue
+        if op == "fusion":
+            m = _CALLS_RE.search(i.rhs)
+            sub = comps.get(m.group(1)) if m else None
+            if sub is not None:
+                subcost = _analyze_comp(sub, comps, shapes, memo)
+                cost.flops += subcost.flops  # dots inside fusions
+                _merge_coll(cost, subcost, 1)
+                cost.bytes += fusion_bytes(i, sub, shapes)
+            else:
+                cost.bytes += i.out_bytes + sum(
+                    shapes[o].out_bytes for o in i.operands if o in shapes)
+            continue
+        if op == "while":
+            body = _BODY_RE.search(i.rhs)
+            cond = _COND_RE.search(i.rhs)
+            trips = 1
+            if cond and cond.group(1) in comps:
+                trips = _trip_count(comps[cond.group(1)])
+            if body and body.group(1) in comps:
+                sub = _analyze_comp(comps[body.group(1)], comps, shapes, memo)
+                cost.flops += trips * sub.flops
+                cost.bytes += trips * sub.bytes
+                _merge_coll(cost, sub, trips)
+            continue
+        if op in ("call", "custom-call", "conditional"):
+            for rgx in (_CALLS_RE, _TOAPPLY_RE):
+                m = rgx.search(i.rhs)
+                if m and m.group(1) in comps:
+                    sub = _analyze_comp(comps[m.group(1)], comps, shapes, memo)
+                    cost.flops += sub.flops
+                    cost.bytes += sub.bytes
+                    _merge_coll(cost, sub, 1)
+            cost.bytes += i.out_bytes + sum(
+                shapes[o].out_bytes for o in i.operands if o in shapes)
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(i, shapes)
+            cost.bytes += i.out_bytes + sum(
+                shapes[o].out_bytes for o in i.operands if o in shapes)
+            continue
+        if op == "convolution":
+            cost.flops += _conv_flops(i, shapes)
+            cost.bytes += i.out_bytes + sum(
+                shapes[o].out_bytes for o in i.operands if o in shapes)
+            continue
+        if op == "dynamic-update-slice":
+            upd = shapes.get(i.operands[1]) if len(i.operands) > 1 else None
+            ub = upd.out_bytes if upd else i.out_bytes
+            cost.bytes += 2 * ub  # in-place window write
+            continue
+        if op == "dynamic-slice":
+            cost.bytes += 2 * i.out_bytes
+            continue
+        # default: elementwise / reduce / copy etc.
+        cost.bytes += i.out_bytes + sum(
+            shapes[o].out_bytes for o in i.operands if o in shapes)
+        if op in ("reduce", "reduce-window", "sort", "scatter", "gather",
+                  "select-and-scatter"):
+            pass
+    return cost
+
+
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+
+def _group_size(instr: Instr) -> int:
+    m = _GROUP_RE.search(instr.rhs)
+    if not m:
+        return 2
+    return max(len(m.group(1).split(",")), 1)
+
+
+def _wire_bytes(kind: str, instr: Instr, in_bytes: int) -> float:
+    """Per-device ICI wire traffic (ring algorithms):
+      all-gather:          out*(N-1)/N  (input is the shard)
+      reduce-scatter:      in*(N-1)/N
+      all-reduce:          2*in*(N-1)/N
+      all-to-all:          in*(N-1)/N
+      collective-permute:  in
+    """
+    n = _group_size(instr)
+    f = (n - 1) / n
+    if kind == "all-gather":
+        return instr.out_bytes * f
+    if kind == "reduce-scatter":
+        return in_bytes * f
+    if kind == "all-reduce":
+        return 2 * in_bytes * f
+    if kind == "all-to-all":
+        return in_bytes * f
+    return in_bytes  # collective-permute
+
+
+def _fusion_root(comp: Optional[Computation]):
+    if comp is None or not comp.instrs:
+        return None
+    return comp.instrs[-1]  # ROOT is the last instruction in HLO text
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def fusion_bytes(instr: Instr, sub: Computation, shapes) -> int:
+    """HBM traffic of one fusion call with window-access awareness:
+
+      * a fusion parameter consumed ONLY by dynamic-slice ops is billed at
+        the window sizes (TPU reads just the windows),
+      * a parameter that is only the in-place base of the root
+        dynamic-update-slice is billed 0 (aliased),
+      * a root dynamic-update-slice (possibly behind convert/copy) bills
+        the update window, not the full output.
+    """
+    sub_map = {i.name: i for i in sub.instrs}
+    uses: dict = defaultdict(list)
+    for ins in sub.instrs:
+        for o in ins.operands:
+            uses[o].append(ins)
+    PASS = ("convert", "copy", "bitcast")
+
+    def effective_uses(name):
+        """Consumers, looking through dtype/layout pass-through ops."""
+        out = []
+        stack = list(uses.get(name, []))
+        seen = set()
+        while stack:
+            c = stack.pop()
+            if c.name in seen:
+                continue
+            seen.add(c.name)
+            if c.opcode in PASS:
+                stack.extend(uses.get(c.name, []))
+            else:
+                out.append(c)
+        return out
+
+    def resolve(name):
+        """Producer, looking through pass-through ops."""
+        ins = sub_map.get(name)
+        while ins is not None and ins.opcode in PASS and ins.operands:
+            ins = sub_map.get(ins.operands[0])
+        return ins
+
+    root = resolve(sub.instrs[-1].name) or sub.instrs[-1]
+    root_is_dus = root.opcode == "dynamic-update-slice"
+    dus_base = resolve(root.operands[0]) if root_is_dus and root.operands \
+        else None
+
+    total = 0
+    for p in sub.instrs:
+        if p.opcode != "parameter":
+            continue
+        m = _PARAM_IDX_RE.search(p.rhs)
+        k = int(m.group(1)) if m else -1
+        opname = instr.operands[k] if 0 <= k < len(instr.operands) else None
+        full = shapes[opname].out_bytes if opname in shapes else p.out_bytes
+        cons = effective_uses(p.name)
+        if root_is_dus and dus_base is not None and dus_base.name == p.name \
+                and all(c is root for c in cons):
+            continue  # in-place DUS base: aliased, no traffic
+        if cons and all(c.opcode == "dynamic-slice" for c in cons):
+            # windowed reads only: bill window sizes
+            total += sum(c.out_bytes for c in cons)
+        else:
+            total += full
+    if root_is_dus:
+        upd = (resolve(root.operands[1]) if len(root.operands) > 1 else None)
+        total += upd.out_bytes if upd is not None else instr.out_bytes
+    else:
+        total += instr.out_bytes
+    return total
+
+
+def _merge_coll(dst: Cost, src: Cost, mult: float):
+    for k, v in src.coll.items():
+        dst.coll[k] += mult * v
+    for k, v in src.coll_n.items():
+        dst.coll_n[k] += mult * v
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+def structural_cost(hlo_text: str) -> dict:
+    """Full-module cost with loop trip counts applied."""
+    comps = parse_module(hlo_text)
+    shapes = _global_shapes(comps)
+    entry = _entry_name(comps, hlo_text)
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    memo: dict = {}
+    cost = _analyze_comp(comps[entry], comps, shapes, memo)
+    coll_total = sum(cost.coll.values())
+    out = {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "collective_total": coll_total,
+        "collective_ops": sum(cost.coll_n.values()),
+    }
+    for k, v in cost.coll.items():
+        out[f"coll_{k}"] = v
+        out[f"n_{k}"] = cost.coll_n[k]
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Back-compat wrapper returning the collective summary only."""
+    c = structural_cost(hlo_text)
+    res = {k[5:]: v for k, v in c.items() if k.startswith("coll_")}
+    res["total"] = c["collective_total"]
+    res["ops"] = c["collective_ops"]
+    for k, v in c.items():
+        if k.startswith("n_"):
+            res[k] = v
+    return res

@@ -1,0 +1,102 @@
+"""Aggregate dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+HDRS = ["arch", "shape", "mesh", "chips", "t_compute_s", "t_memory_s",
+        "t_collective_s", "dominant", "model_flops", "hlo_flops_total",
+        "useful_ratio", "roofline_frac", "peak_GB_per_dev", "fits_16g"]
+
+
+def load(outdir: Path):
+    rows = []
+    for f in sorted(outdir.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "error": r.get("error")})
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "chips": r["chips"],
+            "t_compute_s": r["t_compute_s"],
+            "t_memory_s": r["t_memory_s"],
+            "t_collective_s": r["t_collective_s"],
+            "dominant": r["dominant"],
+            "model_flops": r["model_flops"],
+            "hlo_flops_total": r["hlo_flops_total"],
+            "useful_ratio": r.get("useful_flops_ratio"),
+            "roofline_frac": r.get("roofline_fraction"),
+            "peak_GB_per_dev": (r.get("peak_bytes_per_device") or 0) / 1e9,
+            "fits_16g": r.get("fits_hbm_16g"),
+        })
+    return rows
+
+
+def fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def markdown(rows, mesh="pod1"):
+    out = ["| " + " | ".join(HDRS) + " |",
+           "|" + "---|" * len(HDRS)]
+    for r in rows:
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        out.append("| " + " | ".join(fmt(r.get(h.replace("frac", "frac"),
+                                               r.get(h, "")))
+                                     for h in [
+            "arch", "shape", "mesh", "chips", "t_compute_s", "t_memory_s",
+            "t_collective_s", "dominant", "model_flops", "hlo_flops_total",
+            "useful_ratio", "roofline_frac", "peak_GB_per_dev", "fits_16g"])
+            + " |")
+    return "\n".join(out)
+
+
+def interesting(rows):
+    """Pick the three hillclimb cells: worst-fitting / worst roofline,
+    most collective-bound, most representative of the paper (decode on
+    the sLM-class generator MobileRAG serves)."""
+    ok = [r for r in rows if r.get("mesh") == "pod1" and "error" not in r
+          and r.get("roofline_frac")]
+    over = [r for r in ok if not r.get("fits_16g", True)]
+    worst = max(over, key=lambda r: r["peak_GB_per_dev"]) if over else \
+        min(ok, key=lambda r: r["roofline_frac"])
+    coll = max(ok, key=lambda r: r["t_collective_s"] /
+               max(r["t_compute_s"], r["t_memory_s"], 1e-12))
+    rep = next((r for r in ok if r["arch"] == "h2o_danube_1_8b"
+                and r["shape"] == "decode_32k"), ok[0])
+    return {"worst_fit_or_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--csv", default="")
+    args = ap.parse_args()
+    rows = load(Path(args.dir))
+    print(markdown(rows, "pod1"))
+    print()
+    print("## multi-pod (pod2)")
+    print(markdown(rows, "pod2"))
+    sel = interesting(rows)
+    print()
+    for why, r in sel.items():
+        print(f"hillclimb[{why}]: {r['arch']} x {r['shape']} "
+              f"(dominant={r['dominant']}, frac={fmt(r['roofline_frac'])})")
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=HDRS + ["error"],
+                               extrasaction="ignore")
+            w.writeheader()
+            w.writerows(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Embedding backends for the RAG pipelines.
+
+ModelEmbedder: the gte-small-style bidirectional encoder (mean-pooled,
+unit-norm), jitted, batched — the paper's embedding model.
+HashEmbedder: deterministic hashed bag-of-words + fixed random projection,
+unit-norm — fast CPU proxy with real lexical-overlap semantics, used by
+tests and benchmarks where model quality is not the subject.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.data.tokenizer import HashTokenizer
+from repro.models import model
+
+
+class HashEmbedder:
+    def __init__(self, dim: int = 384, vocab: int = 32768, seed: int = 0):
+        self.dim = dim
+        self.vocab = vocab
+        self.tok = HashTokenizer(vocab)
+        rng = np.random.default_rng(seed)
+        self.proj = rng.normal(0, 1 / np.sqrt(dim),
+                               (vocab, dim)).astype(np.float32)
+        self.idf = np.ones(vocab, np.float32)
+        self.fitted = False
+
+    def fit(self, texts: List[str]) -> "HashEmbedder":
+        df = np.zeros(self.vocab, np.float32)
+        for t in texts:
+            for i in set(self.tok.encode(t)):
+                df[i] += 1
+        n = max(len(texts), 1)
+        self.idf = np.log((n + 1) / (df + 1)) + 1.0
+        self.fitted = True
+        return self
+
+    def __call__(self, texts: List[str]) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            ids = self.tok.encode(t)
+            if ids:
+                ids = np.asarray(ids)
+                v = (self.proj[ids] * self.idf[ids][:, None]).sum(0)
+                n = np.linalg.norm(v)
+                out[i] = v / n if n > 0 else v
+        return out
+
+
+class ModelEmbedder:
+    def __init__(self, cfg: ModelConfig, params, tokenizer: HashTokenizer,
+                 max_len: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.tok = tokenizer
+        self.max_len = max_len
+        self._encode = jax.jit(lambda p, b: model.encode(cfg, p, b))
+
+    @property
+    def dim(self) -> int:
+        return self.cfg.d_model
+
+    def __call__(self, texts: List[str]) -> np.ndarray:
+        toks = self.tok.encode_batch(texts, self.max_len)
+        mask = (toks != self.tok.pad_id).astype(np.float32)
+        out = self._encode(self.params, {"tokens": jnp.asarray(toks),
+                                         "mask": jnp.asarray(mask)})
+        return np.asarray(out)

@@ -1,0 +1,118 @@
+"""Generation engine: jitted prefill + decode with dynamic (wave) batching.
+
+Requests are grouped into fixed-size waves (padded to the wave's max prompt
+length); the wave decodes until every member finishes, then the next wave
+is formed — iteration-level batching without per-slot position plumbing.
+A wave whose decode step exceeds its latency budget is *hedged*: the
+scheduler re-dispatches the remaining requests (straggler mitigation; see
+scheduler.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model
+
+
+@dataclass
+class GenResult:
+    tokens: List[int]
+    prompt_len: int
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.prefill_s
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 eos_id: int = 2, prefill_chunk: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(cfg, p, b))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(cfg, p, c, t, pos),
+            donate_argnums=(1,))
+
+    def _grow_cache(self, cache, b: int):
+        """Caches come back sized to the prompt; decode needs max_len."""
+        def grow(x):
+            if x.ndim in (4, 5) and x.shape[2] < self.max_len:
+                pad = self.max_len - x.shape[2]
+                z = jnp.zeros(x.shape[:2] + (pad,) + x.shape[3:], x.dtype)
+                return jnp.concatenate([x, z], axis=2)
+            return x
+        if self.cfg.family in ("dense", "moe", "encdec"):
+            grown = dict(cache)
+            for k in ("k", "v", "k_s", "v_s"):
+                if k in grown and not k.startswith("cross"):
+                    grown[k] = grow(grown[k])
+            return grown
+        return cache  # state caches (mamba2/rglru) are fixed-size
+
+    def generate(self, prompts: List[np.ndarray], max_new: int = 32,
+                 greedy: bool = True, seed: int = 0) -> List[GenResult]:
+        """Length-buckets prompts, runs each bucket as one wave (equal
+        lengths keep causal semantics exact without pad masking)."""
+        buckets: dict[int, List[int]] = {}
+        for i, p in enumerate(prompts):
+            buckets.setdefault(len(p), []).append(i)
+        results: List[Optional[GenResult]] = [None] * len(prompts)
+        for plen, idxs in sorted(buckets.items()):
+            wave = [prompts[i] for i in idxs]
+            for i, r in zip(idxs, self.generate_wave(wave, max_new,
+                                                     greedy, seed)):
+                results[i] = r
+        return results
+
+    def generate_wave(self, prompts: List[np.ndarray], max_new: int = 32,
+                      greedy: bool = True, seed: int = 0) -> List[GenResult]:
+        """prompts: list of 1-D int32 token arrays of EQUAL length."""
+        b = len(prompts)
+        plen = max(len(p) for p in prompts)
+        assert all(len(p) == plen for p in prompts), \
+            "generate_wave requires equal-length prompts (use generate())"
+        toks = np.stack([np.asarray(p, np.int32) for p in prompts])
+        batch = {"tokens": jnp.asarray(toks)}
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, batch)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+        cache = self._grow_cache(cache, b)
+
+        outs = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        key = jax.random.PRNGKey(seed)
+        t1 = time.perf_counter()
+        tok = None
+        for step in range(max_new):
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits)[:, None]
+            tok_np = np.asarray(tok)[:, 0]
+            for i in range(b):
+                if not done[i]:
+                    outs[i].append(int(tok_np[i]))
+                    if tok_np[i] == self.eos_id:
+                        done[i] = True
+            if done.all():
+                break
+            pos = jnp.int32(min(plen + step, self.max_len - 1))
+            logits, cache = self._decode(self.params, cache, tok, pos)
+        t_decode = time.perf_counter() - t1
+        return [GenResult(outs[i], len(prompts[i]), t_prefill, t_decode)
+                for i in range(b)]

@@ -1,0 +1,205 @@
+"""The four RAG pipelines the paper compares (Figure 1, Table 5):
+
+  Naive-RAG    : vector search -> full docs -> sLM.
+  Advanced-RAG : vector search (wider) -> re-ranker -> full docs -> sLM.
+  EdgeRAG      : IVF-DISK index + embedding cache -> full docs -> sLM.
+  MobileRAG    : EcoVector -> SCR (condense + reorder) -> sLM.
+
+Each `answer()` returns the final prompt, timing breakdown, token counts,
+and the paper-model TTFT/energy estimates (Table 6 speeds; §3.4.3 power),
+so Table-5-style comparisons run offline without a phone.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.analytical import HW, energy_mj
+from repro.core.baselines import IVFDisk
+from repro.core.ecovector import EcoVector
+from repro.core.scr import SCRConfig, SCRResult, apply_scr, build_prompt
+
+# Table 6: measured on Galaxy S24
+SLM_SPEEDS = {
+    "qwen25_0_5b": {"prompt_tps": 90.0, "gen_tps": 14.5, "batt_pct_1k": 0.10},
+    "qwen25_1_5b": {"prompt_tps": 50.0, "gen_tps": 10.0, "batt_pct_1k": 0.30},
+    "deepseek_r1_1_5b": {"prompt_tps": 35.0, "gen_tps": 9.0,
+                         "batt_pct_1k": 0.36},
+}
+BATTERY_J = 4000e-3 * 3600 * 3.8  # 4000 mAh at 3.8 V -> ~54.7 kJ
+
+
+@dataclass
+class RAGAnswer:
+    prompt: str
+    doc_ids: List[int]
+    retrieval_s: float
+    post_s: float                   # re-rank / SCR time
+    prompt_tokens: int
+    ttft_model_s: float             # retrieval + post + prompt eval (model)
+    energy_model_j: float
+    scr: Optional[SCRResult] = None
+    generated: Optional[str] = None
+
+
+def _tok_count(text: str) -> int:
+    return len(text.split())
+
+
+class RAGBase:
+    name = "base"
+
+    def __init__(self, docs: Sequence[str], embed: Callable, *,
+                 top_k: int = 3, slm: str = "qwen25_0_5b", index=None,
+                 generator: Optional[Callable] = None):
+        self.docs = list(docs)
+        self.embed = embed
+        self.top_k = top_k
+        self.slm = SLM_SPEEDS[slm]
+        self.generator = generator
+        if hasattr(embed, "fit") and not getattr(embed, "fitted", True):
+            embed.fit(self.docs)
+        t0 = time.perf_counter()
+        self.doc_vecs = np.asarray(embed(self.docs), np.float32)
+        self.index = index or self._build_index()
+        self.build_s = time.perf_counter() - t0
+
+    def _build_index(self):
+        ev = EcoVector(self.doc_vecs.shape[1],
+                       n_clusters=max(4, len(self.docs) // 64))
+        return ev.build(self.doc_vecs)
+
+    def _retrieve(self, qv, k):
+        ids, _ = self.index.search(qv, k=k, n_probe=4)
+        return [int(i) for i in ids if 0 <= int(i) < len(self.docs)]
+
+    def _make_prompt(self, query: str, docs: List[str],
+                     order: List[int]) -> str:
+        ctx = "\n\n".join(f"[Doc {order[i] + 1}] {d}"
+                          for i, d in enumerate(docs))
+        return f"Context:\n{ctx}\n\nQuestion: {query}\nAnswer:"
+
+    def _finalize(self, query, prompt, doc_ids, t_ret, t_post,
+                  scr=None) -> RAGAnswer:
+        ptok = _tok_count(prompt)
+        t_eval = ptok / self.slm["prompt_tps"]
+        ttft = t_ret + t_post + t_eval
+        # energy: retrieval+post as CPU time (paper §3.4.3) + LM cost from
+        # the battery-impact table
+        e_cpu = energy_mj((t_ret + t_post) * 1e3, 0.0) * 1e-3
+        e_lm = ptok / 1000.0 * self.slm["batt_pct_1k"] / 100.0 * BATTERY_J
+        gen = None
+        if self.generator is not None:
+            gen = self.generator(prompt)
+        return RAGAnswer(prompt, doc_ids, t_ret, t_post, ptok, ttft,
+                         e_cpu + e_lm, scr, gen)
+
+    def answer(self, query: str) -> RAGAnswer:
+        raise NotImplementedError
+
+
+class NaiveRAG(RAGBase):
+    name = "Naive-RAG"
+
+    def answer(self, query: str) -> RAGAnswer:
+        t0 = time.perf_counter()
+        qv = np.asarray(self.embed([query]))[0]
+        ids = self._retrieve(qv, self.top_k)
+        t_ret = time.perf_counter() - t0
+        prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
+        return self._finalize(query, prompt, ids, t_ret, 0.0)
+
+
+class AdvancedRAG(RAGBase):
+    """Re-Ranker: re-scores a wider candidate set with a second pass
+    (max sentence similarity — the lightweight stand-in for the re-rank
+    model, which adds the post-retrieval latency the paper measures)."""
+    name = "Advanced-RAG"
+
+    def answer(self, query: str) -> RAGAnswer:
+        t0 = time.perf_counter()
+        qv = np.asarray(self.embed([query]))[0]
+        ids = self._retrieve(qv, self.top_k * 3)
+        t_ret = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        from repro.core.scr import split_sentences
+        scores = []
+        for i in ids:
+            sents = split_sentences(self.docs[i]) or [self.docs[i]]
+            sv = np.asarray(self.embed(sents))
+            scores.append(float(np.max(sv @ qv)))
+        order = np.argsort(scores)[::-1][: self.top_k]
+        ids = [ids[i] for i in order]
+        t_post = time.perf_counter() - t1
+        prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
+        return self._finalize(query, prompt, ids, t_ret, t_post)
+
+
+class EdgeRAG(RAGBase):
+    """IVF-DISK retrieval + embedding cache (the paper's EdgeRAG baseline)."""
+    name = "EdgeRAG"
+
+    def _build_index(self):
+        idx = IVFDisk(self.doc_vecs.shape[1],
+                      n_clusters=max(4, len(self.docs) // 64))
+        idx.build(self.doc_vecs)
+        self._qcache: Dict[str, np.ndarray] = {}
+        return idx
+
+    def answer(self, query: str) -> RAGAnswer:
+        t0 = time.perf_counter()
+        if query in self._qcache:
+            qv = self._qcache[query]
+        else:
+            qv = np.asarray(self.embed([query]))[0]
+            self._qcache[query] = qv
+        ids = self._retrieve(qv, self.top_k)
+        t_ret = time.perf_counter() - t0
+        prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
+        return self._finalize(query, prompt, ids, t_ret, 0.0)
+
+
+class MobileRAG(RAGBase):
+    """EcoVector + SCR (the paper's method)."""
+    name = "MobileRAG"
+
+    def __init__(self, *args, scr: SCRConfig = SCRConfig(), **kw):
+        super().__init__(*args, **kw)
+        self.scr_cfg = scr
+
+    def answer(self, query: str) -> RAGAnswer:
+        t0 = time.perf_counter()
+        qv = np.asarray(self.embed([query]))[0]
+        ids = self._retrieve(qv, self.top_k)
+        t_ret = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        res = apply_scr(query, [self.docs[i] for i in ids], self.embed,
+                        self.scr_cfg)
+        t_post = time.perf_counter() - t1
+        prompt = build_prompt(query, res)
+        ids = [ids[i] for i in res.order]
+        return self._finalize(query, prompt, ids, t_ret, t_post, scr=res)
+
+
+PIPELINES = {
+    "naive": NaiveRAG,
+    "advanced": AdvancedRAG,
+    "edge": EdgeRAG,
+    "mobile": MobileRAG,
+}
+
+
+def accuracy(pipe: RAGBase, examples, max_q: Optional[int] = None) -> float:
+    """Answer-in-final-context accuracy: the planted answer sentence must
+    survive retrieval *and* (for MobileRAG) SCR condensation. This is the
+    retrieval-quality proxy for Table 5 accuracy (no on-device sLM here)."""
+    n = ok = 0
+    for ex in examples[:max_q]:
+        ans = pipe.answer(ex.question)
+        if ex.answer.lower() in ans.prompt.lower():
+            ok += 1
+        n += 1
+    return ok / max(n, 1)

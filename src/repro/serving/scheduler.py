@@ -1,0 +1,126 @@
+"""Request scheduler: dynamic length-bucketed batching, latency budgets,
+hedged re-dispatch (straggler mitigation), replica failover.
+
+Model: N replicas (engine callables). Requests are queued; the scheduler
+forms waves per replica. If a replica misses its p99 deadline, the wave is
+re-dispatched to a healthy replica (the first response wins); replicas
+that miss `max_strikes` deadlines are marked unhealthy and drained — the
+serve-side analogue of the training-side RestartManager.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int = 32
+    submitted_s: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: List[int]
+    replica: int
+    latency_s: float
+    hedged: bool = False
+
+
+@dataclass
+class ReplicaState:
+    healthy: bool = True
+    strikes: int = 0
+    served: int = 0
+
+
+class Scheduler:
+    def __init__(self, replicas: List[Callable], *, max_wave: int = 8,
+                 deadline_s: float = 60.0, max_strikes: int = 2):
+        """replicas: callables (prompts, max_new) -> list of token lists.
+        A replica that raises or exceeds the deadline gets a strike."""
+        self.replicas = replicas
+        self.state = [ReplicaState() for _ in replicas]
+        self.max_wave = max_wave
+        self.deadline_s = deadline_s
+        self.max_strikes = max_strikes
+        self.queue: List[Request] = []
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def _healthy(self) -> List[int]:
+        return [i for i, s in enumerate(self.state) if s.healthy]
+
+    def _form_wave(self) -> List[Request]:
+        if not self.queue:
+            return []
+        # bucket by prompt length; take the largest bucket first
+        buckets: Dict[int, List[Request]] = {}
+        for r in self.queue:
+            buckets.setdefault(len(r.prompt), []).append(r)
+        length = max(buckets, key=lambda k: len(buckets[k]))
+        wave = buckets[length][: self.max_wave]
+        for r in wave:
+            self.queue.remove(r)
+        return wave
+
+    def _dispatch(self, wave: List[Request], ridx: int,
+                  hedged: bool) -> Optional[List[Completion]]:
+        t0 = time.perf_counter()
+        try:
+            outs = self.replicas[ridx]([r.prompt for r in wave],
+                                       max(r.max_new for r in wave))
+        except Exception:
+            self.state[ridx].strikes += 1
+            if self.state[ridx].strikes >= self.max_strikes:
+                self.state[ridx].healthy = False
+            return None
+        dt = time.perf_counter() - t0
+        if dt > self.deadline_s:
+            self.state[ridx].strikes += 1
+            if self.state[ridx].strikes >= self.max_strikes:
+                self.state[ridx].healthy = False
+            return None  # hedge: caller re-dispatches
+        self.state[ridx].served += len(wave)
+        return [Completion(r.rid, list(o), ridx,
+                           time.perf_counter() - r.submitted_s, hedged)
+                for r, o in zip(wave, outs)]
+
+    def run(self) -> List[Completion]:
+        done: List[Completion] = []
+        rr = 0
+        while self.queue:
+            wave = self._form_wave()
+            if not wave:
+                break
+            healthy = self._healthy()
+            if not healthy:
+                raise RuntimeError("all replicas unhealthy")
+            tried = []
+            completed = None
+            hedged = False
+            for attempt in range(len(healthy)):
+                ridx = healthy[(rr + attempt) % len(healthy)]
+                if ridx in tried:
+                    continue
+                tried.append(ridx)
+                completed = self._dispatch(wave, ridx, hedged)
+                if completed is not None:
+                    break
+                hedged = True  # re-dispatch to the next replica
+            rr += 1
+            if completed is None:
+                raise RuntimeError("wave failed on every healthy replica")
+            done.extend(completed)
+        return done

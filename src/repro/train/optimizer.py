@@ -1,0 +1,132 @@
+"""AdamW with ZeRO-sharded state and optional quantised moments.
+
+`moments_dtype="int8"` stores the first moment as {"q": int8 param-shaped,
+"s": f32 per-row scales} (~1.03 B/param) and the second moment in bfloat16
+(2 B/param): v must keep its dynamic range — linear int8 flushes small
+second moments to zero and 1/sqrt(v) explodes. Net 3.06 B/param vs 8 —
+the memory trick that lets the 100B+ architectures keep full optimizer
+state on a single 256-chip pod. The q tensor shares the parameter's
+sharding spec exactly (scales drop the last axis), so ZeRO-3 is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+# ------------------------------------------------------- int8 moment codec
+
+
+def quantize_rows(x):
+    """Symmetric int8 quantisation with per-row (last-axis) f32 scales."""
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(x / jnp.maximum(s, 1e-20)).astype(jnp.int8)
+    return {"q": q, "s": s}
+
+
+def dequantize_rows(qt):
+    return qt["q"].astype(jnp.float32) * qt["s"]
+
+
+def _is_q(x):
+    return isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+
+
+# ------------------------------------------------------------- adamw
+
+
+def lr_schedule(cfg: TrainConfig, max_steps: int = 10000) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = cfg.learning_rate * step / jnp.maximum(cfg.warmup_steps, 1)
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(max_steps - cfg.warmup_steps, 1), 0, 1)
+        cos = cfg.learning_rate * (0.1 + 0.9 * 0.5 *
+                                   (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr
+
+
+def init_opt_state(params, moments_dtype: str = "float32"):
+    def mk_m(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if moments_dtype == "int8":
+            return quantize_rows(z)
+        return z.astype(moments_dtype)
+
+    def mk_v(p):
+        if moments_dtype == "int8":
+            return jnp.zeros(p.shape, jnp.bfloat16)
+        return jnp.zeros(p.shape, jnp.float32).astype(moments_dtype)
+
+    return {
+        "m": jax.tree.map(mk_m, params),
+        "v": jax.tree.map(mk_v, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs_tree, moments_dtype: str = "float32"):
+    """Logical-axis specs for the optimizer state, derived from params."""
+    def mk_m(spec):
+        if moments_dtype == "int8":
+            return {"q": spec, "s": tuple(spec[:-1]) + (None,)}
+        return spec
+    is_spec = lambda x: isinstance(x, tuple)  # noqa: E731
+    return {
+        "m": jax.tree.map(mk_m, param_specs_tree, is_leaf=is_spec),
+        "v": jax.tree.map(lambda s: s, param_specs_tree, is_leaf=is_spec),
+        "step": (),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: TrainConfig, params, grads, opt_state, lr_fn,
+                 moments_dtype: str = "float32"):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    lr = lr_fn(step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = dequantize_rows(m) if _is_q(m) else m.astype(jnp.float32)
+        vf = dequantize_rows(v) if _is_q(v) else v.astype(jnp.float32)
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * jnp.square(g)
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        new_p = (p.astype(jnp.float32) -
+                 lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+        if moments_dtype == "int8":
+            return (new_p.astype(p.dtype), quantize_rows(mf),
+                    vf.astype(jnp.bfloat16))
+        return (new_p.astype(p.dtype), mf.astype(moments_dtype),
+                vf.astype(moments_dtype))
+
+    is_q = _is_q
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(opt_state["m"], is_leaf=is_q)[0]
+    flat_v = jax.tree.flatten(opt_state["v"], is_leaf=is_q)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    mdef = jax.tree.structure(opt_state["m"], is_leaf=is_q)
+    new_m = jax.tree.unflatten(mdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(mdef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

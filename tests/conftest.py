@@ -1,0 +1,17 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# *only* for the dry-run, set inside repro.launch.dryrun).
+os.environ.pop("XLA_FLAGS", None)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

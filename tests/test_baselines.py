@@ -1,0 +1,74 @@
+"""All seven baseline indexes: recall, memory ordering, updates, stats."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import ALL_BASELINES, make_index
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(6, 24)) * 5
+    X = np.concatenate([c + rng.normal(size=(120, 24))
+                        for c in centers]).astype(np.float32)
+    Q = X[:10] + 0.01 * rng.normal(size=(10, 24)).astype(np.float32)
+    return X, Q
+
+
+def gt(X, q, k=10):
+    return set(np.argsort(np.sum((X - q) ** 2, 1))[:k])
+
+
+KW = {"IVF": {"n_clusters": 12}, "IVFPQ": {"n_clusters": 12, "m_pq": 4},
+      "HNSW": {}, "HNSWPQ": {"m_pq": 4}, "IVF-DISK": {"n_clusters": 12},
+      "IVFPQ-DISK": {"n_clusters": 12, "m_pq": 4},
+      "IVF-HNSW": {"n_clusters": 12}, "EcoVector": {"n_clusters": 12}}
+
+
+@pytest.mark.parametrize("name", ALL_BASELINES)
+def test_recall_reasonable(name, data):
+    X, Q = data
+    idx = make_index(name, 24, **KW[name]).build(X)
+    rec = [len(set(map(int, idx.search(q, k=10, n_probe=6)[0])) & gt(X, q))
+           / 10 for q in Q]
+    floor = 0.4 if "PQ" in name else 0.8  # quantised variants trade recall
+    assert np.mean(rec) >= floor, (name, np.mean(rec))
+
+
+@pytest.mark.parametrize("name", ["IVF", "IVF-DISK", "EcoVector"])
+def test_insert_delete(name, data):
+    X, _ = data
+    idx = make_index(name, 24, **KW[name]).build(X)
+    idx.insert(50_000, X[0] + 0.001)
+    ids, _ = idx.search(X[0], k=5, n_probe=6)
+    assert 50_000 in set(map(int, ids))
+    idx.delete(50_000)
+    ids, _ = idx.search(X[0], k=10, n_probe=6)
+    assert 50_000 not in set(map(int, ids))
+
+
+def test_memory_ordering_matches_paper(data):
+    """Fig. 6: disk-based variants' RAM << in-RAM variants; EcoVector close
+    to IVF-DISK."""
+    X, _ = data
+    ram = {}
+    for name in ALL_BASELINES:
+        idx = make_index(name, 24, **KW[name]).build(X)
+        ram[name] = idx.ram_bytes()
+    assert ram["IVF-DISK"] < ram["IVF"]
+    assert ram["EcoVector"] < ram["HNSW"]
+    # At this toy scale (720 pts) per-cluster pickle overhead can rival the
+    # raw vectors, so allow slack; the strict EcoVector < IVF ordering is
+    # asymptotic (test_property.test_analytical_memory_ordering + Fig 6
+    # bench at 1M-scale model numbers).
+    assert ram["EcoVector"] < 1.5 * ram["IVF"]
+
+
+def test_disk_variants_report_disk_traffic(data):
+    X, Q = data
+    for name in ["IVF-DISK", "IVFPQ-DISK", "IVF-HNSW"]:
+        idx = make_index(name, 24, **KW[name]).build(X)
+        idx.stats.reset()
+        idx.search(Q[0], k=5, n_probe=3)
+        assert idx.stats.disk_loads == 3
+        assert idx.stats.disk_bytes > 0

@@ -1,0 +1,128 @@
+"""HNSW structural invariants + Algorithm 1/2 behaviour, including
+hypothesis property tests over random insert/delete interleavings."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hnsw import HNSW
+
+
+def build(n=100, d=16, seed=0, M=8):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    g = HNSW(d, M=M, ef_construction=40, seed=seed, max_elements=n)
+    for i in range(n):
+        g.insert(i, X[i])
+    return g, X
+
+
+def check_invariants(g: HNSW):
+    cap0, cap = g.M0, g.M
+    for level, layer in enumerate(g.neighbors):
+        capl = cap0 if level == 0 else cap
+        for v, nbrs in layer.items():
+            if g.is_deleted.get(v, False):
+                continue
+            assert len(nbrs) <= capl, f"degree overflow at level {level}"
+            assert v not in nbrs, "self-loop"
+            for nb in nbrs:
+                assert not g.is_deleted.get(nb, True), \
+                    f"link to deleted node {nb}"
+                assert g.levels.get(nb, -1) >= level, \
+                    "link to node below its level"
+    if g.entry_point != -1:
+        assert not g.is_deleted.get(g.entry_point, True)
+        assert g.levels[g.entry_point] >= g.max_level
+
+
+def test_build_invariants():
+    g, _ = build(150)
+    check_invariants(g)
+
+
+def test_search_exactness_on_small_set():
+    g, X = build(80)
+    for qi in range(10):
+        ids, _ = g.search(X[qi], k=1, ef_search=64)
+        assert ids[0] == qi  # the point itself is its own 1-NN
+
+
+def test_recall_at_10():
+    g, X = build(300)
+    rng = np.random.default_rng(1)
+    Q = X[rng.choice(300, 20)] + 0.01 * rng.normal(size=(20, 16)).astype(
+        np.float32)
+    rec = []
+    for q in Q:
+        d = np.sum((X - q) ** 2, 1)
+        gt = set(np.argsort(d)[:10])
+        ids, _ = g.search(q, k=10, ef_search=64)
+        rec.append(len(set(map(int, ids)) & gt) / 10)
+    assert np.mean(rec) > 0.9
+
+
+def test_delete_removes_and_reconnects():
+    g, X = build(100)
+    victim = 5
+    g.delete(victim)
+    check_invariants(g)
+    ids, _ = g.search(X[victim], k=10, ef_search=64)
+    assert victim not in ids
+    # remaining nodes still searchable with good recall
+    for qi in [1, 2, 3]:
+        ids, _ = g.search(X[qi], k=1, ef_search=64)
+        assert ids[0] == qi
+
+
+def test_delete_entry_point():
+    g, X = build(50)
+    ep = g.entry_point
+    g.delete(ep)
+    check_invariants(g)
+    assert g.entry_point != ep
+    ids, _ = g.search(X[(ep + 1) % 50], k=1)
+    assert len(ids) == 1
+
+
+def test_delete_all_then_reinsert():
+    g, X = build(20)
+    for i in range(20):
+        g.delete(i)
+    assert len(g) == 0
+    assert g.entry_point == -1
+    g.insert(99, X[0])
+    ids, _ = g.search(X[0], k=1)
+    assert ids[0] == 99
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 39)),
+                min_size=1, max_size=60))
+def test_random_insert_delete_interleaving(ops):
+    """Any interleaving of inserts/deletes preserves invariants and
+    searches return only live nodes."""
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(40, 8)).astype(np.float32)
+    g = HNSW(8, M=4, ef_construction=16, seed=0, max_elements=40)
+    live = set()
+    for is_insert, vid in ops:
+        if is_insert:
+            if vid not in live:
+                g.insert(vid, X[vid])
+                live.add(vid)
+        else:
+            if vid in live:
+                g.delete(vid)
+                live.discard(vid)
+    check_invariants(g)
+    if live:
+        ids, _ = g.search(X[next(iter(live))], k=min(5, len(live)),
+                          ef_search=32)
+        assert set(map(int, ids)) <= live
+
+
+def test_memory_accounting_grows():
+    g, _ = build(50)
+    m1 = g.memory_bytes()
+    g2, _ = build(200)
+    assert g2.memory_bytes() > m1

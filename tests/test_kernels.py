@@ -1,0 +1,122 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ecoscan import ecoscan
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_prefill import flash_prefill
+
+
+def k(i):
+    return jax.random.PRNGKey(i)
+
+
+@pytest.mark.parametrize("B,d,NC,CAP,P,K", [
+    (2, 32, 8, 64, 2, 5),
+    (4, 128, 16, 128, 4, 10),
+    (1, 64, 5, 96, 5, 8),
+])
+def test_ecoscan_sweep(B, d, NC, CAP, P, K):
+    q = jax.random.normal(k(0), (B, d))
+    data = jax.random.normal(k(1), (NC, CAP, d))
+    lens = jax.random.randint(k(2), (NC,), CAP // 2, CAP + 1)
+    probes = jnp.stack([jax.random.permutation(k(3 + i), NC)[:P]
+                        for i in range(B)]).astype(jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=K)
+    dr, ir = ref.ecoscan(q, data, lens, probes, K)
+    np.testing.assert_allclose(dk, dr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(ik) == np.asarray(ir)).all()
+
+
+def test_ecoscan_respects_lens():
+    """Slots beyond the cluster's valid count must never be returned."""
+    q = jnp.zeros((1, 16))
+    data = jnp.zeros((2, 32, 16))  # all points identical (dist 0)
+    lens = jnp.asarray([4, 0], jnp.int32)
+    probes = jnp.asarray([[0, 1]], jnp.int32)
+    _, ids = ecoscan(q, data, lens, probes, k=6)
+    valid = np.asarray(ids)[0]
+    assert set(valid[valid >= 0]) <= {0, 1, 2, 3}
+
+
+@pytest.mark.parametrize("N,d,NC", [(100, 16, 5), (513, 64, 33),
+                                    (1024, 128, 64)])
+def test_kmeans_assign_sweep(N, d, NC):
+    x = jax.random.normal(k(0), (N, d))
+    c = jax.random.normal(k(1), (NC, d))
+    a1, d1 = ops.kmeans_assign(x, c)
+    a2, d2 = ref.kmeans_assign(x, c)
+    assert (np.asarray(a1) == np.asarray(a2)).all()
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,NW,d", [(1, 5, 32), (3, 200, 64), (2, 257, 128)])
+def test_scr_score_sweep(B, NW, d):
+    w = jax.random.normal(k(0), (B, NW, d))
+    q = jax.random.normal(k(1), (B, d))
+    np.testing.assert_allclose(ops.scr_score(w, q), ref.scr_score(w, q),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,M,N", [(1, 4, 100), (2, 8, 513), (3, 16, 64)])
+def test_pq_adc_sweep(B, M, N):
+    lut = jax.random.normal(k(0), (B, M, 256))
+    codes = jax.random.randint(k(1), (N, M), 0, 256).astype(jnp.uint8)
+    np.testing.assert_allclose(ops.pq_adc(lut, codes), ref.pq_adc(lut, codes),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,G,dh,S,kvlen", [
+    (1, 4, 1, 32, 128, 100),
+    (2, 8, 2, 64, 700, 650),
+    (2, 16, 16, 64, 512, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, H, G, dh, S, kvlen, dtype):
+    q = jax.random.normal(k(0), (B, H, dh), dtype)
+    kk = jax.random.normal(k(1), (B, S, G, dh), dtype)
+    vv = jax.random.normal(k(2), (B, S, G, dh), dtype)
+    o1 = decode_attention(q, kk, vv, kvlen)
+    o2 = ref.decode_attention(q, kk, vv, kvlen)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,H,S,dh,window", [
+    (1, 2, 256, 32, None),
+    (1, 2, 300, 64, 64),
+    (2, 4, 128, 32, None),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(B, H, S, dh, window, dtype):
+    q = jax.random.normal(k(0), (B, H, S, dh), dtype)
+    kk = jax.random.normal(k(1), (B, H, S, dh), dtype)
+    vv = jax.random.normal(k(2), (B, H, S, dh), dtype)
+    o1 = flash_prefill(q, kk, vv, window=window)
+    o2 = ref.flash_prefill(q, kk, vv, window=window)
+    tol = 2e-4 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_prefill_matches_model_attention():
+    """Cross-check the kernel against the model's chunked-scan attention."""
+    from repro.models.layers import attention
+    B, H, S, dh = 1, 4, 256, 32
+    q = jax.random.normal(k(0), (B, S, H, dh))
+    kv = jax.random.normal(k(1), (B, S, H, dh))
+    vv = jax.random.normal(k(2), (B, S, H, dh))
+    o_model = attention(q, kv, vv, causal=True, chunk=64)
+    o_kernel = flash_prefill(q.transpose(0, 2, 1, 3),
+                             kv.transpose(0, 2, 1, 3),
+                             vv.transpose(0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(o_model, np.float32),
+                               np.asarray(o_kernel.transpose(0, 2, 1, 3),
+                                          np.float32), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,119 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import (memory_bytes, n_search_ops,
+                                   search_energy_mj, search_latency_ms)
+from repro.core.kmeans import kmeans
+from repro.core.pq import PQ
+from repro.data.tokenizer import HashTokenizer
+from repro.train.optimizer import dequantize_rows, quantize_rows
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(10, 200), st.integers(2, 8))
+def test_kmeans_assign_is_argmin(n, k):
+    rng = np.random.default_rng(n * k)
+    x = rng.normal(size=(n, 8)).astype(np.float32)
+    cent, assign = kmeans(x, k, iters=3, use_pallas=False)
+    d = ((x[:, None, :] - cent[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(assign, d.argmin(1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64))
+def test_tokenizer_stable_and_in_range(seed):
+    rng = np.random.default_rng(seed)
+    words = ["w%d" % rng.integers(0, 1000) for _ in range(30)]
+    text = " ".join(words)
+    tok = HashTokenizer(5000)
+    ids = tok.encode(text)
+    assert ids == tok.encode(text)          # deterministic
+    assert all(4 <= i < 5000 for i in ids)  # reserved ids never produced
+    assert len(ids) == len(words)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 3, 4, 6]))
+def test_pq_roundtrip_beats_random(m):
+    rng = np.random.default_rng(m)
+    x = rng.normal(size=(400, 24)).astype(np.float32)
+    pq = PQ(24, m=m).train(x, iters=4)
+    recon = pq.decode(pq.encode(x))
+    err = np.mean((x - recon) ** 2)
+    base = np.mean(x ** 2)
+    assert err < base * 0.9
+
+
+def test_pq_error_decreases_with_m():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 32)).astype(np.float32)
+    errs = []
+    for m in (2, 4, 8):
+        pq = PQ(32, m=m).train(x, iters=4)
+        errs.append(float(np.mean((x - pq.decode(pq.encode(x))) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1000, 10_000_000), st.integers(16, 1024))
+def test_analytical_memory_ordering(N, d):
+    """Paper Fig. 6 ordering: disk-based variants use (much) less RAM than
+    in-RAM variants; EcoVector is within ~2x of IVF-DISK."""
+    kw = dict(N=N, d=d, Nc=max(16, N // 256))
+    assert memory_bytes("IVF-DISK", **kw) < memory_bytes("IVF", **kw)
+    assert memory_bytes("EcoVector", **kw) < memory_bytes("HNSW", **kw)
+    assert memory_bytes("EcoVector", **kw) < 3 * memory_bytes("IVF-DISK",
+                                                              **kw)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(150_000, 5_000_000))
+def test_analytical_ecovector_fewest_ops(N):
+    """Table 2: EcoVector's distance-op count beats IVF variants at scale
+    (the paper's regime; at tiny N exhaustive IVF probing is cheaper)."""
+    kw = dict(N=N, Nc=max(64, N // 256), n_probe=8)
+    assert n_search_ops("EcoVector", **kw) < n_search_ops("IVF", **kw)
+    assert n_search_ops("EcoVector", **kw) < n_search_ops("IVF-DISK", **kw)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(100_000, 2_000_000), st.integers(2, 16))
+def test_analytical_energy_positive_and_monotone_in_probes(N, n_probe):
+    kw = dict(N=N, d=128, Nc=1024)
+    e1 = search_energy_mj("EcoVector", n_probe=n_probe, **kw)
+    e2 = search_energy_mj("EcoVector", n_probe=n_probe + 1, **kw)
+    assert 0 < e1 < e2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 512))
+def test_int8_moment_quantisation_bound(rows, cols):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = rng.normal(size=(rows, cols)).astype(np.float32) * \
+        rng.uniform(0.01, 10)
+    qt = quantize_rows(jnp.asarray(x))
+    x2 = np.asarray(dequantize_rows(qt))
+    bound = np.abs(x).max(axis=1, keepdims=True) / 127 + 1e-7
+    assert np.all(np.abs(x - x2) <= bound)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(8, 32))
+def test_topk_merge_invariant_ecoscan(nprobe, cap):
+    """ecoscan's running merge == global top-k over all probed clusters."""
+    from repro.kernels import ref
+    from repro.kernels.ecoscan import ecoscan
+    rng = np.random.default_rng(nprobe * cap)
+    NC, d, K = nprobe + 2, 16, 5
+    q = jnp.asarray(rng.normal(size=(2, d)), jnp.float32)
+    data = jnp.asarray(rng.normal(size=(NC, cap, d)), jnp.float32)
+    lens = jnp.asarray(rng.integers(1, cap + 1, NC), jnp.int32)
+    probes = jnp.stack([jnp.asarray(rng.permutation(NC)[:nprobe])
+                        for _ in range(2)]).astype(jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=K)
+    dr, ir = ref.ecoscan(q, data, lens, probes, K)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,99 @@
+"""SCR (§4) behaviour + hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scr import (SCRConfig, apply_scr, build_prompt,
+                            sliding_windows, split_sentences)
+from repro.serving.embedder import HashEmbedder
+
+
+@pytest.fixture(scope="module")
+def embed():
+    return HashEmbedder(dim=64)
+
+
+def test_split_sentences():
+    s = split_sentences("One. Two! Three? Four.")
+    assert s == ["One.", "Two!", "Three?", "Four."]
+
+
+def test_sliding_windows_cover_all_sentences():
+    spans = sliding_windows(["s"] * 7, window=3, overlap=2)
+    covered = set()
+    for a, b in spans:
+        covered.update(range(a, b))
+    assert covered == set(range(7))
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 30), w=st.integers(1, 6), o=st.integers(0, 5))
+def test_sliding_windows_properties(n, w, o):
+    spans = sliding_windows(["x"] * n, window=w, overlap=o)
+    assert spans[0][0] == 0 and spans[-1][1] == n
+    covered = set()
+    for a, b in spans:
+        assert 0 <= a < b <= n
+        assert b - a <= max(1, min(w, n))
+        covered.update(range(a, b))
+    assert covered == set(range(n))
+
+
+DOC_B = ("The Tiramisu dessert originated in Italy. "
+         "An interesting historical note about Tiramisu follows. "
+         "Recipe of the Tiramisu includes cheese and coffee. "
+         "The price of a single slice of Tiramisu can vary. "
+         "Many cafes now offer Tiramisu for pick-up.")
+DOC_A = ("Volcanoes are studied by geologists. "
+         "Their eruptions follow magma pressure. "
+         "Monitoring stations track seismic activity.")
+
+
+def test_scr_selects_recipe_chunk(embed):
+    """The paper's worked example: the recipe window must win for a recipe
+    query, and context extension must pull in its neighbours."""
+    q = "Show me the dessert recipe from recent downloads."
+    res = apply_scr(q, [DOC_A, DOC_B], embed,
+                    SCRConfig(sliding_window_size=1, overlap_size=0,
+                              context_extension_size=1))
+    joined = " ".join(res.texts)
+    assert "Recipe of the Tiramisu" in joined
+    # reorder: Doc B (recipe) must come first
+    assert res.order[0] == 1
+
+
+def test_scr_reduces_tokens(embed):
+    q = "Show me the dessert recipe."
+    res = apply_scr(q, [DOC_A, DOC_B], embed, SCRConfig(1, 0, 0))
+    assert res.tokens_after < res.tokens_before
+
+
+def test_scr_prompt_contains_query(embed):
+    q = "what about volcanoes?"
+    res = apply_scr(q, [DOC_A], embed)
+    p = build_prompt(q, res)
+    assert q in p
+
+
+@settings(max_examples=25, deadline=None)
+@given(ndocs=st.integers(1, 4), w=st.integers(1, 4), o=st.integers(0, 3),
+       ext=st.integers(0, 2))
+def test_scr_properties(embed, ndocs, w, o, ext):
+    rng = np.random.default_rng(ndocs * 100 + w * 10 + o)
+    docs = []
+    for i in range(ndocs):
+        n = int(rng.integers(1, 10))
+        docs.append(" ".join(f"Sentence {i}-{j} mentions topic{i}."
+                             for j in range(n)))
+    res = apply_scr("tell me about topic0", docs, embed,
+                    SCRConfig(w, o, ext))
+    # output is a permutation of the inputs
+    assert sorted(res.order) == list(range(ndocs))
+    # condensation never grows the token count
+    assert res.tokens_after <= res.tokens_before
+    # scores are sorted descending (reordering step)
+    assert all(res.scores[i] >= res.scores[i + 1]
+               for i in range(len(res.scores) - 1))
+    # each condensed doc's text is a contiguous substring of its source
+    for out_text, oi in zip(res.texts, res.order):
+        assert out_text in docs[oi] or out_text == docs[oi]

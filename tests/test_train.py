@@ -1,0 +1,119 @@
+"""Training substrate: optimizer correctness, int8 moments, gradient
+compression, loss goes down."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig, ShapeConfig, TrainConfig
+from repro.configs import get_reduced
+from repro.models import model
+from repro.train import optimizer as opt
+from repro.train import trainer
+from repro.train.grad_compress import (compress_decompress,
+                                       compress_with_feedback, init_ef_state)
+
+
+def test_quantize_rows_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 300)).astype(np.float32)
+    qt = opt.quantize_rows(jnp.asarray(x))
+    x2 = np.asarray(opt.dequantize_rows(qt))
+    row_max = np.abs(x).max(axis=1, keepdims=True)
+    assert np.all(np.abs(x - x2) <= row_max / 127.0 + 1e-6)
+
+
+def test_adamw_matches_reference_float32():
+    """Our AdamW against a hand-rolled reference on a tiny problem."""
+    tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=0, weight_decay=0.0,
+                       grad_clip=0.0)
+    params = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    grads = {"w": jnp.asarray([[0.1, -0.2], [0.3, 0.4]])}
+    state = opt.init_opt_state(params)
+    lr_fn = lambda s: jnp.asarray(1e-2)  # noqa: E731
+    p2, s2, m = opt.adamw_update(tcfg, params, grads, state, lr_fn)
+    # reference
+    g = np.asarray(grads["w"])
+    mm = 0.1 * g
+    vv = 0.05 * g * g
+    mhat = mm / (1 - 0.9)
+    vhat = vv / (1 - 0.95)
+    ref = np.asarray(params["w"]) - 1e-2 * mhat / (np.sqrt(vhat) + tcfg.eps)
+    np.testing.assert_allclose(np.asarray(p2["w"]), ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("moments", ["float32", "int8"])
+def test_training_reduces_loss(moments):
+    cfg = get_reduced("qwen25_0_5b")
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+                    train=TrainConfig(learning_rate=1e-3, warmup_steps=5))
+    step_fn, nmb, _ = trainer.make_train_step(run, max_steps=60, seq_sp=False)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    params, _ = trainer.make_states(run, key=jax.random.PRNGKey(0))
+    opt_state = opt.init_opt_state(params, moments)
+    rng = np.random.default_rng(0)
+    data = rng.integers(4, cfg.vocab_size, (8, 33)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(data[:, :-1]),
+             "labels": jnp.asarray(data[:, 1:])}
+    first = None
+    # memorize one batch: loss must drop substantially
+    import repro.train.trainer as tr
+    lr_fn = opt.lr_schedule(run.train, 60)
+    losses = []
+    for i in range(25):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, batch), has_aux=True)(params)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        params, opt_state, _ = opt.adamw_update(run.train, params, grads,
+                                                opt_state, lr_fn, moments)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_reduced("h2o_danube_1_8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    run = RunConfig(model=cfg, shape=shape,
+                    train=TrainConfig(grad_clip=0.0, warmup_steps=0))
+    params, opt_state = trainer.make_states(run, key=jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(4, 100, (8, 16)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(4, 100, (8, 16)), jnp.int32),
+    }
+    s1, _, _ = trainer.make_train_step(run, microbatches=1, seq_sp=False)
+    s4, _, _ = trainer.make_train_step(run, microbatches=4, seq_sp=False)
+    p1, _, m1 = s1(params, opt_state, batch)
+    p4, _, m4 = s4(params, opt_state, batch)
+    # same gradient (up to accumulation-order fp noise) -> same update
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+def test_grad_compression_roundtrip_and_feedback():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(size=(8, 64)), jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    g2 = compress_decompress(g)
+    for k in g:
+        err = np.abs(np.asarray(g[k]) - np.asarray(g2[k]))
+        assert err.max() < np.abs(np.asarray(g[k])).max() / 100
+    # error feedback: accumulated compressed sum converges to true sum
+    ef = init_ef_state(g)
+    tot_true = jax.tree.map(lambda x: x * 0.0, g)
+    tot_sent = jax.tree.map(lambda x: x * 0.0, g)
+    for _ in range(10):
+        sent, ef = compress_with_feedback(g, ef)
+        tot_true = jax.tree.map(lambda a, b: a + b, tot_true, g)
+        tot_sent = jax.tree.map(lambda a, b: a + b, tot_sent, sent)
+    for k in g:
+        num = np.abs(np.asarray(tot_true[k]) - np.asarray(tot_sent[k]))
+        assert num.max() < np.abs(np.asarray(g[k])).max() / 50
+
+
+def test_lr_schedule_shape():
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=10)
+    lr = opt.lr_schedule(tcfg, 100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1e-3) < 1e-9
+    assert float(lr(100)) < float(lr(50)) < float(lr(10))
