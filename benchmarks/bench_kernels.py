@@ -34,6 +34,40 @@ def run(mode="quick"):
     emit("kernel.ecoscan.ref", t_ref * 1e6, f"B={B};P={P};CAP={CAP}")
     emit("kernel.ecoscan.pallas_interpret", t_pal * 1e6, "correctness-mode")
 
+    # before/after: the seed kernel shape (one probe per grid step, O(k*M)
+    # fori_loop argmin merge) vs the tiled sort-based merge. Interpret-mode
+    # numbers are correctness-grade; on TPU the argmin loop serializes k
+    # full-vector reductions per probe while the sort is one lane-parallel
+    # sort network per tile of probes.
+    from repro.kernels.ecoscan import ecoscan as _eco
+    t_argmin = _time(_eco, q, data, lens, probes, merge="argmin",
+                     probe_tile=1)
+    t_sort = _time(_eco, q, data, lens, probes, merge="sort")
+    emit("kernel.ecoscan.merge_argmin", t_argmin * 1e6,
+         "before: per-probe fori_loop argmin merge")
+    emit("kernel.ecoscan.merge_sort", t_sort * 1e6,
+         f"after: tiled sort_key_val merge;"
+         f"speedup={t_argmin / t_sort:.2f}x")
+
+    # fused on-device route->scan vs host-routed two-step
+    cent = jax.random.normal(jax.random.PRNGKey(7), (NC, d))
+
+    def two_step(q, cent, data, lens, n_probe=P, k=10):
+        qn = jax.device_get(q)
+        cn = jax.device_get(cent)
+        d2 = ((qn ** 2).sum(1)[:, None] - 2 * qn @ cn.T
+              + (cn ** 2).sum(1)[None, :])
+        import numpy as _np
+        pr = jnp.asarray(_np.argsort(d2, 1)[:, :n_probe].astype(_np.int32))
+        return ops.ecoscan(q, data, lens, pr, k=k)
+
+    t_two = _time(two_step, q, cent, data, lens)
+    t_fused = _time(ops.route_and_scan, q, cent, data, lens, n_probe=P)
+    emit("kernel.route_scan.two_step", t_two * 1e6,
+         "before: host argsort routing + scan")
+    emit("kernel.route_scan.fused", t_fused * 1e6,
+         f"after: one jitted route+scan;speedup={t_two / t_fused:.2f}x")
+
     x = jax.random.normal(k0, (4096, 128))
     c = jax.random.normal(k0, (64, 128))
     emit("kernel.kmeans_assign.ref",

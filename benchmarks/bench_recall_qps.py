@@ -3,7 +3,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import build, datasets, emit, ground_truth, recall_and_qps
+from benchmarks.common import (build, datasets, emit, ground_truth,
+                               recall_and_qps, recall_and_qps_batched)
 from repro.core.baselines import ALL_BASELINES
 
 SWEEPS = {
@@ -30,6 +31,25 @@ def run(mode="quick"):
                 emit(f"recall_qps.{dset}.{name}.{tag}", per * 1e6,
                      f"recall@10={rec:.3f};qps={qps:.1f}")
             if name == "EcoVector":
+                # fused batched device path: route + scan in one jitted
+                # call over the whole query batch
+                for p in (1, 2, 4, 8):
+                    rec, qps, per = recall_and_qps_batched(idx, Q, gt,
+                                                           n_probe=p)
+                    emit(f"recall_qps.{dset}.EcoVector-device.n_probe={p}",
+                         per * 1e6, f"recall@10={rec:.3f};qps={qps:.1f}")
+                # before/after per-query latency: host-routed two-step vs
+                # the fused single-call pipeline at the paper's n_probe=4
+                _, _, per_two = recall_and_qps_batched(idx, Q, gt,
+                                                       n_probe=4,
+                                                       fused=False)
+                _, _, per_fused = recall_and_qps_batched(idx, Q, gt,
+                                                         n_probe=4)
+                emit(f"recall_qps.{dset}.EcoVector-device.route_fusion",
+                     per_fused * 1e6,
+                     f"two_step_us={per_two*1e6:.1f};"
+                     f"fused_us={per_fused*1e6:.1f};"
+                     f"speedup={per_two / max(per_fused, 1e-12):.2f}x")
                 sizes = idx.cluster_sizes()
                 emit(f"cluster_sizes.{dset}", 0.0,
                      f"mean={sizes.mean():.1f};p90="

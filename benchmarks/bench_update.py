@@ -10,6 +10,23 @@ from benchmarks.common import build, datasets, emit
 UPDATABLE = ["IVF", "IVF-DISK", "IVF-HNSW", "HNSW", "EcoVector"]
 
 
+def _repack_cost(idx, new_vecs, base, full):
+    """Per-update cost of keeping the device pack fresh: insert a vector,
+    re-pack (incrementally or from scratch), time the repack; then delete
+    to restore the index."""
+    idx.device_pack()                       # warm: pack exists
+    t_pack = 0.0
+    for i, v in enumerate(new_vecs):
+        idx.insert(base + i, v)
+        t0 = time.perf_counter()
+        idx.device_pack(force_full=full)
+        t_pack += time.perf_counter() - t0
+    for i in range(len(new_vecs)):
+        idx.delete(base + i)
+    idx.device_pack()                       # restore a clean pack
+    return t_pack / len(new_vecs)
+
+
 def run(mode="quick"):
     for dset, (X, Q) in datasets(mode).items():
         rng = np.random.default_rng(0)
@@ -17,7 +34,10 @@ def run(mode="quick"):
             size=(32, X.shape[1])).astype(np.float32)
         for name in UPDATABLE:
             idx, _ = build(name, X)
-            base = 1_000_000
+            # fresh ids just past the dataset: HNSW rows are indexed by id,
+            # so huge ids (e.g. 1e6) would balloon every touched cluster's
+            # vector array (and its on-disk pickle) with zero padding
+            base = len(X) + 1
             t0 = time.perf_counter()
             for i, v in enumerate(new_vecs):
                 idx.insert(base + i, v)
@@ -28,6 +48,16 @@ def run(mode="quick"):
             t_del = (time.perf_counter() - t0) / len(new_vecs)
             emit(f"update.{dset}.{name}", (t_ins + t_del) / 2 * 1e6,
                  f"insert_ms={t_ins*1e3:.3f};delete_ms={t_del*1e3:.3f}")
+            if name == "EcoVector":
+                # incremental dirty-cluster repack vs full [NC, CAP, d]
+                # rebuild after each update (the pre-refactor behavior)
+                sub = new_vecs[:8]
+                t_full = _repack_cost(idx, sub, base, full=True)
+                t_incr = _repack_cost(idx, sub, base, full=False)
+                emit(f"update.{dset}.EcoVector.repack", t_incr * 1e6,
+                     f"incremental_us={t_incr*1e6:.1f};"
+                     f"full_us={t_full*1e6:.1f};"
+                     f"speedup={t_full / max(t_incr, 1e-12):.1f}x")
 
 
 if __name__ == "__main__":

@@ -72,5 +72,17 @@ def recall_and_qps(idx, Q, gt, k=10, **search_kw):
     return float(np.mean(recs)), len(Q) / dt, dt / len(Q)
 
 
+def recall_and_qps_batched(idx, Q, gt, k=10, n_probe=4, fused=True):
+    """One fused batched device call for the whole query set."""
+    # warm once at the full batch shape (jit cache keys on B)
+    idx.search_device_batched(Q, k=k, n_probe=n_probe, fused=fused)
+    t0 = time.perf_counter()
+    ids_b, _ = idx.search_device_batched(Q, k=k, n_probe=n_probe,
+                                         fused=fused)
+    dt = time.perf_counter() - t0
+    recs = [len(set(map(int, ids)) & g) / k for ids, g in zip(ids_b, gt)]
+    return float(np.mean(recs)), len(Q) / dt, dt / len(Q)
+
+
 def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.1f},{derived}")

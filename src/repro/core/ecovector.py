@@ -10,10 +10,13 @@ Faithful reproduction:
   * incremental insert/delete via Algorithms 1 & 2 (§3.3), updating only
     the owning cluster's graph.
 
-TPU-native path: `search_device` scans probed clusters densely with the
-`ecoscan` Pallas kernel (DESIGN.md §2 explains why dense-MXU-scan replaces
-intra-cluster graph traversal on TPU); cluster payloads stay in a padded
-[NC, CAP, d] HBM tensor and only probed blocks move into VMEM.
+TPU-native path: `search_device_batched` routes and scans fully on device
+(one fused jitted route->scan call, DESIGN.md §4); cluster payloads stay in
+a padded [NC, CAP, d] HBM tensor (DESIGN.md §2) and only probed blocks move
+into VMEM. The pack is maintained *incrementally*: insert/delete mark only
+the owning cluster dirty and `device_pack` rewrites just that cluster's
+block in place, growing CAP geometrically on overflow (DESIGN.md §3) —
+steady-state update cost is O(cluster), not O(N) disk reads.
 """
 from __future__ import annotations
 
@@ -22,8 +25,9 @@ import os
 import pickle
 import tempfile
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -38,6 +42,11 @@ class EcoVectorStats:
     disk_bytes: int = 0
     disk_time_s: float = 0.0
     distance_ops: int = 0
+    # device-pack maintenance accounting (DESIGN.md §3)
+    pack_full_builds: int = 0       # whole [NC, CAP, d] rebuilds from disk
+    pack_cluster_repacks: int = 0   # single-cluster block rewrites in place
+    pack_grows: int = 0             # geometric CAP growths on overflow
+    truncated_vectors: int = 0      # rows CURRENTLY dropped by a forced cap
 
 
 class EcoVector:
@@ -59,8 +68,18 @@ class EcoVector:
         # tiny LRU of loaded cluster graphs (EdgeRAG-style caching, off by
         # default: the paper's EcoVector releases after each query)
         self.cache_clusters = cache_clusters
-        self._cache: Dict[int, HNSW] = {}
-        self._device_pack = None
+        self._cache: Dict[int, HNSW] = {}         # insertion order == LRU
+        self._reset_pack_state()
+
+    def _reset_pack_state(self):
+        self._device_pack: Optional[Tuple] = None  # (data, lens, slots, cap)
+        self._dirty: Set[int] = set()              # clusters needing repack
+        self._mirror = None                        # jnp (data, lens) copies
+        self._mirror_dirty: Set[int] = set()       # blocks stale on device
+        self._centroids_dev = None
+        self._pack_forced_cap: Optional[int] = None  # explicit cap budget
+        self._trunc_by_cluster: Dict[int, int] = {}  # rows currently dropped
+        self._pending_graphs: Dict[int, HNSW] = {}   # dirty graphs in hand
 
     # ----------------------------------------------------------- build
 
@@ -89,7 +108,7 @@ class EcoVector:
                 g.insert(int(vid), vec)
                 self.assign[int(vid)] = c
             self._store_cluster(c, g)
-        self._device_pack = None
+        self._reset_pack_state()
         return self
 
     # ------------------------------------------------------ disk tier
@@ -106,7 +125,10 @@ class EcoVector:
 
     def _load_cluster(self, c: int) -> HNSW:
         if c in self._cache:
-            return self._cache[c]
+            # LRU promotion: move to the end (most recently used)
+            g = self._cache.pop(c)
+            self._cache[c] = g
+            return g
         t0 = time.perf_counter()
         with open(self._path(c), "rb") as f:
             data = f.read()
@@ -115,8 +137,8 @@ class EcoVector:
         self.stats.disk_bytes += len(data)
         self.stats.disk_time_s += time.perf_counter() - t0
         if self.cache_clusters:
-            if len(self._cache) >= self.cache_clusters:
-                self._cache.pop(next(iter(self._cache)))
+            while len(self._cache) >= self.cache_clusters:
+                self._cache.pop(next(iter(self._cache)))  # evict LRU head
             self._cache[c] = g
         return g
 
@@ -140,8 +162,11 @@ class EcoVector:
         best_d: List[float] = []
         for c in map(int, cids):
             g = self._load_cluster(c)
+            n0 = g.n_dist
             ids, dists = g.search(q, k, ef_search=ef_search)
-            self.stats.distance_ops += g.n_dist
+            # per-query delta only: the pickled graph's lifetime counter
+            # includes construction-time distances
+            self.stats.distance_ops += g.n_dist - n0
             best_ids.extend(map(int, ids))
             best_d.extend(map(float, dists))
             self._release_cluster(c, g)
@@ -151,50 +176,217 @@ class EcoVector:
 
     # ----------------------------------------------------- device path
 
-    def device_pack(self, cap: Optional[int] = None):
-        """Pack clusters into the padded [NC, CAP, d] HBM layout consumed by
-        the ecoscan kernel. Rebuilt lazily after updates."""
-        if self._device_pack is not None:
-            return self._device_pack
+    def device_pack(self, cap: Optional[int] = None,
+                    force_full: bool = False):
+        """Return the padded [NC, CAP, d] HBM layout consumed by the
+        ecoscan kernel as (data, lens, slot_ids, cap).
+
+        Maintained incrementally: after insert/delete only the dirty
+        clusters' blocks are rewritten in place (DESIGN.md §3). A full
+        rebuild happens only on the first call, on an explicit `cap`
+        change, or with `force_full=True` (the benchmark baseline; with
+        `cap=None` it also lifts a previously forced cap).
+
+        An explicit `cap` must be positive and is a hard per-cluster row
+        budget: clusters
+        beyond it are truncated loudly (warning + stats) and the pack
+        never grows past it — incremental repacks keep honoring the
+        budget."""
+        if cap is not None and cap <= 0:
+            raise ValueError(f"device_pack cap must be positive, got {cap} "
+                             f"(omit cap for automatic sizing)")
+        if (self._device_pack is None or force_full
+                or (cap is not None and cap != self._device_pack[3])):
+            self._build_pack(cap)
+        else:
+            if cap is not None:
+                # same size as the current pack, but now an explicit budget
+                self._pack_forced_cap = cap
+            if self._dirty:
+                self._repack_dirty()
+        return self._device_pack
+
+    def _build_pack(self, cap: Optional[int] = None):
         sizes = [len(m) for m in self.cluster_members]
-        cap = cap or max(8, int(np.max(sizes)) if sizes else 8)
+        need = int(np.max(sizes)) if sizes else 0
+        auto_cap = cap is None
+        cap = cap or max(8, need)
+        self._pack_forced_cap = None if auto_cap else cap
         nc = self.n_clusters
         data = np.zeros((nc, cap, self.dim), np.float32)
         slot_ids = -np.ones((nc, cap), np.int64)
         lens = np.zeros((nc,), np.int32)
+        self._trunc_by_cluster = {}
+        self._pending_graphs.clear()
         for c in range(nc):
             g = self._load_cluster(c)
             ids, vecs = g.graph_arrays()
-            m = min(len(ids), cap)
+            m = len(ids)
+            if m > cap:
+                if auto_cap:
+                    # auto cap is sized from cluster_members; the graph
+                    # holding more rows means the two diverged
+                    raise RuntimeError(
+                        f"cluster {c} graph has {m} rows but "
+                        f"cluster_members implies cap {cap}: "
+                        f"members/graph bookkeeping diverged")
+                self._trunc_by_cluster[c] = m - cap
+                warnings.warn(
+                    f"device_pack cap={cap} truncates cluster {c} "
+                    f"({m - cap} of {m} vectors dropped; recall will "
+                    f"suffer — omit cap to size the pack automatically)",
+                    stacklevel=3)
+                m = cap
             data[c, :m] = vecs[:m]
             slot_ids[c, :m] = ids[:m]
             lens[c] = m
+        self.stats.truncated_vectors = sum(self._trunc_by_cluster.values())
+        self.stats.pack_full_builds += 1
+        self._dirty.clear()
+        self._mirror = None
+        self._mirror_dirty.clear()
         self._device_pack = (data, lens, slot_ids, cap)
-        return self._device_pack
 
-    def search_device(self, q: np.ndarray, k: int = 10, n_probe: int = 4,
-                      use_pallas: bool = True):
-        """TPU-native batched search: centroid routing by dense matmul
-        top-k, probed clusters scanned by the ecoscan kernel."""
+    def _repack_dirty(self):
+        """Rewrite only the dirty clusters' blocks in place. An auto-cap
+        pack grows CAP geometrically first if any dirty cluster overflows;
+        a forced-cap pack keeps its budget and truncates loudly instead."""
+        data, lens, slot_ids, cap = self._device_pack
+        need = max(len(self.cluster_members[c]) for c in self._dirty)
+        if need > cap and self._pack_forced_cap is None:
+            new_cap = cap
+            while new_cap < need:
+                new_cap *= 2
+            ndata = np.zeros((data.shape[0], new_cap, self.dim), np.float32)
+            ndata[:, :cap] = data
+            nslots = -np.ones((data.shape[0], new_cap), np.int64)
+            nslots[:, :cap] = slot_ids
+            data, slot_ids, cap = ndata, nslots, new_cap
+            self.stats.pack_grows += 1
+            self._mirror = None          # slot ids changed base: full refresh
+            self._mirror_dirty.clear()
+        for c in sorted(self._dirty):
+            # insert/delete left the freshly-stored graph in hand — no
+            # need to re-read the pickle we just wrote (an emptied graph
+            # is falsy via HNSW.__len__, so test against None)
+            g = self._pending_graphs.pop(c, None)
+            if g is None:
+                g = self._load_cluster(c)
+            ids, vecs = g.graph_arrays()
+            m = len(ids)
+            self._trunc_by_cluster.pop(c, None)
+            if m > cap:
+                if self._pack_forced_cap is None:
+                    # growth is sized from cluster_members; a bigger graph
+                    # means the two diverged (same invariant _build_pack
+                    # enforces) — don't mask it as a cap problem
+                    raise RuntimeError(
+                        f"cluster {c} graph has {m} rows but "
+                        f"cluster_members implies cap {cap}: "
+                        f"members/graph bookkeeping diverged")
+                # forced-cap budget: same loud contract as _build_pack
+                self._trunc_by_cluster[c] = m - cap
+                warnings.warn(
+                    f"device_pack cap={cap} truncates cluster {c} on "
+                    f"repack ({m - cap} of {m} vectors dropped; use "
+                    f"device_pack(force_full=True) without cap to lift "
+                    f"the budget)", stacklevel=4)
+                m = cap
+            data[c, :m] = vecs[:m]
+            data[c, m:] = 0.0
+            slot_ids[c, :m] = ids[:m]
+            slot_ids[c, m:] = -1
+            lens[c] = m
+            self.stats.pack_cluster_repacks += 1
+            self._mirror_dirty.add(c)
+        self._dirty.clear()
+        self.stats.truncated_vectors = sum(self._trunc_by_cluster.values())
+        self._device_pack = (data, lens, slot_ids, cap)
+
+    def _device_arrays(self):
+        """jnp mirrors of the pack (+ centroids), refreshed per dirty block
+        rather than re-uploading the whole [NC, CAP, d] tensor."""
+        import jax.numpy as jnp
+        data, lens, _, _ = self.device_pack()
+        if self._mirror is None or self._mirror[0].shape != data.shape:
+            self._mirror = (jnp.asarray(data), jnp.asarray(lens))
+            self._mirror_dirty.clear()
+        elif self._mirror_dirty:
+            touched = sorted(self._mirror_dirty)
+            mdata, _ = self._mirror
+            mdata = mdata.at[jnp.asarray(touched)].set(
+                jnp.asarray(data[touched]))
+            self._mirror = (mdata, jnp.asarray(lens))
+            self._mirror_dirty.clear()
+        if self._centroids_dev is None:
+            self._centroids_dev = jnp.asarray(
+                np.asarray(self.centroids, np.float32))
+        return self._mirror[0], self._mirror[1], self._centroids_dev
+
+    def search_device_batched(self, q: np.ndarray, k: int = 10,
+                              n_probe: int = 4, use_pallas: bool = True,
+                              fused: bool = True):
+        """TPU-native batched search over q [B, d]: centroid routing and
+        the ecoscan cluster scan run as ONE jitted device call (matmul +
+        lax.top_k feeding the scalar-prefetched kernel grid) — no host
+        round-trip between route and scan. `fused=False` keeps the legacy
+        two-step path (host numpy routing, then the scan) for before/after
+        benchmarking. Returns (ids [B, k] int64, dists [B, k] f32)."""
         import jax.numpy as jnp
         q = np.atleast_2d(np.asarray(q, np.float32))
-        data, lens, slot_ids, cap = self.device_pack()
-        d2 = (np.sum(q ** 2, 1)[:, None] - 2 * q @ self.centroids.T
-              + np.sum(self.centroids ** 2, 1)[None, :])
-        probes = np.argsort(d2, axis=1)[:, :n_probe].astype(np.int32)
-        dists, slots = ops.ecoscan(jnp.asarray(q), jnp.asarray(data),
-                                   jnp.asarray(lens), jnp.asarray(probes),
-                                   k=k, use_pallas=use_pallas)
+        if q.shape[0] == 0:
+            return (np.zeros((0, k), np.int64), np.zeros((0, k), np.float32))
+        n_probe = min(n_probe, self.n_clusters)
+        data_j, lens_j, cent_j = self._device_arrays()
+        _, lens, slot_ids, cap = self._device_pack
+        if fused:
+            dists, slots, probes = ops.route_and_scan(
+                jnp.asarray(q), cent_j, data_j, lens_j,
+                n_probe=n_probe, k=k, use_pallas=use_pallas)
+            probes = np.asarray(probes)
+        else:
+            d2 = (np.sum(q ** 2, 1)[:, None] - 2 * q @ self.centroids.T
+                  + np.sum(self.centroids ** 2, 1)[None, :])
+            probes = np.argsort(d2, axis=1)[:, :n_probe].astype(np.int32)
+            dists, slots = ops.ecoscan(jnp.asarray(q), data_j, lens_j,
+                                       jnp.asarray(probes), k=k,
+                                       use_pallas=use_pallas)
+        # power-model accounting: dense routing + scanned candidates
+        self.stats.distance_ops += q.shape[0] * self.n_clusters
+        self.stats.distance_ops += int(lens[probes].sum())
         slots = np.asarray(slots)
         ids = np.where(slots >= 0,
                        slot_ids.reshape(-1)[np.clip(slots, 0, None)], -1)
         return ids, np.asarray(dists)
 
+    def search_device(self, q: np.ndarray, k: int = 10, n_probe: int = 4,
+                      use_pallas: bool = True):
+        """Back-compat alias for `search_device_batched` (accepts [d] or
+        [B, d] queries)."""
+        return self.search_device_batched(q, k=k, n_probe=n_probe,
+                                          use_pallas=use_pallas)
+
     # ----------------------------------------------------------- update
+
+    # bound on update-path graphs kept resident between an update and the
+    # next device query — preserves the partial-loading memory contract
+    # (beyond this, repack falls back to a disk read for the eldest)
+    PENDING_GRAPHS_MAX = 8
+
+    def _mark_dirty(self, c: int, g: Optional[HNSW] = None):
+        if self._device_pack is not None:
+            self._dirty.add(c)
+            if g is not None:
+                self._pending_graphs.pop(c, None)
+                self._pending_graphs[c] = g
+                while len(self._pending_graphs) > self.PENDING_GRAPHS_MAX:
+                    self._pending_graphs.pop(next(iter(self._pending_graphs)))
 
     def insert(self, vid: int, vec: np.ndarray):
         """§3.3.1: route to nearest centroid, Algorithm-1 insert into that
-        cluster's graph only."""
+        cluster's graph only. The device pack is NOT invalidated: the
+        owning cluster is marked dirty and repacked in place on the next
+        device query (DESIGN.md §3)."""
         vec = np.asarray(vec, np.float32)
         cids, _ = self.centroid_graph.search(vec, 1, ef_search=16)
         c = int(cids[0])
@@ -203,7 +395,7 @@ class EcoVector:
         self.assign[int(vid)] = c
         self.cluster_members[c].append(int(vid))
         self._release_cluster(c, g, dirty=True)
-        self._device_pack = None
+        self._mark_dirty(c, g)
 
     def delete(self, vid: int):
         """§3.3.2: Algorithm-2 delete inside the owning cluster's graph."""
@@ -215,7 +407,7 @@ class EcoVector:
         if int(vid) in self.cluster_members[c]:
             self.cluster_members[c].remove(int(vid))
         self._release_cluster(c, g, dirty=True)
-        self._device_pack = None
+        self._mark_dirty(c, g)
 
     # ------------------------------------------------------- accounting
 

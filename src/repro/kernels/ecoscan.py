@@ -5,10 +5,17 @@ and searches its small graph. The TPU analogue: cluster blocks live in HBM
 ([NC, CAP, d], one block per cluster); the *scalar-prefetched* probe list
 drives the BlockSpec index_map so only the probed clusters' blocks are
 DMA'd into VMEM; distances for the whole (padded) cluster are one MXU
-matmul; a running top-k merge lives in VMEM scratch across grid steps.
+matmul; a running top-k merge lives in the revisited output block.
 
-Grid: (B, P) — P probes per query, sequential on a TPU core, so the output
-block for query b is revisited P times (init at p == 0, merge otherwise).
+Grid: (B, T) — T probe *tiles* per query (PROBE_TILE clusters DMA'd and
+scanned per step), sequential on a TPU core, so the output block for query
+b is revisited T times (init at t == 0, merge otherwise). Tiling probes
+amortizes the output-block revisits P/PROBE_TILE-fold versus the old
+one-probe-per-step grid.
+
+Probe ids < 0 are padding and contribute no candidates (DESIGN.md §4);
+`route_and_scan` fuses centroid routing (matmul + lax.top_k) with the scan
+so the whole route->scan path is one jitted device call.
 """
 from __future__ import annotations
 
@@ -19,11 +26,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG = 3.4e38  # "+infinity" sentinel (plain float: jnp consts can't be captured)
+from repro.kernels.ref import NEG
+
+DEFAULT_PROBE_TILE = 4
 
 
-def _merge_topk(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
-    """Merge candidate (dists [1, M], ids [1, M]) into sorted refs [1, K]."""
+def _merge_topk_sort(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
+    """Sort-based merge: concat the running top-k with the new candidates
+    ([1, M]) and take the k smallest in one stable sort_key_val (ties keep
+    flat candidate order, matching lax.top_k in the reference)."""
+    all_d = jnp.concatenate([out_d_ref[...], cand_d], axis=1)   # [1, K+M]
+    all_i = jnp.concatenate([out_i_ref[...], cand_i], axis=1)
+    sd, si = jax.lax.sort_key_val(all_d, all_i, dimension=1)
+    out_d_ref[...] = jax.lax.slice_in_dim(sd, 0, k, axis=1)
+    out_i_ref[...] = jax.lax.slice_in_dim(si, 0, k, axis=1)
+
+
+def _merge_topk_argmin(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
+    """Legacy O(k·M) sequential-argmin merge — kept for the before/after
+    microbenchmark (bench_kernels.py) and as a lowering fallback."""
     cur_d = out_d_ref[...]
     cur_i = out_i_ref[...]
     all_d = jnp.concatenate([cur_d, cand_d], axis=1)   # [1, K+M]
@@ -32,8 +53,12 @@ def _merge_topk(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
     def body(j, carry):
         ad, ai, od, oi = carry
         pos = jnp.argmin(ad[0])
-        od = jax.lax.dynamic_update_slice(od, ad[0, pos][None, None], (0, j))
-        oi = jax.lax.dynamic_update_slice(oi, ai[0, pos][None, None], (0, j))
+        dval = ad[0, pos]
+        # an exhausted (all-sentinel) pool re-selects position 0, whose id
+        # slot holds an already-picked real id — emit -1 for sentinels
+        ival = jnp.where(dval >= NEG, jnp.int32(-1), ai[0, pos])
+        od = jax.lax.dynamic_update_slice(od, dval[None, None], (0, j))
+        oi = jax.lax.dynamic_update_slice(oi, ival[None, None], (0, j))
         ad = ad.at[0, pos].set(NEG)
         return ad, ai, od, oi
 
@@ -44,60 +69,117 @@ def _merge_topk(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
     out_i_ref[...] = oi
 
 
-def _kernel(probe_ref, lens_ref, q_ref, data_ref, out_d_ref, out_i_ref, *,
-            k: int, cap: int):
-    p = pl.program_id(1)
+_MERGES = {"sort": _merge_topk_sort, "argmin": _merge_topk_argmin}
 
-    @pl.when(p == 0)
+
+def _kernel(probe_ref, lens_ref, q_ref, *refs, k: int, cap: int, pt: int,
+            merge: str):
+    data_refs = refs[:pt]                           # pt x [1, CAP, d]
+    out_d_ref, out_i_ref = refs[pt], refs[pt + 1]
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
     def _init():
         out_d_ref[...] = jnp.full(out_d_ref.shape, NEG, jnp.float32)
         out_i_ref[...] = jnp.full(out_i_ref.shape, -1, jnp.int32)
 
     b = pl.program_id(0)
-    cid = probe_ref[b, p]
     q = q_ref[...]                                  # [1, d]
-    x = data_ref[0]                                 # [CAP, d]
-    # L2 distance via matmul on the MXU:  ||x||^2 - 2 x.q  (+||q||^2 const)
-    xx = jnp.sum(x * x, axis=1, keepdims=True)      # [CAP, 1]
-    xq = jax.lax.dot_general(x, q, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)  # [CAP, 1]
-    dist = (xx - 2.0 * xq).T                        # [1, CAP]
     qq = jnp.sum(q * q)
-    dist = dist + qq
-    slot = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
-    valid = slot < lens_ref[cid]
-    dist = jnp.where(valid, dist, NEG)
-    gids = jnp.where(valid, cid * cap + slot, -1)
-    _merge_topk(dist, gids, out_d_ref, out_i_ref, k)
+    cand_d = []
+    cand_i = []
+    for j in range(pt):
+        cid = probe_ref[b, t * pt + j]
+        safe = jnp.maximum(cid, 0)                  # padded probe -> block 0
+        x = data_refs[j][0]                         # [CAP, d]
+        # L2 distance via matmul on the MXU: ||x||^2 - 2 x.q + ||q||^2
+        xx = jnp.sum(x * x, axis=1, keepdims=True)  # [CAP, 1]
+        xq = jax.lax.dot_general(x, q, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        dist = (xx - 2.0 * xq).T + qq               # [1, CAP]
+        slot = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
+        valid = (slot < lens_ref[safe]) & (cid >= 0)
+        cand_d.append(jnp.where(valid, dist, NEG))
+        cand_i.append(jnp.where(valid, safe * cap + slot, -1))
+    cand_d = cand_d[0] if pt == 1 else jnp.concatenate(cand_d, axis=1)
+    cand_i = cand_i[0] if pt == 1 else jnp.concatenate(cand_i, axis=1)
+    _MERGES[merge](cand_d, cand_i, out_d_ref, out_i_ref, k)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
-def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True):
+def _data_index(b, t, pr, ln, *, j, pt):
+    # Padded probes (id -1) are clamped to block 0; the kernel masks them.
+    return (jnp.maximum(pr[b, t * pt + j], 0), 0, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "interpret", "merge", "probe_tile"))
+def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True,
+            merge: str = "sort", probe_tile: int | None = None):
     """q: [B, d] f32; data: [NC, CAP, d] f32; lens: [NC] i32;
-    probe_ids: [B, P] i32. Returns (dists [B, k], ids [B, k])."""
+    probe_ids: [B, P] i32 (ids < 0 are skipped padding).
+    Returns (dists [B, k], ids [B, k]) — ids are global slots c*CAP+j,
+    -1 where fewer than k valid candidates exist."""
     B, d = q.shape
     NC, CAP, _ = data.shape
     P = probe_ids.shape[1]
+    if probe_tile is not None and probe_tile < 1:
+        raise ValueError(f"probe_tile must be >= 1, got {probe_tile}")
+    if P == 0:                                      # nothing probed
+        return (jnp.full((B, k), NEG, jnp.float32),
+                jnp.full((B, k), -1, jnp.int32))
+    pt = min(probe_tile or DEFAULT_PROBE_TILE, P)
+    T = pl.cdiv(P, pt)
+    probe_ids = probe_ids.astype(jnp.int32)
+    if T * pt != P:                                 # pad to a whole tile
+        probe_ids = jnp.pad(probe_ids, ((0, 0), (0, T * pt - P)),
+                            constant_values=-1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                      # probe_ids, lens
-        grid=(B, P),
+        grid=(B, T),
         in_specs=[
-            pl.BlockSpec((1, d), lambda b, p, pr, ln: (b, 0)),
-            pl.BlockSpec((1, CAP, d), lambda b, p, pr, ln: (pr[b, p], 0, 0)),
+            pl.BlockSpec((1, d), lambda b, t, pr, ln: (b, 0)),
+            *[pl.BlockSpec((1, CAP, d),
+                           functools.partial(_data_index, j=j, pt=pt))
+              for j in range(pt)],
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda b, p, pr, ln: (b, 0)),
-            pl.BlockSpec((1, k), lambda b, p, pr, ln: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t, pr, ln: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t, pr, ln: (b, 0)),
         ],
     )
     kern = pl.pallas_call(
-        functools.partial(_kernel, k=k, cap=CAP),
+        functools.partial(_kernel, k=k, cap=CAP, pt=pt, merge=merge),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((B, k), jnp.float32),
                    jax.ShapeDtypeStruct((B, k), jnp.int32)],
         interpret=interpret,
     )
-    out_d, out_i = kern(probe_ids.astype(jnp.int32), lens.astype(jnp.int32),
-                        q.astype(jnp.float32), data.astype(jnp.float32))
+    data = data.astype(jnp.float32)
+    out_d, out_i = kern(probe_ids, lens.astype(jnp.int32),
+                        q.astype(jnp.float32), *([data] * pt))
     return out_d, out_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_probe", "k", "interpret", "merge",
+                                    "probe_tile"))
+def route_and_scan(q, centroids, data, lens, n_probe: int = 4, k: int = 10,
+                   interpret: bool = True, merge: str = "sort",
+                   probe_tile: int | None = None):
+    """Fused route->scan: centroid routing (one MXU matmul + lax.top_k) and
+    the ecoscan kernel inside a single jit — no host round-trip between
+    choosing the probes and scanning them (DESIGN.md §4).
+
+    q: [B, d]; centroids: [NC, d]; data/lens as in `ecoscan`.
+    Returns (dists [B, k], slots [B, k], probes [B, n_probe])."""
+    q = q.astype(jnp.float32)
+    cent = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, axis=1, keepdims=True)
+          - 2.0 * q @ cent.T
+          + jnp.sum(cent * cent, axis=1)[None, :])  # [B, NC]
+    _, probes = jax.lax.top_k(-d2, n_probe)
+    probes = probes.astype(jnp.int32)
+    dists, slots = ecoscan(q, data, lens, probes, k=k, interpret=interpret,
+                           merge=merge, probe_tile=probe_tile)
+    return dists, slots, probes

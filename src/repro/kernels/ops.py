@@ -8,6 +8,7 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.ecoscan import ecoscan as _ecoscan
+from repro.kernels.ecoscan import route_and_scan as _route_and_scan
 from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
 from repro.kernels.scr_score import scr_score as _scr_score
 from repro.kernels.pq_adc import pq_adc as _pq_adc
@@ -19,11 +20,71 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def ecoscan(q, data, lens, probe_ids, k=10, use_pallas=True):
+# Mosaic support for lax.sort_key_val inside kernel bodies varies by
+# version; if the sort-based merge fails to lower on real TPU we fall back
+# to the argmin merge and remember (interpret mode always sorts). A racy
+# write from concurrent serving threads is benign: worst case both compile.
+_SORT_MERGE_BROKEN = False
+_SORT_MERGE_FAILS = 0
+# a genuine lowering failure sticks immediately; anything else (possibly
+# transient, e.g. RESOURCE_EXHAUSTED) gets this many sort retries before
+# we stop paying a doomed trace+compile on every call
+_SORT_MERGE_MAX_RETRIES = 3
+
+# deliberately narrow: the failing op is sort_key_val, so loose substrings
+# like "sort" would match transient errors too and defeat the retry budget
+_LOWERING_MARKERS = ("mosaic", "unimplemented", "not implemented",
+                     "unsupported", "cannot lower", "failed to lower")
+
+
+def _with_merge_fallback(call, merge, interpret):
+    global _SORT_MERGE_BROKEN, _SORT_MERGE_FAILS
+    if merge == "sort" and not interpret and _SORT_MERGE_BROKEN:
+        merge = "argmin"
+    try:
+        out = call(merge)
+        if merge == "sort" and not interpret:
+            _SORT_MERGE_FAILS = 0       # budget counts CONSECUTIVE failures
+        return out
+    except Exception as e:
+        if merge == "sort" and not interpret:
+            out = call("argmin")         # re-raises if merge wasn't the issue
+            _SORT_MERGE_FAILS += 1
+            is_lowering = any(m in str(e).lower() for m in _LOWERING_MARKERS)
+            if is_lowering or _SORT_MERGE_FAILS >= _SORT_MERGE_MAX_RETRIES:
+                import warnings
+                warnings.warn(
+                    f"ecoscan sort merge failed on "
+                    f"{jax.default_backend()} ({type(e).__name__}"
+                    f"{'' if is_lowering else ', persistent'}); using "
+                    f"the argmin merge from now on", stacklevel=3)
+                _SORT_MERGE_BROKEN = True
+            return out
+        raise
+
+
+def ecoscan(q, data, lens, probe_ids, k=10, use_pallas=True, merge="sort"):
     if use_pallas:
-        return _ecoscan(q, data, lens, probe_ids, k=k,
-                        interpret=not _on_tpu())
+        interpret = not _on_tpu()
+        return _with_merge_fallback(
+            lambda m: _ecoscan(q, data, lens, probe_ids, k=k,
+                               interpret=interpret, merge=m),
+            merge, interpret)
     return ref.ecoscan(q, data, lens, probe_ids, k)
+
+
+def route_and_scan(q, centroids, data, lens, n_probe=4, k=10,
+                   use_pallas=True, merge="sort"):
+    """One fused device call: centroid routing + probed-cluster scan.
+    Returns (dists [B,k], slots [B,k], probes [B,n_probe])."""
+    if use_pallas:
+        interpret = not _on_tpu()
+        return _with_merge_fallback(
+            lambda m: _route_and_scan(q, centroids, data, lens,
+                                      n_probe=n_probe, k=k,
+                                      interpret=interpret, merge=m),
+            merge, interpret)
+    return ref.route_and_scan(q, centroids, data, lens, n_probe, k)
 
 
 def kmeans_assign(x, centroids, use_pallas=True):

@@ -4,27 +4,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# "+infinity" sentinel shared with the ecoscan kernel (plain float: jnp
+# consts can't be captured inside Pallas kernel bodies).
+NEG = 3.4e38
+
 
 def ecoscan(q, data, lens, probe_ids, k):
     """EcoVector inverted-list scan reference.
 
     q: [B, d]; data: [NC, CAP, d]; lens: [NC] valid counts;
-    probe_ids: [B, P] cluster ids per query. Returns (dists [B,K], ids [B,K])
-    where ids are global slot ids cluster*CAP+j, L2 distances ascending.
+    probe_ids: [B, P] cluster ids per query (ids < 0 are skipped padding).
+    Returns (dists [B,K], ids [B,K]) where ids are global slot ids
+    cluster*CAP+j (-1 for missing candidates), L2 distances ascending.
     """
     B, d = q.shape
     NC, CAP, _ = data.shape
-    gathered = data[probe_ids]                    # [B, P, CAP, d]
+    safe = jnp.maximum(probe_ids, 0)
+    gathered = data[safe]                         # [B, P, CAP, d]
     diff = gathered - q[:, None, None, :]
     dist = jnp.sum(diff * diff, axis=-1)          # [B, P, CAP]
     slot = jnp.arange(CAP)[None, None, :]
-    valid = slot < lens[probe_ids][:, :, None]
-    dist = jnp.where(valid, dist, jnp.inf)
-    ids = probe_ids[:, :, None] * CAP + slot      # [B, P, CAP]
+    valid = (slot < lens[safe][:, :, None]) & (probe_ids[:, :, None] >= 0)
+    dist = jnp.where(valid, dist, NEG)
+    ids = jnp.where(valid, safe[:, :, None] * CAP + slot, -1)
     flat_d = dist.reshape(B, -1)
     flat_i = ids.reshape(B, -1).astype(jnp.int32)
     vals, idx = jax.lax.top_k(-flat_d, k)
     return -vals, jnp.take_along_axis(flat_i, idx, axis=1)
+
+
+def route_and_scan(q, centroids, data, lens, n_probe, k):
+    """Fused route->scan reference: dense centroid top-k then `ecoscan`."""
+    q = q.astype(jnp.float32)
+    cent = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, axis=1, keepdims=True) - 2.0 * q @ cent.T
+          + jnp.sum(cent * cent, axis=1)[None, :])
+    _, probes = jax.lax.top_k(-d2, n_probe)
+    probes = probes.astype(jnp.int32)
+    dists, slots = ecoscan(q, data, lens, probes, k)
+    return dists, slots, probes
 
 
 def kmeans_assign(x, centroids):

@@ -51,15 +51,24 @@ def _tok_count(text: str) -> int:
 
 class RAGBase:
     name = "base"
+    # Retrieval through the index's fused batched device path
+    # (EcoVector.search_device_batched) when available. False = host
+    # search; True = always device; None = auto (device on TPU only — the
+    # interpret-mode Pallas path on other backends is correctness-grade,
+    # not a serving fast path). MobileRAG defaults to auto.
+    device_retrieval: Optional[bool] = False
 
     def __init__(self, docs: Sequence[str], embed: Callable, *,
                  top_k: int = 3, slm: str = "qwen25_0_5b", index=None,
-                 generator: Optional[Callable] = None):
+                 generator: Optional[Callable] = None,
+                 device_retrieval: Optional[bool] = None):
         self.docs = list(docs)
         self.embed = embed
         self.top_k = top_k
         self.slm = SLM_SPEEDS[slm]
         self.generator = generator
+        if device_retrieval is not None:
+            self.device_retrieval = device_retrieval
         if hasattr(embed, "fit") and not getattr(embed, "fitted", True):
             embed.fit(self.docs)
         t0 = time.perf_counter()
@@ -72,9 +81,26 @@ class RAGBase:
                        n_clusters=max(4, len(self.docs) // 64))
         return ev.build(self.doc_vecs)
 
+    def _use_device_retrieval(self) -> bool:
+        if self.device_retrieval is None:
+            import jax
+            return jax.default_backend() == "tpu"
+        return self.device_retrieval
+
+    def _retrieve_batch(self, qvs: np.ndarray, k: int) -> List[List[int]]:
+        """Retrieve for a [B, d] batch of query vectors in one call when
+        the index has a batched device path, else per-query host search."""
+        qvs = np.atleast_2d(np.asarray(qvs, np.float32))
+        if self._use_device_retrieval() and hasattr(self.index,
+                                                    "search_device_batched"):
+            ids_b, _ = self.index.search_device_batched(qvs, k=k, n_probe=4)
+        else:
+            ids_b = [self.index.search(qv, k=k, n_probe=4)[0] for qv in qvs]
+        return [[int(i) for i in row if 0 <= int(i) < len(self.docs)]
+                for row in ids_b]
+
     def _retrieve(self, qv, k):
-        ids, _ = self.index.search(qv, k=k, n_probe=4)
-        return [int(i) for i in ids if 0 <= int(i) < len(self.docs)]
+        return self._retrieve_batch(qv[None], k)[0]
 
     def _make_prompt(self, query: str, docs: List[str],
                      order: List[int]) -> str:
@@ -97,18 +123,37 @@ class RAGBase:
         return RAGAnswer(prompt, doc_ids, t_ret, t_post, ptok, ttft,
                          e_cpu + e_lm, scr, gen)
 
+    # Pipelines with simple retrieve->post flows set `_finish(query, ids,
+    # t_ret)` and inherit the shared answer/answer_batch templates below.
+    _finish = None
+
     def answer(self, query: str) -> RAGAnswer:
-        raise NotImplementedError
+        if self._finish is None:
+            raise NotImplementedError
+        t0 = time.perf_counter()
+        qv = np.asarray(self.embed([query]))[0]
+        ids = self._retrieve(qv, self.top_k)
+        t_ret = time.perf_counter() - t0
+        return self._finish(query, ids, t_ret)
+
+    def answer_batch(self, queries: Sequence[str]) -> List[RAGAnswer]:
+        """Batched serving entry point: one embed + one (device-)batched
+        retrieval for the whole query set, then per-query post-processing.
+        Pipelines without a `_finish` hook fall back to per-query answers."""
+        if self._finish is None:
+            return [self.answer(q) for q in queries]
+        t0 = time.perf_counter()
+        qvs = np.asarray(self.embed(list(queries)), np.float32)
+        ids_b = self._retrieve_batch(qvs, self.top_k)
+        t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
+        return [self._finish(q, ids, t_ret)
+                for q, ids in zip(queries, ids_b)]
 
 
 class NaiveRAG(RAGBase):
     name = "Naive-RAG"
 
-    def answer(self, query: str) -> RAGAnswer:
-        t0 = time.perf_counter()
-        qv = np.asarray(self.embed([query]))[0]
-        ids = self._retrieve(qv, self.top_k)
-        t_ret = time.perf_counter() - t0
+    def _finish(self, query: str, ids: List[int], t_ret: float) -> RAGAnswer:
         prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
         return self._finalize(query, prompt, ids, t_ret, 0.0)
 
@@ -163,18 +208,16 @@ class EdgeRAG(RAGBase):
 
 
 class MobileRAG(RAGBase):
-    """EcoVector + SCR (the paper's method)."""
+    """EcoVector + SCR (the paper's method). Retrieval runs on the fused
+    batched EcoVector device path (route + scan in one jitted call)."""
     name = "MobileRAG"
+    device_retrieval = None          # auto: fused device path on TPU
 
     def __init__(self, *args, scr: SCRConfig = SCRConfig(), **kw):
         super().__init__(*args, **kw)
         self.scr_cfg = scr
 
-    def answer(self, query: str) -> RAGAnswer:
-        t0 = time.perf_counter()
-        qv = np.asarray(self.embed([query]))[0]
-        ids = self._retrieve(qv, self.top_k)
-        t_ret = time.perf_counter() - t0
+    def _finish(self, query: str, ids: List[int], t_ret: float) -> RAGAnswer:
         t1 = time.perf_counter()
         res = apply_scr(query, [self.docs[i] for i in ids], self.embed,
                         self.scr_cfg)
@@ -192,14 +235,19 @@ PIPELINES = {
 }
 
 
+def answer_in_context(example, ans: RAGAnswer) -> bool:
+    """The planted answer sentence survived retrieval *and* (for
+    MobileRAG) SCR condensation — the single accuracy predicate shared by
+    every Table-5 consumer."""
+    return example.answer.lower() in ans.prompt.lower()
+
+
 def accuracy(pipe: RAGBase, examples, max_q: Optional[int] = None) -> float:
-    """Answer-in-final-context accuracy: the planted answer sentence must
-    survive retrieval *and* (for MobileRAG) SCR condensation. This is the
-    retrieval-quality proxy for Table 5 accuracy (no on-device sLM here)."""
+    """Answer-in-final-context accuracy: the retrieval-quality proxy for
+    Table 5 accuracy (no on-device sLM here)."""
     n = ok = 0
     for ex in examples[:max_q]:
-        ans = pipe.answer(ex.question)
-        if ex.answer.lower() in ans.prompt.lower():
+        if answer_in_context(ex, pipe.answer(ex.question)):
             ok += 1
         n += 1
     return ok / max(n, 1)

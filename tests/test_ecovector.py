@@ -87,3 +87,160 @@ def test_update_only_touches_one_cluster(index, data):
     # one load for the owning cluster (centroid graph is in RAM)
     assert index.stats.disk_loads == before + 1
     index.delete(77_777)
+
+
+# ------------------------------------------------ fresh-index device tests
+
+
+def small_index(tmp_path, n_clusters=8, cache_clusters=0):
+    rng = np.random.default_rng(1)
+    centers = rng.normal(size=(6, 16)) * 6
+    X = np.concatenate([c + rng.normal(size=(60, 16))
+                        for c in centers]).astype(np.float32)
+    idx = EcoVector(16, n_clusters=n_clusters, M=8, ef_construction=40,
+                    storage_dir=str(tmp_path),
+                    cache_clusters=cache_clusters).build(X)
+    return idx, X
+
+
+def test_search_device_batched_parity_with_host(index, data):
+    """Batched fused device search matches host search recall@10 within
+    0.02 (it is exhaustive within probed clusters, so typically better)."""
+    X, Q = data
+    rec_h = np.mean([len(set(map(int, index.search(q, 10, n_probe=4,
+                                                   ef_search=64)[0]))
+                         & gt(X, q)) / 10 for q in Q])
+    ids_d, _ = index.search_device_batched(Q, k=10, n_probe=4)
+    rec_d = np.mean([len(set(map(int, ids_d[i])) & gt(X, Q[i])) / 10
+                     for i in range(len(Q))])
+    assert rec_d >= rec_h - 0.02
+
+
+def test_incremental_repack_only_touches_owner(tmp_path):
+    """insert() + device query must rewrite only the owning cluster's
+    block — no full [NC, CAP, d] rebuild, no O(N) disk re-read."""
+    idx, X = small_index(tmp_path)
+    idx.search_device_batched(X[:2], k=5, n_probe=4)   # builds the pack
+    assert idx.stats.pack_full_builds == 1
+    loads0 = idx.stats.disk_loads
+    repacks0 = idx.stats.pack_cluster_repacks
+    idx.insert(50_000, X[0] + 0.01)
+    ids, _ = idx.search_device_batched(X[0] + 0.01, k=5, n_probe=4)
+    assert 50_000 in set(map(int, ids[0]))
+    assert idx.stats.pack_full_builds == 1             # still the first one
+    assert idx.stats.pack_cluster_repacks == repacks0 + 1
+    # insert pays the only load; the repack reuses the in-hand graph
+    assert idx.stats.disk_loads - loads0 == 1
+    idx.delete(50_000)
+    ids, _ = idx.search_device_batched(X[0] + 0.01, k=5, n_probe=4)
+    assert 50_000 not in set(map(int, ids[0]))
+    assert idx.stats.pack_full_builds == 1
+    assert idx.stats.pack_cluster_repacks == repacks0 + 2
+
+
+def test_pack_grows_on_overflow(tmp_path):
+    """Flooding one cluster past CAP grows the pack geometrically instead
+    of truncating; everything stays searchable."""
+    idx, X = small_index(tmp_path)
+    idx.device_pack()
+    cap0 = idx._device_pack[3]
+    target = X[5] + 0.5
+    rng = np.random.default_rng(2)
+    for j in range(cap0 + 10):
+        idx.insert(60_000 + j, target + 0.3 * rng.normal(size=16))
+    probe_v = target
+    ids, _ = idx.search_device_batched(probe_v, k=10,
+                                       n_probe=idx.n_clusters)
+    assert idx.stats.pack_grows >= 1
+    assert idx._device_pack[3] > cap0
+    assert idx.stats.truncated_vectors == 0
+    assert any(int(i) >= 60_000 for i in ids[0])
+
+
+def test_device_pack_forced_cap_warns_and_counts(tmp_path):
+    idx, X = small_index(tmp_path)
+    with pytest.warns(UserWarning, match="truncates"):
+        idx.device_pack(cap=4)
+    assert idx.stats.truncated_vectors > 0
+
+
+def test_forced_cap_is_stable_budget_and_liftable(tmp_path):
+    """A forced cap is a hard per-cluster budget: incremental repacks keep
+    honoring it (loudly, never oscillating back to auto cap), and
+    force_full=True without cap lifts it and restores every vector."""
+    idx, X = small_index(tmp_path)
+    with pytest.warns(UserWarning, match="truncates"):
+        idx.device_pack(cap=4)
+    idx.insert(70_000, X[0] + 0.01)
+    with pytest.warns(UserWarning, match="truncates"):
+        data, lens, slot_ids, cap = idx.device_pack(cap=4)
+    assert cap == 4                             # budget kept, no oscillation
+    assert idx.stats.pack_full_builds == 1      # in-place repack, not rebuild
+    assert (lens <= 4).all()
+    # escape hatch: auto-cap full rebuild restores everything
+    data, lens, slot_ids, cap = idx.device_pack(force_full=True)
+    assert int(lens.sum()) == len(idx.assign)
+    ids, _ = idx.search_device_batched(X[10], k=10, n_probe=idx.n_clusters)
+    assert 10 in set(map(int, ids[0]))
+
+
+def test_cluster_cache_is_lru(tmp_path):
+    """Cache hits promote (move-to-end); eviction drops the LRU entry."""
+    idx, _ = small_index(tmp_path, cache_clusters=2)
+    idx.stats.disk_loads = 0
+    idx._load_cluster(0)
+    idx._load_cluster(1)
+    idx._load_cluster(0)      # promote 0 over 1
+    idx._load_cluster(2)      # evicts 1 (LRU), keeps 0
+    n = idx.stats.disk_loads
+    idx._load_cluster(0)
+    assert idx.stats.disk_loads == n        # hit: 0 survived eviction
+    idx._load_cluster(1)
+    assert idx.stats.disk_loads == n + 1    # miss: 1 was the LRU victim
+
+
+def test_forced_cap_registers_without_rebuild(tmp_path):
+    """device_pack(cap=X) where X happens to equal the current auto cap
+    must still register X as a hard budget (no silent growth past it)."""
+    idx, X = small_index(tmp_path)
+    _, _, _, auto_cap = idx.device_pack()
+    idx.device_pack(cap=auto_cap)          # same size, now an explicit budget
+    grows0 = idx.stats.pack_grows
+    rng = np.random.default_rng(5)
+    target = X[0]
+    with pytest.warns(UserWarning, match="truncates"):
+        for j in range(auto_cap + 5):
+            idx.insert(80_000 + j, target + 0.2 * rng.normal(size=16))
+        _, _, _, cap = idx.device_pack()
+    assert cap == auto_cap                 # budget held
+    assert idx.stats.pack_grows == grows0  # never grew past it
+
+
+def test_truncated_vectors_tracks_current_state(tmp_path):
+    """stats.truncated_vectors reflects rows currently missing from the
+    pack — repeated repacks of the same over-budget cluster must not
+    inflate it."""
+    idx, X = small_index(tmp_path)
+    with pytest.warns(UserWarning, match="truncates"):
+        idx.device_pack(cap=4)
+    t0 = idx.stats.truncated_vectors
+    assert t0 == len(idx.assign) - 4 * idx.n_clusters
+    with pytest.warns(UserWarning, match="truncates"):
+        for j in range(3):
+            idx.insert(90_000 + j, X[0] + 0.01 * j)
+            idx.device_pack()
+    # 3 net new vectors dropped (same cluster repacked thrice)
+    assert idx.stats.truncated_vectors == t0 + 3
+    idx.device_pack(force_full=True)
+    assert idx.stats.truncated_vectors == 0
+
+
+def test_search_stats_count_per_query_delta(tmp_path):
+    """distance_ops must count per-query work, not the pickled graphs'
+    lifetime counters (which include construction-time distances)."""
+    idx, X = small_index(tmp_path)
+    construction = sum(idx._load_cluster(c).n_dist
+                       for c in range(idx.n_clusters))
+    idx.stats.distance_ops = 0
+    idx.search(X[0], 10, n_probe=idx.n_clusters)
+    assert 0 < idx.stats.distance_ops < construction

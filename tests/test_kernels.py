@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.ecoscan import ecoscan
+from repro.kernels.ecoscan import ecoscan, route_and_scan
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_prefill import flash_prefill
 
@@ -30,6 +30,100 @@ def test_ecoscan_sweep(B, d, NC, CAP, P, K):
     dr, ir = ref.ecoscan(q, data, lens, probes, K)
     np.testing.assert_allclose(dk, dr, rtol=2e-5, atol=2e-5)
     assert (np.asarray(ik) == np.asarray(ir)).all()
+
+
+@pytest.mark.parametrize("merge", ["sort", "argmin"])
+@pytest.mark.parametrize("probe_tile", [1, 2, 3, 4])
+def test_ecoscan_merge_and_tiling_sweep(merge, probe_tile):
+    """Both merge strategies and every probe tiling (including tiles that
+    don't divide P) must match the reference exactly."""
+    B, d, NC, CAP, P, K = 3, 48, 9, 64, 5, 8
+    q = jax.random.normal(k(0), (B, d))
+    data = jax.random.normal(k(1), (NC, CAP, d))
+    lens = jax.random.randint(k(2), (NC,), 1, CAP + 1)
+    probes = jnp.stack([jax.random.permutation(k(3 + i), NC)[:P]
+                        for i in range(B)]).astype(jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=K, merge=merge,
+                     probe_tile=probe_tile)
+    dr, ir = ref.ecoscan(q, data, lens, probes, K)
+    np.testing.assert_allclose(dk, dr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(ik) == np.asarray(ir)).all()
+
+
+@pytest.mark.parametrize("merge", ["sort", "argmin"])
+def test_ecoscan_exhausted_candidates_emit_sentinels(merge):
+    """Fewer than k valid candidates across multiple grid steps must pad
+    with id -1, never duplicate an already-selected id (regression for the
+    argmin fallback re-picking stale slots)."""
+    q = jnp.zeros((1, 16))
+    data = jnp.zeros((4, 32, 16))
+    lens = jnp.asarray([3, 0, 0, 0], jnp.int32)
+    probes = jnp.asarray([[0, 1]], jnp.int32)
+    _, ik = ecoscan(q, data, lens, probes, k=6, merge=merge, probe_tile=1)
+    row = np.asarray(ik)[0]
+    assert sorted(row[:3]) == [0, 1, 2]
+    assert (row[3:] == -1).all()
+
+
+def test_ecoscan_empty_clusters():
+    """Probing only empty clusters yields all-sentinel output."""
+    q = jax.random.normal(k(0), (2, 16))
+    data = jax.random.normal(k(1), (4, 32, 16))
+    lens = jnp.asarray([0, 5, 0, 0], jnp.int32)
+    probes = jnp.asarray([[0, 2], [2, 3]], jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=4)
+    dr, ir = ref.ecoscan(q, data, lens, probes, 4)
+    assert (np.asarray(ik) == -1).all()
+    assert (np.asarray(ir) == -1).all()
+    np.testing.assert_allclose(dk, dr)
+
+
+def test_ecoscan_all_padded_probes():
+    """Probe ids < 0 are padding and contribute no candidates."""
+    q = jax.random.normal(k(0), (2, 16))
+    data = jax.random.normal(k(1), (4, 32, 16))
+    lens = jnp.full((4,), 32, jnp.int32)
+    probes = -jnp.ones((2, 3), jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=4)
+    dr, ir = ref.ecoscan(q, data, lens, probes, 4)
+    assert (np.asarray(ik) == -1).all()
+    assert (np.asarray(ir) == -1).all()
+    # ...and a mix of real + padded probes matches the real-only result
+    probes_mix = jnp.asarray([[1, -1, 2], [0, 3, -1]], jnp.int32)
+    probes_real = jnp.asarray([[1, 2], [0, 3]], jnp.int32)
+    dm, im = ecoscan(q, data, lens, probes_mix, k=4)
+    dr2, ir2 = ecoscan(q, data, lens, probes_real, k=4)
+    np.testing.assert_allclose(dm, dr2, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(im) == np.asarray(ir2)).all()
+
+
+def test_ecoscan_duplicate_probes():
+    """A cluster probed twice must match the reference (duplicates are
+    surfaced identically by kernel and oracle)."""
+    q = jax.random.normal(k(0), (2, 16))
+    data = jax.random.normal(k(1), (4, 32, 16))
+    lens = jnp.full((4,), 32, jnp.int32)
+    probes = jnp.asarray([[1, 1, 2], [3, 0, 3]], jnp.int32)
+    dk, ik = ecoscan(q, data, lens, probes, k=6)
+    dr, ir = ref.ecoscan(q, data, lens, probes, 6)
+    np.testing.assert_allclose(dk, dr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(ik) == np.asarray(ir)).all()
+
+
+@pytest.mark.parametrize("n_probe", [1, 3, 8])
+def test_route_and_scan_fused_matches_ref(n_probe):
+    """The single-call fused route->scan equals routing + scan done by the
+    pure-jnp oracle."""
+    B, d, NC, CAP, K = 4, 32, 8, 64, 7
+    q = jax.random.normal(k(0), (B, d))
+    cent = jax.random.normal(k(1), (NC, d))
+    data = jax.random.normal(k(2), (NC, CAP, d))
+    lens = jax.random.randint(k(3), (NC,), 1, CAP + 1)
+    dk, sk, pk = route_and_scan(q, cent, data, lens, n_probe=n_probe, k=K)
+    dr, sr, pr = ref.route_and_scan(q, cent, data, lens, n_probe, K)
+    assert (np.asarray(pk) == np.asarray(pr)).all()
+    np.testing.assert_allclose(dk, dr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(sk) == np.asarray(sr)).all()
 
 
 def test_ecoscan_respects_lens():
