@@ -82,6 +82,20 @@ def run(mode="quick"):
     emit("kernel.scr_score.pallas_interpret",
          _time(ops.scr_score, w, qq, use_pallas=True) * 1e6, "NW=512")
 
+    # fused SCR select: score + per-doc segment-argmax in one call over
+    # the corpus-resident window pack (DESIGN.md §7)
+    ND, CAPW, K = 256, 16, 8
+    wdata = jax.random.normal(k0, (ND, CAPW, 384))
+    wlens = jnp.full((ND,), CAPW, jnp.int32)
+    dids = jax.random.randint(jax.random.PRNGKey(9), (4, K), 0, ND,
+                              jnp.int32)
+    emit("kernel.scr_select.ref",
+         _time(ops.scr_select, qq, wdata, wlens, dids,
+               use_pallas=False) * 1e6, f"ND={ND};CAPW={CAPW};K={K}")
+    emit("kernel.scr_select.pallas_interpret",
+         _time(ops.scr_select, qq, wdata, wlens, dids,
+               use_pallas=True) * 1e6, f"ND={ND};CAPW={CAPW};K={K}")
+
 
 if __name__ == "__main__":
     run()

@@ -1,11 +1,14 @@
 """Table 4 + Figure 12: SCR token reduction & accuracy across window /
-overlap settings, vs the compressor baseline and Naive small-chunks."""
+overlap settings, vs the compressor baseline and Naive small-chunks —
+plus real per-query SCR post-retrieval latency, before/after the
+corpus-resident window index (per-query re-embed vs `scr_select` over
+precomputed window blocks, DESIGN.md §6–§7)."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.scr import SCRConfig, apply_scr, split_sentences
+from repro.core.scr import SCRConfig, split_sentences
 from repro.data.synthetic import make_qa_corpus
 from repro.serving.embedder import HashEmbedder
 from repro.serving.rag import MobileRAG, NaiveRAG, accuracy
@@ -24,43 +27,81 @@ def _compressor(docs, ratio=0.4):
     return out
 
 
+def _answers(pipe, questions):
+    """Warm the jit/dispatch caches, then answer every question once."""
+    pipe.answer(questions[0])
+    return [pipe.answer(q) for q in questions]
+
+
+def _latency(label, corpus, mobile, questions):
+    """Per-query SCR post-retrieval latency, before/after the window
+    index: `legacy` re-splits/re-windows/re-embeds every window of every
+    retrieved doc per query; `mobile` consumes the corpus-resident index
+    (single-query and fully batched `answer_batch` serving paths). Both
+    must select identical spans in identical order."""
+    legacy = MobileRAG(corpus.docs, mobile.embed, top_k=3,
+                       scr=mobile.scr_cfg, use_window_index=False)
+    ans_l = _answers(legacy, questions)
+    ans_w = _answers(mobile, questions)
+    mismatch = sum(1 for a, b in zip(ans_l, ans_w)
+                   if a.scr.spans != b.scr.spans
+                   or a.scr.order != b.scr.order)
+    t_leg = float(np.mean([a.post_s for a in ans_l]))
+    t_one = float(np.mean([a.post_s for a in ans_w]))
+    mobile.answer_batch(questions)                 # warm at batch shape
+    t_bat = float(np.mean([a.post_s
+                           for a in mobile.answer_batch(questions)]))
+    emit(f"scr.latency.{label}", t_bat * 1e6,
+         f"legacy_reembed_ms={t_leg * 1e3:.3f};"
+         f"window_index_ms={t_one * 1e3:.3f};"
+         f"window_index_batched_ms={t_bat * 1e3:.3f};"
+         f"speedup={t_leg / max(t_one, 1e-12):.1f}x;"
+         f"speedup_batched={t_leg / max(t_bat, 1e-12):.1f}x;"
+         f"parity={'ok' if mismatch == 0 else f'{mismatch}mism'};"
+         f"index_build_ms={mobile.scr_build_s * 1e3:.1f}")
+
+
 def run(mode="quick"):
     nq = 25 if mode == "quick" else 100
     for label, style in STYLES.items():
         corpus = make_qa_corpus(style, n_docs=150, n_questions=nq, seed=0)
         emb = HashEmbedder(dim=128).fit(corpus.docs)
+        questions = [e.question for e in corpus.examples[:nq]]
 
         naive = NaiveRAG(corpus.docs, emb, top_k=3)
         acc_n = accuracy(naive, corpus.examples, max_q=nq)
-        tok_n = np.mean([naive.answer(e.question).prompt_tokens
-                         for e in corpus.examples[:nq]])
+        tok_n = np.mean([a.prompt_tokens for a in _answers(naive, questions)])
 
         # Table 4: paper's parameters (window 3, overlap 2, extension 1)
         mobile = MobileRAG(corpus.docs, emb, top_k=3,
                            scr=SCRConfig(3, 2, 1))
         acc_m = accuracy(mobile, corpus.examples, max_q=nq)
-        tok_m = np.mean([mobile.answer(e.question).prompt_tokens
-                         for e in corpus.examples[:nq]])
-        emit(f"scr.table4.{label}", 0.0,
+        ans_m = _answers(mobile, questions)
+        tok_m = np.mean([a.prompt_tokens for a in ans_m])
+        emit(f"scr.table4.{label}",
+             float(np.mean([a.post_s for a in ans_m])) * 1e6,
              f"before={tok_n:.0f};after={tok_m:.0f};"
              f"reduction={100*(1-tok_m/tok_n):.0f}%;"
              f"acc_naive={acc_n:.2f};acc_scr={acc_m:.2f}")
+
+        # before/after: per-query re-embed vs corpus-resident window index
+        _latency(label, corpus, mobile, questions)
 
         # Fig 12 sweep: window/overlap settings
         for w, o in ((1, 0), (3, 1), (3, 2), (5, 2)):
             m = MobileRAG(corpus.docs, emb, top_k=3, scr=SCRConfig(w, o, 1))
             acc = accuracy(m, corpus.examples, max_q=nq)
-            tok = np.mean([m.answer(e.question).prompt_tokens
-                           for e in corpus.examples[:nq]])
-            emit(f"scr.sweep.{label}.w{w}o{o}", 0.0,
-                 f"acc={acc:.2f};tokens={tok:.0f}")
+            ans = _answers(m, questions)
+            emit(f"scr.sweep.{label}.w{w}o{o}",
+                 float(np.mean([a.post_s for a in ans])) * 1e6,
+                 f"acc={acc:.2f};"
+                 f"tokens={np.mean([a.prompt_tokens for a in ans]):.0f}")
 
         # compressor baseline: same retrieval, lead-k compression
         comp_docs = _compressor(corpus.docs)
         comp = NaiveRAG(comp_docs, emb, top_k=3)
         acc_c = accuracy(comp, corpus.examples, max_q=nq)
-        tok_c = np.mean([comp.answer(e.question).prompt_tokens
-                         for e in corpus.examples[:nq]])
+        tok_c = np.mean([a.prompt_tokens for a in _answers(comp, questions)])
         emit(f"scr.compressor.{label}", 0.0,
              f"acc={acc_c:.2f};tokens={tok_c:.0f}")
 

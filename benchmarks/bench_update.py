@@ -34,10 +34,10 @@ def run(mode="quick"):
             size=(32, X.shape[1])).astype(np.float32)
         for name in UPDATABLE:
             idx, _ = build(name, X)
-            # fresh ids just past the dataset: HNSW rows are indexed by id,
-            # so huge ids (e.g. 1e6) would balloon every touched cluster's
-            # vector array (and its on-disk pickle) with zero padding
-            base = len(X) + 1
+            # arbitrary huge external ids: HNSW remaps ids to dense
+            # internal slots, so sparse id spaces no longer balloon the
+            # vector arrays or the on-disk cluster pickles
+            base = 10**9
             t0 = time.perf_counter()
             for i, v in enumerate(new_vecs):
                 idx.insert(base + i, v)

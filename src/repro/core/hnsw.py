@@ -6,6 +6,14 @@ max-level maintenance -> recNeighbors with robust pruning -> physical
 removal). This is the host-side index-maintenance structure: on a real TPU
 deployment it lives on the host CPUs that own the index, and devices consume
 immutable snapshots (DESIGN.md §2).
+
+External vector ids are remapped to dense internal slots at the API
+boundary (`insert`/`delete`/`search`/`reconstruct`/`graph_arrays` speak
+external ids; every internal structure — `vectors`, `levels`,
+`neighbors`, `is_deleted` — is slot-indexed). A caller may therefore use
+arbitrary 64-bit ids (timestamps, shard-prefixed ids) without the
+`vectors` array or its pickled form growing past the number of live +
+tombstoned nodes; slots freed by deletion are recycled by later inserts.
 """
 from __future__ import annotations
 
@@ -27,13 +35,17 @@ class HNSW:
         self.ml = 1.0 / math.log(M)
         self.vectors = np.zeros((max_elements, dim), np.float32)
         self.levels: Dict[int, int] = {}
-        # neighbors[level][node] -> list of node ids
+        # neighbors[level][node] -> list of node ids (internal slots)
         self.neighbors: List[Dict[int, List[int]]] = [dict()]
         self.is_deleted: Dict[int, bool] = {}
         self.entry_point = -1
         self.max_level = 0
         self._count = 0
         self.n_dist = 0  # distance-computation counter (power model)
+        # external id <-> dense internal slot maps (slots index `vectors`)
+        self._ext2int: Dict[int, int] = {}
+        self._int2ext: List[int] = []
+        self._free: List[int] = []       # recycled slots of deleted nodes
 
     # ------------------------------------------------------------ utils
 
@@ -63,8 +75,25 @@ class HNSW:
             return []
         return self.neighbors[level].get(vid, [])
 
+    def _slot_for(self, vid: int) -> int:
+        """Resolve (or allocate) the dense internal slot for an external
+        id — recycled slots are reused so the arrays stay dense under
+        insert/delete churn."""
+        slot = self._ext2int.get(vid)
+        if slot is not None:
+            return slot
+        if self._free:
+            slot = self._free.pop()
+            self.levels.pop(slot, None)   # stale level of the old tenant
+            self._int2ext[slot] = vid
+        else:
+            slot = len(self._int2ext)
+            self._int2ext.append(vid)
+        self._ext2int[vid] = slot
+        return slot
+
     def reconstruct(self, vid: int) -> np.ndarray:
-        return self.vectors[vid]
+        return self.vectors[self._ext2int[vid]]
 
     def get_random_level(self) -> int:
         return int(-math.log(max(self.rng.random(), 1e-12)) * self.ml)
@@ -160,22 +189,23 @@ class HNSW:
     # -------------------------------------------------- Algorithm 1: insert
 
     def insert(self, vid: int, vec: np.ndarray, level: Optional[int] = None):
-        self._ensure_capacity(vid)
-        self.vectors[vid] = vec
-        lvl = self.levels.get(vid, 0) if level is None else level
+        slot = self._slot_for(int(vid))
+        self._ensure_capacity(slot)
+        self.vectors[slot] = vec
+        lvl = self.levels.get(slot, 0) if level is None else level
         if lvl <= 0:
             lvl = self.get_random_level()
-        self.levels[vid] = lvl
-        self.is_deleted[vid] = False
+        self.levels[slot] = lvl
+        self.is_deleted[slot] = False
         self._count += 1
 
         if self.entry_point == -1:
-            self.entry_point = vid
+            self.entry_point = slot
             self.max_level = lvl
             for l in range(lvl + 1):
                 while l >= len(self.neighbors):
                     self.neighbors.append(dict())
-                self.neighbors[l][vid] = []
+                self.neighbors[l][slot] = []
             return
 
         cur = self.entry_point
@@ -185,16 +215,16 @@ class HNSW:
             cand = self.expand_candidates(cur, vec, l, self.efc)
             max_m = self.M0 if l == 0 else self.M
             fnbr = self.robust_prune(cand, vec, max_m)
-            self._connect_two_way(vid, fnbr, l)
+            self._connect_two_way(slot, fnbr, l)
             if cand:
                 cur = cand[0]
         for l in range(self.max_level + 1, lvl + 1):
             while l >= len(self.neighbors):
                 self.neighbors.append(dict())
-            self.neighbors[l][vid] = []
+            self.neighbors[l][slot] = []
         if lvl > self.max_level:
             self.max_level = lvl
-            self.entry_point = vid
+            self.entry_point = slot
 
     # ------------------------------------------------- Algorithm 2: delete
 
@@ -231,12 +261,13 @@ class HNSW:
                     break
 
     def delete(self, vid: int):
-        if self.is_deleted.get(vid, True):
+        slot = self._ext2int.get(int(vid))
+        if slot is None or self.is_deleted.get(slot, True):
             return
-        if vid == self.entry_point:
+        if slot == self.entry_point:
             new_ep, new_max = -1, -1
             for v, l in sorted(self.levels.items(), key=lambda kv: -kv[1]):
-                if v != vid and not self.is_deleted.get(v, False):
+                if v != slot and not self.is_deleted.get(v, False):
                     new_ep, new_max = v, l
                     break
             if new_ep == -1:
@@ -245,21 +276,23 @@ class HNSW:
             else:
                 self.entry_point = new_ep
                 self.max_level = new_max
-        elif self.levels.get(vid, 0) == self.max_level:
+        elif self.levels.get(slot, 0) == self.max_level:
             pass  # handled below by _check_and_decrease_max_level
-        self.is_deleted[vid] = True
+        self.is_deleted[slot] = True
         for l in range(len(self.neighbors)):
             layer = self.neighbors[l]
-            old = layer.pop(vid, [])
+            old = layer.pop(slot, [])
             # robustPrune during connectTwoWay can leave asymmetric edges:
-            # also collect nodes that still point at vid
-            incoming = [n for n, lst in layer.items() if vid in lst]
+            # also collect nodes that still point at the victim
+            incoming = [n for n, lst in layer.items() if slot in lst]
             for n in incoming:
-                layer[n] = [x for x in layer[n] if x != vid]
+                layer[n] = [x for x in layer[n] if x != slot]
             affected = list(dict.fromkeys(list(old) + incoming))
             if affected:
-                self._rec_neighbors(vid, affected, l)
+                self._rec_neighbors(slot, affected, l)
         self._check_and_decrease_max_level()
+        del self._ext2int[int(vid)]
+        self._free.append(slot)
 
     # ----------------------------------------------------------- queries
 
@@ -271,7 +304,7 @@ class HNSW:
             cur = self._greedy_descend(vec, cur, l)
         cand = self._search_layer(vec, [cur], max(ef_search, k), 0)
         cand = [c for c in cand if not self.is_deleted.get(c, False)][:k]
-        return (np.asarray(cand, np.int64),
+        return (np.asarray([self._int2ext[c] for c in cand], np.int64),
                 self._dists(cand, vec) if cand else np.zeros((0,), np.float32))
 
     # --------------------------------------------------------- accounting
@@ -284,7 +317,7 @@ class HNSW:
         return n * self.dim * 4 + n_links * 4
 
     def graph_arrays(self):
-        """Export ids/vectors for device-side dense scans."""
-        ids = np.asarray([v for v, d in self.is_deleted.items() if not d],
-                         np.int64)
-        return ids, self.vectors[ids]
+        """Export (external) ids and vectors for device-side dense scans."""
+        slots = [v for v, d in self.is_deleted.items() if not d]
+        ids = np.asarray([self._int2ext[s] for s in slots], np.int64)
+        return ids, self.vectors[np.asarray(slots, np.int64)]

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -69,12 +69,35 @@ def _count_tokens(text: str) -> int:
     return len(text.split())
 
 
+def segment_best_windows(scores: np.ndarray, owners: Sequence[int],
+                         n_docs: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-document argmax over a flat window score array: the host mirror
+    of the `scr_select` kernel's per-block segment-argmax.
+
+    scores: [NW] flat window scores; owners: [NW] owning doc per window.
+    Returns (best [n_docs] — flat index of each doc's best window, valid
+    only where the doc owns windows; counts [n_docs] — windows per doc).
+    Ties resolve to the lowest flat index (first max), matching both the
+    kernel's `argmax` and the previous Python `max()` scan.
+    """
+    scores = np.asarray(scores)
+    owners = np.asarray(owners, np.int64)
+    counts = np.bincount(owners, minlength=n_docs)[:n_docs]
+    if len(owners) == 0:
+        return np.zeros(n_docs, np.int64), counts
+    # sort by (owner asc, score desc, flat index asc): the first row of
+    # each owner group is that doc's first-max window
+    srt = np.lexsort((np.arange(len(owners)), -scores, owners))
+    starts = np.searchsorted(owners[srt], np.arange(n_docs), side="left")
+    best = srt[np.minimum(starts, len(owners) - 1)]
+    return best, counts
+
+
 def apply_scr(query: str, docs: Sequence[str], embed: Callable,
               cfg: SCRConfig = SCRConfig()) -> SCRResult:
     """embed: list[str] -> np.ndarray [n, d] (query embedded with the same
     model, paper §2.3)."""
     qv = np.asarray(embed([query]))[0]
-    d = qv.shape[0]
     doc_sents = [split_sentences(t) for t in docs]
     doc_spans = [sliding_windows(s, cfg.sliding_window_size, cfg.overlap_size)
                  for s in doc_sents]
@@ -92,25 +115,104 @@ def apply_scr(query: str, docs: Sequence[str], embed: Callable,
     scores = np.asarray(ops.scr_score(
         wv[None], qv[None].astype(np.float32), use_pallas=cfg.use_pallas))[0]
 
+    # per-doc best window via segment ops (shared selection semantics with
+    # the scr_select device kernel), not an O(NW·docs) owner scan
+    best, counts = segment_best_windows(scores, owners, len(docs))
+    offsets = np.concatenate(([0], np.cumsum(counts)))
     out_texts, out_scores, out_spans = [], [], []
     for di, (sents, spans) in enumerate(zip(doc_sents, doc_spans)):
-        idx = [i for i, o in enumerate(owners) if o == di]
-        if not idx:
+        if not counts[di]:
             out_texts.append(docs[di])
             out_scores.append(-np.inf)
             out_spans.append((0, len(sents)))
             continue
-        best_local = max(idx, key=lambda i: scores[i])
-        a, b = spans[idx.index(best_local)]
+        a, b = spans[int(best[di]) - int(offsets[di])]
         # context extension both sides
         a2 = max(0, a - cfg.context_extension_size)
         b2 = min(len(sents), b + cfg.context_extension_size)
         out_texts.append(" ".join(sents[a2:b2]))
-        out_scores.append(float(scores[best_local]))
+        out_scores.append(float(scores[best[di]]))
         out_spans.append((a2, b2))
 
     order = sorted(range(len(docs)), key=lambda i: -out_scores[i])
     before = sum(_count_tokens(t) for t in docs)
+    after = sum(_count_tokens(out_texts[i]) for i in order)
+    return SCRResult([out_texts[i] for i in order], order,
+                     [out_scores[i] for i in order],
+                     [out_spans[i] for i in order], before, after)
+
+
+def apply_scr_batch(queries: Sequence[str],
+                    doc_ids_per_query: Sequence[Sequence[int]],
+                    index, embed: Callable,
+                    qvs: Optional[np.ndarray] = None,
+                    use_pallas: Optional[bool] = None) -> List[SCRResult]:
+    """Batched SCR over a corpus-resident window index (DESIGN.md §6–§7).
+
+    `index` is a `WindowIndex`: sentences, window spans, and window
+    embeddings were computed at build time, so the only embed call here is
+    for the queries (skipped too when `qvs` [B, d] is supplied by the
+    caller, e.g. the retrieval stage). One fused `scr_select` kernel call
+    scores every (query, retrieved doc) pair AND picks each doc's best
+    window on device; the host does string assembly only.
+
+    Returns one `SCRResult` per query, bit-identical in spans/order to
+    per-query `apply_scr` on the same inputs.
+    """
+    cfg = index.cfg
+    if use_pallas is None:
+        use_pallas = cfg.use_pallas
+    B = len(queries)
+    if B == 0:
+        return []
+    if qvs is None:
+        qvs = np.asarray(embed(list(queries)), np.float32)
+    K = max((len(ids) for ids in doc_ids_per_query), default=0)
+    data, lens = index.pack()
+    if K == 0 or not lens.any():
+        # no retrieved docs, or no doc has windows: pure host fallback
+        return [_assemble(q, ids, None, None, index)
+                for q, ids in zip(queries, doc_ids_per_query)]
+    ids_m = np.full((B, K), -1, np.int64)
+    for b, row in enumerate(doc_ids_per_query):
+        ids_m[b, :len(row)] = row
+    data_j, lens_j = index.device_arrays()
+    scores, wins = ops.scr_select(qvs.astype(np.float32), data_j, lens_j,
+                                  ids_m, use_pallas=use_pallas)
+    scores = np.asarray(scores)
+    wins = np.asarray(wins)
+    return [_assemble(q, ids, scores[b], wins[b], index)
+            for b, (q, ids) in enumerate(zip(queries, doc_ids_per_query))]
+
+
+def _assemble(query: str, doc_ids: Sequence[int],
+              scores_row: Optional[np.ndarray],
+              wins_row: Optional[np.ndarray], index) -> SCRResult:
+    """Host-side Selecting & Merging & Reordering (§4 steps 2–3) from the
+    kernel's per-doc (score, window) pairs — string work only."""
+    cfg = index.cfg
+    n = len(doc_ids)
+    if all(not index.spans[di] for di in doc_ids):
+        # matches apply_scr's "no windows anywhere" early return
+        docs = [index.texts[di] for di in doc_ids]
+        return SCRResult(docs, list(range(n)), [0.0] * n, [(0, 0)] * n,
+                         0, 0)
+    out_texts, out_scores, out_spans = [], [], []
+    for j, di in enumerate(doc_ids):
+        sents, spans = index.sents[di], index.spans[di]
+        if not spans:
+            out_texts.append(index.texts[di])
+            out_scores.append(-np.inf)
+            out_spans.append((0, len(sents)))
+            continue
+        a, b = spans[int(wins_row[j])]
+        a2 = max(0, a - cfg.context_extension_size)
+        b2 = min(len(sents), b + cfg.context_extension_size)
+        out_texts.append(" ".join(sents[a2:b2]))
+        out_scores.append(float(scores_row[j]))
+        out_spans.append((a2, b2))
+    order = sorted(range(n), key=lambda i: -out_scores[i])
+    before = sum(index.ntok[di] for di in doc_ids)
     after = sum(_count_tokens(out_texts[i]) for i in order)
     return SCRResult([out_texts[i] for i in order], order,
                      [out_scores[i] for i in order],

@@ -1,0 +1,228 @@
+"""Corpus-resident SCR window index (DESIGN.md §6).
+
+`apply_scr` re-splits, re-windows, and re-embeds every window of every
+retrieved document on every query — on a fixed corpus that work is pure
+waste (EdgeRAG's observation: precompute embeddings once, reuse per
+query). This index moves all of it to build time: every document is
+split into sentences, windowed (`SCRConfig` geometry), and embedded
+ONCE, and the window embeddings are packed into the same padded
+block-per-owner device layout EcoVector uses for cluster payloads
+([ND, CAPW, d] in HBM, `lens[ND]` valid counts), so the fused
+`scr_select` kernel can DMA exactly the retrieved documents' blocks per
+query batch.
+
+Updates mirror EcoVector's dirty-cluster repack protocol: `add`/
+`update`/`remove` touch host metadata and mark only the owning block
+dirty; the next `pack()` re-embeds just the dirty documents (one batched
+embed call for all of them) and rewrites their blocks in place, growing
+CAPW (and the block table) geometrically on overflow. The jnp device
+mirror refreshes per dirty block, not wholesale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.scr import SCRConfig, sliding_windows, split_sentences
+
+
+@dataclass
+class WindowIndexStats:
+    full_builds: int = 0         # whole [ND, CAPW, d] pack builds
+    block_repacks: int = 0       # single-doc block rewrites in place
+    grows: int = 0               # geometric CAPW / row-table growths
+    embed_calls: int = 0         # batched embed invocations
+    windows_embedded: int = 0    # total window texts embedded
+
+
+class WindowIndex:
+    """Precomputed sentence/window/embedding state for a document corpus,
+    packed for the `scr_select` kernel."""
+
+    MIN_CAPW = 8                 # same floor as EcoVector's device pack
+
+    def __init__(self, embed: Callable, cfg: SCRConfig = SCRConfig(),
+                 dim: Optional[int] = None):
+        self.embed = embed
+        self.cfg = cfg
+        self.texts: List[str] = []
+        self.sents: List[List[str]] = []
+        self.spans: List[List[Tuple[int, int]]] = []
+        self.ntok: List[int] = []            # whitespace tokens per doc
+        self.stats = WindowIndexStats()
+        self._dim = dim if dim is not None else getattr(embed, "dim", None)
+        self._data: Optional[np.ndarray] = None    # [ND, CAPW, d]
+        self._lens: Optional[np.ndarray] = None    # [ND] i32
+        self._dirty: Set[int] = set()
+        self._mirror = None                        # jnp (data, lens)
+        self._mirror_dirty: Set[int] = set()
+
+    # ------------------------------------------------------------- build
+
+    def __len__(self) -> int:
+        return len(self.texts)
+
+    def _window_texts(self, di: int) -> List[str]:
+        sents, spans = self.sents[di], self.spans[di]
+        return [" ".join(sents[a:b]) for a, b in spans]
+
+    def _set_doc(self, di: int, text: str):
+        self.texts[di] = text
+        self.sents[di] = split_sentences(text)
+        self.spans[di] = sliding_windows(self.sents[di],
+                                         self.cfg.sliding_window_size,
+                                         self.cfg.overlap_size)
+        self.ntok[di] = len(text.split())
+
+    def _embed_batch(self, win_texts: List[str]) -> np.ndarray:
+        vecs = np.asarray(self.embed(win_texts), np.float32)
+        self.stats.embed_calls += 1
+        self.stats.windows_embedded += len(win_texts)
+        if self._dim is None:
+            self._dim = vecs.shape[1]
+        return vecs
+
+    def build(self, docs: Sequence[str]) -> "WindowIndex":
+        """Split/window/embed the whole corpus in one batched embed call
+        and build the block pack."""
+        n = len(docs)
+        self.texts = [""] * n
+        self.sents = [[] for _ in range(n)]
+        self.spans = [[] for _ in range(n)]
+        self.ntok = [0] * n
+        for di, text in enumerate(docs):
+            self._set_doc(di, text)
+        self._build_pack(range(n))
+        return self
+
+    def _build_pack(self, doc_ids):
+        win_texts, owners = [], []
+        for di in doc_ids:
+            wt = self._window_texts(di)
+            win_texts.extend(wt)
+            owners.extend([di] * len(wt))
+        vecs = (self._embed_batch(win_texts) if win_texts
+                else np.zeros((0, self._dim or 1), np.float32))
+        d = self._dim or (vecs.shape[1] if vecs.size else 1)
+        nd = len(self.texts)
+        capw = max(self.MIN_CAPW,
+                   max((len(s) for s in self.spans), default=0))
+        self._data = np.zeros((nd, capw, d), np.float32)
+        self._lens = np.zeros((nd,), np.int32)
+        at = np.zeros(nd, np.int64)
+        for v, di in zip(vecs, owners):
+            self._data[di, at[di]] = v
+            at[di] += 1
+        for di in range(nd):
+            self._lens[di] = len(self.spans[di])
+        self.stats.full_builds += 1
+        self._dirty.clear()
+        self._mirror = None
+        self._mirror_dirty.clear()
+
+    # ----------------------------------------------------------- updates
+
+    def add(self, text: str) -> int:
+        """Append a document; only its block is (lazily) embedded and
+        packed. Returns the new doc id."""
+        di = len(self.texts)
+        self.texts.append("")
+        self.sents.append([])
+        self.spans.append([])
+        self.ntok.append(0)
+        self._set_doc(di, text)
+        self._mark_dirty(di)
+        return di
+
+    def update(self, di: int, text: str):
+        """Replace a document's text; marks only its block dirty."""
+        self._set_doc(di, text)
+        self._mark_dirty(di)
+
+    def remove(self, di: int):
+        """Drop a document's windows (its block empties; the slot stays,
+        mirroring how retrieval indexes tombstone ids)."""
+        self._set_doc(di, "")
+        self._mark_dirty(di)
+
+    def _mark_dirty(self, di: int):
+        if self._data is not None:
+            self._dirty.add(di)
+
+    # -------------------------------------------------------------- pack
+
+    def pack(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Return the host (data [ND, CAPW, d], lens [ND]) pack, repacking
+        only dirty blocks (one batched embed call across all of them)."""
+        if self._data is None:
+            self._build_pack(range(len(self.texts)))
+        elif self._dirty:
+            self._repack_dirty()
+        return self._data, self._lens
+
+    def _repack_dirty(self):
+        nd, capw, d = self._data.shape
+        need_rows = len(self.texts)
+        need_capw = max((len(self.spans[di]) for di in self._dirty),
+                        default=0)
+        if need_rows > nd or need_capw > capw:
+            new_nd, new_capw = max(nd, 1), capw
+            while new_nd < need_rows:
+                new_nd *= 2
+            while new_capw < need_capw:
+                new_capw *= 2
+            ndata = np.zeros((new_nd, new_capw, d), np.float32)
+            ndata[:nd, :capw] = self._data
+            nlens = np.zeros((new_nd,), np.int32)
+            nlens[:nd] = self._lens
+            self._data, self._lens = ndata, nlens
+            self.stats.grows += 1
+            self._mirror = None          # shape changed: full refresh
+            self._mirror_dirty.clear()
+        dirty = sorted(self._dirty)
+        win_texts, owners = [], []
+        for di in dirty:
+            wt = self._window_texts(di)
+            win_texts.extend(wt)
+            owners.extend([di] * len(wt))
+        vecs = (self._embed_batch(win_texts) if win_texts
+                else np.zeros((0, d), np.float32))
+        if len(win_texts) and vecs.shape[1] != d:
+            # the pack was built before any window existed (placeholder
+            # dim); rebuild it now that the true dim is known
+            self._build_pack(range(len(self.texts)))
+            return
+        at = {di: 0 for di in dirty}
+        for di in dirty:
+            self._data[di] = 0.0
+            self._lens[di] = len(self.spans[di])
+        for v, di in zip(vecs, owners):
+            self._data[di, at[di]] = v
+            at[di] += 1
+        self.stats.block_repacks += len(dirty)
+        self._mirror_dirty.update(dirty)
+        self._dirty.clear()
+
+    def device_arrays(self):
+        """jnp mirrors of the pack, refreshed per dirty block rather than
+        re-uploading the whole [ND, CAPW, d] tensor."""
+        import jax.numpy as jnp
+        data, lens = self.pack()
+        if self._mirror is None or self._mirror[0].shape != data.shape:
+            self._mirror = (jnp.asarray(data), jnp.asarray(lens))
+            self._mirror_dirty.clear()
+        elif self._mirror_dirty:
+            touched = sorted(self._mirror_dirty)
+            mdata = self._mirror[0].at[jnp.asarray(touched)].set(
+                jnp.asarray(data[touched]))
+            self._mirror = (mdata, jnp.asarray(lens))
+            self._mirror_dirty.clear()
+        return self._mirror
+
+    # -------------------------------------------------------- accounting
+
+    def ram_bytes(self) -> int:
+        data, lens = self.pack()
+        return int(data.nbytes + lens.nbytes)

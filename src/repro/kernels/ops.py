@@ -11,6 +11,7 @@ from repro.kernels.ecoscan import ecoscan as _ecoscan
 from repro.kernels.ecoscan import route_and_scan as _route_and_scan
 from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
 from repro.kernels.scr_score import scr_score as _scr_score
+from repro.kernels.scr_select import scr_select as _scr_select
 from repro.kernels.pq_adc import pq_adc as _pq_adc
 from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
@@ -18,6 +19,15 @@ from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Backend-aware interpret default shared by every kernel dispatch:
+    compiled Mosaic on real TPU, interpret mode (correctness-grade, runs
+    the kernel body through XLA) everywhere else. Kernel entry points
+    take `interpret=None` and resolve it here, so callers never hardcode
+    a backend assumption."""
+    return not _on_tpu()
 
 
 # Mosaic support for lax.sort_key_val inside kernel bodies varies by
@@ -95,13 +105,22 @@ def kmeans_assign(x, centroids, use_pallas=True):
 
 def scr_score(windows, q, use_pallas=True):
     if use_pallas:
-        return _scr_score(windows, q, interpret=not _on_tpu())
+        return _scr_score(windows, q, interpret=default_interpret())
     return ref.scr_score(windows, q)
+
+
+def scr_select(q, data, lens, doc_ids, use_pallas=True):
+    """Fused SCR select: per-(query, retrieved doc) best window id and
+    query·window score in one device call (DESIGN.md §7)."""
+    if use_pallas:
+        return _scr_select(q, data, lens, doc_ids,
+                           interpret=default_interpret())
+    return ref.scr_select(q, data, lens, doc_ids)
 
 
 def pq_adc(lut, codes, use_pallas=True):
     if use_pallas:
-        return _pq_adc(lut, codes, interpret=not _on_tpu())
+        return _pq_adc(lut, codes, interpret=default_interpret())
     return ref.pq_adc(lut, codes)
 
 

@@ -29,8 +29,13 @@ def _kernel(c_ref, l_ref, o_ref, *, M: int):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def pq_adc(lut, codes, tile: int = 512, interpret: bool = True):
-    """lut: [B, M, 256] f32; codes: [N, M] uint8 -> scores [B, N]."""
+def pq_adc(lut, codes, tile: int = 512, interpret: bool | None = None):
+    """lut: [B, M, 256] f32; codes: [N, M] uint8 -> scores [B, N].
+    interpret=None resolves backend-aware (compiled on TPU, interpret
+    elsewhere)."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     B, M, _ = lut.shape
     N = codes.shape[0]
     pad = (-N) % tile

@@ -58,6 +58,34 @@ def scr_score(windows, q):
     return jnp.einsum("bnd,bd->bn", windows, q)
 
 
+def scr_select(q, data, lens, doc_ids):
+    """Fused SCR select reference (§4 steps 1+2).
+
+    q: [B, d]; data: [ND, CAPW, d] window-embedding blocks; lens: [ND]
+    valid windows per doc; doc_ids: [B, K] retrieved docs per query
+    (ids < 0 are padding). Returns (scores [B, K], wins [B, K]): the best
+    window's query·window inner product and its within-doc window id per
+    retrieved doc, (-NEG, -1) for padding slots / windowless docs. Ties
+    resolve to the lowest window id (first max)."""
+    B, K = doc_ids.shape
+    if data.shape[0] == 0 or data.shape[1] == 0:    # no docs / no windows
+        return (jnp.full((B, K), -NEG, jnp.float32),
+                jnp.full((B, K), -1, jnp.int32))
+    safe = jnp.maximum(doc_ids, 0)
+    g = data[safe]                                  # [B, K, CAPW, d]
+    s = jnp.einsum("bkwd,bd->bkw", g.astype(jnp.float32),
+                   q.astype(jnp.float32))
+    CAPW = data.shape[1]
+    slot = jnp.arange(CAPW)[None, None, :]
+    valid = (slot < lens[safe][:, :, None]) & (doc_ids[:, :, None] >= 0)
+    s = jnp.where(valid, s, -NEG)
+    wins = jnp.argmax(s, axis=-1).astype(jnp.int32)
+    scores = jnp.take_along_axis(s, wins[..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+    wins = jnp.where(jnp.any(valid, axis=-1), wins, -1)
+    return scores, wins
+
+
 def pq_adc(lut, codes):
     """lut: [B, M, 256] distance tables; codes: [N, M] uint8 ->
     scores [B, N] = sum_m lut[b, m, codes[n, m]]."""

@@ -19,8 +19,13 @@ def _kernel(w_ref, q_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def scr_score(windows, q, tile: int = 256, interpret: bool = True):
-    """windows: [B, NW, d]; q: [B, d] -> scores [B, NW] (inner product)."""
+def scr_score(windows, q, tile: int = 256, interpret: bool | None = None):
+    """windows: [B, NW, d]; q: [B, d] -> scores [B, NW] (inner product).
+    interpret=None resolves backend-aware (compiled on TPU, interpret
+    elsewhere)."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     B, NW, d = windows.shape
     pad = (-NW) % tile
     wp = jnp.pad(windows, ((0, 0), (0, pad), (0, 0)))

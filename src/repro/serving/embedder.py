@@ -8,15 +8,14 @@ tests and benchmarks where model quality is not the subject.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import TYPE_CHECKING, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ModelConfig
 from repro.data.tokenizer import HashTokenizer
-from repro.models import model
+
+if TYPE_CHECKING:
+    from repro.config import ModelConfig
 
 
 class HashEmbedder:
@@ -53,8 +52,13 @@ class HashEmbedder:
 
 
 class ModelEmbedder:
-    def __init__(self, cfg: ModelConfig, params, tokenizer: HashTokenizer,
+    def __init__(self, cfg: "ModelConfig", params, tokenizer: HashTokenizer,
                  max_len: int = 64):
+        # model stack imported lazily: HashEmbedder consumers (SCR tests,
+        # benchmarks) must not pay for — or break on — the full model deps
+        import jax
+
+        from repro.models import model
         self.cfg = cfg
         self.params = params
         self.tok = tokenizer
@@ -66,6 +70,7 @@ class ModelEmbedder:
         return self.cfg.d_model
 
     def __call__(self, texts: List[str]) -> np.ndarray:
+        import jax.numpy as jnp
         toks = self.tok.encode_batch(texts, self.max_len)
         mask = (toks != self.tok.pad_id).astype(np.float32)
         out = self._encode(self.params, {"tokens": jnp.asarray(toks),

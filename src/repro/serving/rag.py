@@ -20,7 +20,9 @@ import numpy as np
 from repro.core.analytical import HW, energy_mj
 from repro.core.baselines import IVFDisk
 from repro.core.ecovector import EcoVector
-from repro.core.scr import SCRConfig, SCRResult, apply_scr, build_prompt
+from repro.core.scr import (SCRConfig, SCRResult, apply_scr, apply_scr_batch,
+                            build_prompt)
+from repro.core.window_index import WindowIndex
 
 # Table 6: measured on Galaxy S24
 SLM_SPEEDS = {
@@ -124,7 +126,9 @@ class RAGBase:
                          e_cpu + e_lm, scr, gen)
 
     # Pipelines with simple retrieve->post flows set `_finish(query, ids,
-    # t_ret)` and inherit the shared answer/answer_batch templates below.
+    # t_ret, qv=...)` and inherit the shared answer/answer_batch templates
+    # below (`qv` is the already-embedded query vector, so post stages
+    # never pay a second embedder forward).
     _finish = None
 
     def answer(self, query: str) -> RAGAnswer:
@@ -134,7 +138,7 @@ class RAGBase:
         qv = np.asarray(self.embed([query]))[0]
         ids = self._retrieve(qv, self.top_k)
         t_ret = time.perf_counter() - t0
-        return self._finish(query, ids, t_ret)
+        return self._finish(query, ids, t_ret, qv=qv)
 
     def answer_batch(self, queries: Sequence[str]) -> List[RAGAnswer]:
         """Batched serving entry point: one embed + one (device-)batched
@@ -146,14 +150,15 @@ class RAGBase:
         qvs = np.asarray(self.embed(list(queries)), np.float32)
         ids_b = self._retrieve_batch(qvs, self.top_k)
         t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
-        return [self._finish(q, ids, t_ret)
-                for q, ids in zip(queries, ids_b)]
+        return [self._finish(q, ids, t_ret, qv=qv)
+                for q, ids, qv in zip(queries, ids_b, qvs)]
 
 
 class NaiveRAG(RAGBase):
     name = "Naive-RAG"
 
-    def _finish(self, query: str, ids: List[int], t_ret: float) -> RAGAnswer:
+    def _finish(self, query: str, ids: List[int], t_ret: float,
+                qv=None) -> RAGAnswer:
         prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
         return self._finalize(query, prompt, ids, t_ret, 0.0)
 
@@ -209,22 +214,74 @@ class EdgeRAG(RAGBase):
 
 class MobileRAG(RAGBase):
     """EcoVector + SCR (the paper's method). Retrieval runs on the fused
-    batched EcoVector device path (route + scan in one jitted call)."""
+    batched EcoVector device path (route + scan in one jitted call); SCR
+    runs against the corpus-resident window index (every document's
+    windows split/embedded once at construction, DESIGN.md §6) with the
+    fused `scr_select` kernel picking best windows on device —
+    per-query post-retrieval work is one query embed, one kernel call,
+    and host string assembly. `use_window_index=False` keeps the legacy
+    re-embed-every-window-per-query path for before/after benchmarks."""
     name = "MobileRAG"
     device_retrieval = None          # auto: fused device path on TPU
 
-    def __init__(self, *args, scr: SCRConfig = SCRConfig(), **kw):
+    def __init__(self, *args, scr: SCRConfig = SCRConfig(),
+                 use_window_index: bool = True, **kw):
         super().__init__(*args, **kw)
         self.scr_cfg = scr
+        self.window_index = None
+        self.scr_build_s = 0.0
+        if use_window_index:
+            t0 = time.perf_counter()
+            self.window_index = WindowIndex(self.embed, scr).build(self.docs)
+            self.scr_build_s = time.perf_counter() - t0
 
-    def _finish(self, query: str, ids: List[int], t_ret: float) -> RAGAnswer:
+    def _sync_window_index(self):
+        """Pick up documents appended to `self.docs` since the index was
+        built (the retrieval-index update path): each new doc is one
+        incremental `add` — only its block gets embedded and packed."""
+        w = self.window_index
+        while len(w) < len(self.docs):
+            w.add(self.docs[len(w)])
+
+    def _finish(self, query: str, ids: List[int], t_ret: float,
+                qv=None) -> RAGAnswer:
         t1 = time.perf_counter()
-        res = apply_scr(query, [self.docs[i] for i in ids], self.embed,
-                        self.scr_cfg)
+        if self.window_index is not None:
+            self._sync_window_index()
+            qvs = (None if qv is None
+                   else np.asarray(qv, np.float32)[None])
+            res = apply_scr_batch([query], [ids], self.window_index,
+                                  self.embed, qvs=qvs)[0]
+        else:
+            res = apply_scr(query, [self.docs[i] for i in ids], self.embed,
+                            self.scr_cfg)
         t_post = time.perf_counter() - t1
         prompt = build_prompt(query, res)
         ids = [ids[i] for i in res.order]
         return self._finalize(query, prompt, ids, t_ret, t_post, scr=res)
+
+    def answer_batch(self, queries: Sequence[str]) -> List[RAGAnswer]:
+        """Fully batched MobileRAG: ONE query embed feeds both the fused
+        EcoVector retrieval and the fused SCR select; everything after the
+        two device calls is host-side string assembly."""
+        if self.window_index is None or not queries:
+            return super().answer_batch(queries)
+        self._sync_window_index()
+        t0 = time.perf_counter()
+        qvs = np.asarray(self.embed(list(queries)), np.float32)
+        ids_b = self._retrieve_batch(qvs, self.top_k)
+        t_ret = (time.perf_counter() - t0) / len(queries)
+        t1 = time.perf_counter()
+        results = apply_scr_batch(queries, ids_b, self.window_index,
+                                  self.embed, qvs=qvs)
+        t_post = (time.perf_counter() - t1) / len(queries)
+        out = []
+        for q, ids, res in zip(queries, ids_b, results):
+            prompt = build_prompt(q, res)
+            out.append(self._finalize(q, prompt,
+                                      [ids[i] for i in res.order],
+                                      t_ret, t_post, scr=res))
+        return out
 
 
 PIPELINES = {

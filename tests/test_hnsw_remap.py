@@ -1,0 +1,73 @@
+"""HNSW external-id -> dense-internal-slot remapping: arbitrary 64-bit
+ids must not balloon the vector array / pickles, and freed slots are
+recycled. (Kept hypothesis-free so it collects everywhere; structural
+property tests live in test_hnsw.py.)"""
+import pickle
+
+import numpy as np
+
+from repro.core.hnsw import HNSW
+
+
+def build(n=60, d=12, seed=0, ids=None):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    g = HNSW(d, M=8, ef_construction=32, seed=seed, max_elements=8)
+    ids = range(n) if ids is None else ids
+    for i, vid in enumerate(ids):
+        g.insert(int(vid), X[i])
+    return g, X
+
+
+def test_huge_ids_stay_dense():
+    n = 60
+    base = 10**15
+    g, X = build(n, ids=[base + 7 * i for i in range(n)])
+    # the vectors array scales with the node count, not the id magnitude
+    assert g.vectors.shape[0] <= 4 * n
+    ids, _ = g.search(X[3], k=1, ef_search=64)
+    assert int(ids[0]) == base + 21
+
+
+def test_pickle_size_independent_of_id_magnitude():
+    g_small, _ = build(40, ids=range(40))
+    g_huge, _ = build(40, ids=[10**12 + i for i in range(40)])
+    s, h = len(pickle.dumps(g_small)), len(pickle.dumps(g_huge))
+    assert h < 2 * s
+
+
+def test_graph_arrays_returns_external_ids():
+    base = 5_000_000
+    g, X = build(20, ids=[base + i for i in range(20)])
+    ids, vecs = g.graph_arrays()
+    assert set(map(int, ids)) == {base + i for i in range(20)}
+    assert vecs.shape == (20, 12)
+    # exported vectors line up with their external ids
+    for vid, v in zip(ids, vecs):
+        np.testing.assert_array_equal(v, X[int(vid) - base])
+
+
+def test_delete_recycles_slots():
+    g, X = build(30)
+    cap0 = g.vectors.shape[0]
+    for round_ in range(5):
+        vid = 10**9 + round_
+        g.insert(vid, X[0] + 0.01 * round_)
+        g.delete(vid)
+    assert g.vectors.shape[0] == cap0       # churn reused freed slots
+    ids, _ = g.search(X[1], k=1, ef_search=64)
+    assert int(ids[0]) == 1
+
+
+def test_reinsert_same_external_id():
+    g, X = build(20)
+    g.delete(5)
+    g.insert(5, X[5])
+    ids, _ = g.search(X[5], k=1, ef_search=64)
+    assert int(ids[0]) == 5
+
+
+def test_reconstruct_by_external_id():
+    base = 77_000_000
+    g, X = build(10, ids=[base + i for i in range(10)])
+    np.testing.assert_array_equal(g.reconstruct(base + 4), X[4])

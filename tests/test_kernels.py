@@ -156,6 +156,83 @@ def test_scr_score_sweep(B, NW, d):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("B,d,ND,CAPW,K", [
+    (1, 32, 6, 8, 3),
+    (3, 64, 12, 24, 5),
+    (2, 128, 40, 17, 9),
+])
+def test_scr_select_sweep(B, d, ND, CAPW, K):
+    from repro.kernels.scr_select import scr_select
+    q = jax.random.normal(k(0), (B, d))
+    data = jax.random.normal(k(1), (ND, CAPW, d))
+    lens = jax.random.randint(k(2), (ND,), 0, CAPW + 1)
+    ids = jax.random.randint(k(3), (B, K), 0, ND).astype(jnp.int32)
+    sk, wk = scr_select(q, data, lens, ids)
+    sr, wr = ref.scr_select(q, data, lens, ids)
+    np.testing.assert_allclose(sk, sr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(wk) == np.asarray(wr)).all()
+
+
+@pytest.mark.parametrize("doc_tile", [1, 2, 3, 8])
+def test_scr_select_doc_tiling_sweep(doc_tile):
+    """Every doc tiling (including tiles that don't divide K) must match
+    the reference exactly."""
+    from repro.kernels.scr_select import scr_select
+    B, d, ND, CAPW, K = 3, 48, 9, 16, 5
+    q = jax.random.normal(k(0), (B, d))
+    data = jax.random.normal(k(1), (ND, CAPW, d))
+    lens = jax.random.randint(k(2), (ND,), 0, CAPW + 1)
+    ids = jax.random.randint(k(3), (B, K), 0, ND).astype(jnp.int32)
+    sk, wk = scr_select(q, data, lens, ids, doc_tile=doc_tile)
+    sr, wr = ref.scr_select(q, data, lens, ids)
+    np.testing.assert_allclose(sk, sr, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(wk) == np.asarray(wr)).all()
+
+
+def test_scr_select_padded_and_windowless_docs():
+    """Padded slots (id -1) and zero-window docs emit the (-NEG, -1)
+    sentinel pair; real docs are unaffected by padding neighbours."""
+    from repro.kernels.ref import NEG
+    q = jax.random.normal(k(0), (2, 16))
+    data = jax.random.normal(k(1), (4, 8, 16))
+    lens = jnp.asarray([3, 0, 8, 1], jnp.int32)
+    ids = jnp.asarray([[0, 1, -1], [2, 3, 1]], jnp.int32)
+    s, w = ops.scr_select(q, data, lens, ids)
+    s, w = np.asarray(s), np.asarray(w)
+    assert w[0, 1] == -1 and w[0, 2] == -1 and w[1, 2] == -1
+    assert s[0, 1] == -NEG and s[0, 2] == -NEG
+    assert w[0, 0] >= 0 and w[1, 0] >= 0 and w[1, 1] == 0
+    # windows beyond lens are never selected
+    assert w[0, 0] < 3 and w[1, 1] < 1
+
+
+def test_scr_select_host_vs_device_agreement():
+    """use_pallas=True (kernel) and use_pallas=False (pure-jnp oracle)
+    agree on scores and picked windows — the dispatch contract the
+    batched SCR path relies on."""
+    q = jax.random.normal(k(4), (4, 32))
+    data = jax.random.normal(k(5), (10, 12, 32))
+    lens = jax.random.randint(k(6), (10,), 0, 13)
+    ids = jax.random.randint(k(7), (4, 6), -1, 10).astype(jnp.int32)
+    sd, wd = ops.scr_select(q, data, lens, ids, use_pallas=True)
+    sh, wh = ops.scr_select(q, data, lens, ids, use_pallas=False)
+    np.testing.assert_allclose(sd, sh, rtol=2e-5, atol=2e-5)
+    assert (np.asarray(wd) == np.asarray(wh)).all()
+
+
+def test_scr_select_first_max_tie_break():
+    """Duplicate best windows resolve to the lowest window id, matching
+    the host Python max() scan."""
+    d = 8
+    q = jnp.ones((1, d))
+    w = jnp.ones((d,))
+    data = jnp.stack([jnp.stack([w * 0.5, w, w, w * 0.2])])  # [1, 4, d]
+    lens = jnp.asarray([4], jnp.int32)
+    ids = jnp.asarray([[0]], jnp.int32)
+    _, wins = ops.scr_select(q, data, lens, ids)
+    assert int(np.asarray(wins)[0, 0]) == 1
+
+
 @pytest.mark.parametrize("B,M,N", [(1, 4, 100), (2, 8, 513), (3, 16, 64)])
 def test_pq_adc_sweep(B, M, N):
     lut = jax.random.normal(k(0), (B, M, 256))

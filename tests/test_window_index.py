@@ -1,0 +1,189 @@
+"""Corpus-resident SCR window index: edge cases, dirty-block repack
+protocol, and parity between the batched device path and per-query
+`apply_scr` / per-query `answer`."""
+import numpy as np
+import pytest
+
+from repro.core.scr import (SCRConfig, apply_scr, apply_scr_batch,
+                            segment_best_windows)
+from repro.core.window_index import WindowIndex
+from repro.serving.embedder import HashEmbedder
+
+DOCS = [
+    ("Volcanoes are studied by geologists. "
+     "Their eruptions follow magma pressure. "
+     "Monitoring stations track seismic activity. "
+     "Lava flows reshape the landscape."),
+    ("The Tiramisu dessert originated in Italy. "
+     "An interesting historical note about Tiramisu follows. "
+     "Recipe of the Tiramisu includes cheese and coffee. "
+     "The price of a single slice of Tiramisu can vary. "
+     "Many cafes now offer Tiramisu for pick-up."),
+    "One single sentence about astronomy.",
+    "",
+    ("Quantum computers use qubits. "
+     "Error correction is the central challenge."),
+]
+
+
+@pytest.fixture(scope="module")
+def embed():
+    return HashEmbedder(dim=64).fit([d for d in DOCS if d])
+
+
+@pytest.fixture()
+def widx(embed):
+    return WindowIndex(embed, SCRConfig(3, 2, 1)).build(DOCS)
+
+
+def test_build_precomputes_all_windows(widx):
+    assert widx.stats.full_builds == 1
+    assert widx.stats.embed_calls == 1
+    data, lens = widx.pack()
+    assert data.shape[0] == len(DOCS)
+    assert lens[3] == 0                       # empty doc: no windows
+    assert lens[2] == 1                       # single sentence: one window
+    assert all(lens[i] == len(widx.spans[i]) for i in range(len(DOCS)))
+
+
+@pytest.mark.parametrize("doc_ids", [
+    [0, 1], [1, 0, 4], [2], [3], [3, 2], [0, 1, 2, 3, 4], [],
+])
+def test_batch_matches_per_query_apply_scr(embed, widx, doc_ids):
+    """apply_scr_batch over the index == apply_scr re-embedding per query,
+    including windowless and empty docs."""
+    q = "Show me the dessert recipe from recent downloads."
+    ref = apply_scr(q, [DOCS[i] for i in doc_ids], embed, widx.cfg)
+    out = apply_scr_batch([q], [doc_ids], widx, embed)[0]
+    assert out.order == ref.order
+    assert out.spans == ref.spans
+    assert out.texts == ref.texts
+    assert out.tokens_before == ref.tokens_before
+    assert out.tokens_after == ref.tokens_after
+    np.testing.assert_allclose(out.scores, ref.scores, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_multiple_queries(embed, widx):
+    qs = ["dessert recipe?", "volcano eruptions", "qubits"]
+    ids = [[0, 1], [0, 1, 4], [4, 2]]
+    outs = apply_scr_batch(qs, ids, widx, embed)
+    for q, row, out in zip(qs, ids, outs):
+        ref = apply_scr(q, [DOCS[i] for i in row], embed, widx.cfg)
+        assert out.order == ref.order and out.spans == ref.spans
+
+
+def test_all_windowless_corpus(embed):
+    w = WindowIndex(embed, SCRConfig(3, 2, 1)).build(["", ""])
+    out = apply_scr_batch(["anything"], [[0, 1]], w, embed)[0]
+    assert out.texts == ["", ""]
+    assert out.scores == [0.0, 0.0]
+    assert out.tokens_before == 0 and out.tokens_after == 0
+
+
+def test_update_marks_only_owning_block_dirty(embed, widx):
+    repacks0 = widx.stats.block_repacks
+    widx.update(0, "Completely new text about sailing. Boats need wind.")
+    assert widx._dirty == {0}
+    data, lens = widx.pack()
+    assert widx.stats.block_repacks == repacks0 + 1
+    assert widx.stats.full_builds == 1            # no rebuild
+    assert lens[0] == len(widx.spans[0])
+    # the refreshed block answers for the new content
+    out = apply_scr_batch(["wind and boats sailing"], [[0, 1]], widx,
+                          embed)[0]
+    assert "sailing" in " ".join(out.texts) or "wind" in " ".join(out.texts)
+
+
+def test_update_invalidates_stale_windows(embed, widx):
+    """After an update, a query matching the OLD content must no longer
+    select it (the dirty block was re-embedded, not served stale)."""
+    q = "Show me the dessert recipe."
+    before = apply_scr_batch([q], [[1, 0]], widx, embed)[0]
+    assert any("Recipe of the Tiramisu" in t for t in before.texts)
+    widx.update(1, "Weather patterns shift with ocean currents.")
+    after = apply_scr_batch([q], [[1, 0]], widx, embed)[0]
+    assert not any("Tiramisu" in t for t in after.texts)
+
+
+def test_add_and_remove_docs(embed, widx):
+    di = widx.add("Fresh document about gardening. Tomatoes need sun. "
+                  "Water them daily.")
+    assert di == len(DOCS)
+    out = apply_scr_batch(["gardening tomatoes"], [[di]], widx, embed)[0]
+    assert "Tomatoes" in " ".join(out.texts)
+    widx.remove(di)
+    _, lens = widx.pack()
+    assert lens[di] == 0
+
+
+def test_capw_grows_geometrically(embed):
+    w = WindowIndex(embed, SCRConfig(1, 0, 0)).build(["Short. Doc."])
+    capw0 = w.pack()[0].shape[1]
+    long_doc = " ".join(f"Sentence number {i} talks about topic."
+                        for i in range(capw0 * 3))
+    w.update(0, long_doc)
+    data, lens = w.pack()
+    assert w.stats.grows >= 1
+    assert data.shape[1] >= capw0 * 3
+    assert lens[0] == capw0 * 3
+
+
+def test_row_table_grows_on_add(embed):
+    w = WindowIndex(embed, SCRConfig(3, 2, 1)).build(["One doc. Two "
+                                                      "sentences."])
+    nd0 = w.pack()[0].shape[0]
+    for i in range(nd0 + 3):
+        w.add(f"Additional doc {i}. It has sentences.")
+    data, lens = w.pack()
+    assert data.shape[0] >= nd0 + 4
+    assert w.stats.full_builds == 1
+
+
+def test_device_mirror_refreshes_dirty_blocks(embed, widx):
+    d0, l0 = widx.device_arrays()
+    widx.update(2, "Replacement text. With two sentences.")
+    d1, l1 = widx.device_arrays()
+    assert int(l1[2]) == len(widx.spans[2])
+    assert not np.allclose(np.asarray(d0[2, 0]), np.asarray(d1[2, 0]))
+
+
+def test_segment_best_windows_matches_scan():
+    rng = np.random.default_rng(0)
+    owners = np.sort(rng.integers(0, 7, 40))
+    scores = rng.normal(size=40).astype(np.float32)
+    scores[10] = scores[11] = scores.max() + 1.0   # tie inside one owner
+    owners[10] = owners[11] = owners[10]
+    best, counts = segment_best_windows(scores, owners, 9)
+    for di in range(9):
+        idx = [i for i, o in enumerate(owners) if o == di]
+        assert counts[di] == len(idx)
+        if idx:
+            assert best[di] == max(idx, key=lambda i: scores[i])
+
+
+def test_mobilerag_answer_batch_matches_answer():
+    from repro.data.synthetic import make_qa_corpus
+    from repro.serving.rag import MobileRAG
+    corpus = make_qa_corpus("squad", n_docs=40, n_questions=6, seed=0)
+    emb = HashEmbedder(dim=64).fit(corpus.docs)
+    pipe = MobileRAG(corpus.docs, emb, top_k=3)
+    qs = [e.question for e in corpus.examples[:6]]
+    batch = pipe.answer_batch(qs)
+    for q, b in zip(qs, batch):
+        a = pipe.answer(q)
+        assert a.prompt == b.prompt
+        assert a.doc_ids == b.doc_ids
+        assert a.scr.spans == b.scr.spans and a.scr.order == b.scr.order
+
+
+def test_mobilerag_window_index_matches_legacy_path():
+    from repro.data.synthetic import make_qa_corpus
+    from repro.serving.rag import MobileRAG
+    corpus = make_qa_corpus("hotpot", n_docs=40, n_questions=6, seed=1)
+    emb = HashEmbedder(dim=64).fit(corpus.docs)
+    new = MobileRAG(corpus.docs, emb, top_k=3)
+    legacy = MobileRAG(corpus.docs, emb, top_k=3, use_window_index=False)
+    for e in corpus.examples[:6]:
+        a, b = new.answer(e.question), legacy.answer(e.question)
+        assert a.prompt == b.prompt
+        assert a.scr.spans == b.scr.spans and a.scr.order == b.scr.order
