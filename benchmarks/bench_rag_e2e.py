@@ -14,6 +14,7 @@ from benchmarks.common import emit
 from repro.data.synthetic import make_qa_corpus
 from repro.serving.embedder import HashEmbedder
 from repro.serving.rag import PIPELINES, SLM_SPEEDS, answer_in_context
+from repro.serving.slm import ReducedSLM
 
 STYLES = {"SQuAD-like": "squad", "HotpotQA-like": "hotpot",
           "TriviaQA-like": "trivia"}
@@ -21,6 +22,15 @@ STYLES = {"SQuAD-like": "squad", "HotpotQA-like": "hotpot",
 
 def run(mode="quick"):
     nq = 20 if mode == "quick" else 80
+    # Real-generation TTFT reference: Engine prefill + first token on the
+    # reduced on-device sLM (one shared instance -> one compile), reported
+    # beside the analytical Table-6 ttft estimate on every row.
+    slm_real = ReducedSLM()
+    slm_real.warmup()
+    # measured once per (style, pipeline): the real engine/prompts are
+    # identical for every Table-6 slm row, only the analytical column
+    # differs, so re-measuring per slm would triple the Engine waves
+    real_ttft_cache = {}
     for label, style in STYLES.items():
         corpus = make_qa_corpus(style, n_docs=150, n_questions=nq, seed=0)
         emb = HashEmbedder(dim=128).fit(corpus.docs)
@@ -42,8 +52,17 @@ def run(mode="quick"):
                 ttft = np.mean([a.ttft_model_s for a in answers])
                 power = np.mean([a.energy_model_j for a in answers])
                 tok = np.mean([a.prompt_tokens for a in answers])
+                # measured LM-side TTFT on this pipeline's actual prompts
+                if (label, pname) not in real_ttft_cache:
+                    n_real = min(3, len(answers))
+                    real_ttft_cache[label, pname] = float(np.mean(
+                        [slm_real.measure_ttft(a.prompt)
+                         for a in answers[:n_real]]))
+                real_ttft = real_ttft_cache[label, pname]
                 emit(f"rag.{slm}.{label}.{pname}", ttft * 1e6,
                      f"acc={acc:.2f};ttft_s={ttft:.2f};"
+                     f"real_ttft_s={real_ttft:.3f};"
+                     f"real_arch={slm_real.arch}-reduced;"
                      f"power_J={power:.2f};tokens={tok:.0f}")
                 # batched-serving throughput for pipelines with batched
                 # retrieval (one embed + one fused device retrieval)

@@ -72,11 +72,11 @@ def make_sharded_retrieval(mesh: Mesh, *, k: int = 10, n_probe: int = 8):
             return -fd, out_ids
 
         shard_axes = axes if len(axes) > 1 else axes[0]
-        fn = jax.shard_map(
+        from repro.dist.sharding import shard_map
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(), P(shard_axes), P(shard_axes), P(shard_axes)),
-            out_specs=(P(), P()),
-            check_vma=False)
+            out_specs=(P(), P()))
         return fn(q, centroids, data, lens, slot_ids)
 
     return retrieve

@@ -308,18 +308,22 @@ class EcoVector:
         rather than re-uploading the whole [NC, CAP, d] tensor."""
         import jax.numpy as jnp
         data, lens, _, _ = self.device_pack()
+        # jnp.array (copy) rather than jnp.asarray: the CPU backend may
+        # zero-copy-alias an aligned numpy buffer, and repacks mutate the
+        # host pack in place — an aliased mirror would change (and dirty-
+        # block refreshes become no-ops) under callers' feet
         if self._mirror is None or self._mirror[0].shape != data.shape:
-            self._mirror = (jnp.asarray(data), jnp.asarray(lens))
+            self._mirror = (jnp.array(data), jnp.array(lens))
             self._mirror_dirty.clear()
         elif self._mirror_dirty:
             touched = sorted(self._mirror_dirty)
             mdata, _ = self._mirror
             mdata = mdata.at[jnp.asarray(touched)].set(
                 jnp.asarray(data[touched]))
-            self._mirror = (mdata, jnp.asarray(lens))
+            self._mirror = (mdata, jnp.array(lens))
             self._mirror_dirty.clear()
         if self._centroids_dev is None:
-            self._centroids_dev = jnp.asarray(
+            self._centroids_dev = jnp.array(
                 np.asarray(self.centroids, np.float32))
         return self._mirror[0], self._mirror[1], self._centroids_dev
 

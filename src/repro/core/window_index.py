@@ -210,14 +210,18 @@ class WindowIndex:
         re-uploading the whole [ND, CAPW, d] tensor."""
         import jax.numpy as jnp
         data, lens = self.pack()
+        # jnp.array (copy) rather than jnp.asarray: the CPU backend may
+        # zero-copy-alias an aligned numpy buffer, and the host pack is
+        # mutated in place by later repacks — an aliased mirror would
+        # change under every reference already handed out
         if self._mirror is None or self._mirror[0].shape != data.shape:
-            self._mirror = (jnp.asarray(data), jnp.asarray(lens))
+            self._mirror = (jnp.array(data), jnp.array(lens))
             self._mirror_dirty.clear()
         elif self._mirror_dirty:
             touched = sorted(self._mirror_dirty)
             mdata = self._mirror[0].at[jnp.asarray(touched)].set(
                 jnp.asarray(data[touched]))
-            self._mirror = (mdata, jnp.asarray(lens))
+            self._mirror = (mdata, jnp.array(lens))
             self._mirror_dirty.clear()
         return self._mirror
 

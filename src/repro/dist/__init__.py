@@ -1,0 +1,16 @@
+"""Distributed substrate: logical-axis sharding, checkpointing, fault
+tolerance.
+
+The rest of the codebase is written against this layer, never against raw
+jax.sharding: models annotate activations/params with *logical* axes
+("batch", "fsdp", "tp", "expert", "seq_sp"), and this package maps them to
+whatever physical mesh — if any — the launcher installed. Off-mesh (the
+1-device CPU test environment) every entry point degrades to a no-op, so
+the exact same model code runs on a laptop and on a multi-pod slice.
+
+  sharding.py   logical axes -> PartitionSpec / NamedSharding, mesh context
+  checkpoint.py atomic directory-commit save/restore (optional async)
+  fault.py      RestartManager (kill -9 survival), StepWatchdog,
+                reshard_restore (elastic mesh-to-mesh recovery)
+"""
+from repro.dist import checkpoint, fault, sharding  # noqa: F401

@@ -1,0 +1,152 @@
+"""Host-side checkpointing with atomic directory commits.
+
+Layout (one directory per step):
+
+  <dir>/step_00000042/manifest.json      # shapes/dtypes + leaf file list
+  <dir>/step_00000042/arrays/00000.bin   # raw little-endian leaf bytes
+
+Writers stage everything under ``step_XXXXXXXX.tmp`` and commit with one
+``os.replace`` — readers (`latest_step`) only trust directories whose
+manifest exists at the final path, so a crash mid-write leaves at worst a
+stale ``.tmp`` that the next save of the same step overwrites. Leaf bytes
+are stored raw (not .npy) because bfloat16/int8 moment leaves use
+ml_dtypes dtypes that predate numpy's format support; the manifest carries
+the dtype names and `restore` rebuilds arrays with `np.frombuffer`.
+
+`save(..., blocking=False)` snapshots the tree to host memory
+synchronously (so donated/overwritten device buffers are safe) and does
+the disk write on a background thread, returning it for `join()`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+_MANIFEST = "manifest.json"
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+class _SaveThread(threading.Thread):
+    """Writer thread that re-raises its failure from join(): an async
+    save that died (disk full, permissions) must surface to the caller —
+    a silently-lost checkpoint voids the durability contract."""
+
+    def __init__(self, fn, name: str):
+        super().__init__(name=name)
+        self._fn = fn
+        self._exc: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._fn()
+        except BaseException as e:  # noqa: BLE001 - transported to join()
+            self._exc = e
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        super().join(timeout)
+        if self._exc is not None and not self.is_alive():
+            exc, self._exc = self._exc, None
+            raise exc
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *,
+         blocking: bool = True) -> Optional[threading.Thread]:
+    """Write `tree` as checkpoint `step`. Returns the writer thread when
+    ``blocking=False`` (already-started; join() to wait), else None."""
+    leaves = jax.tree.leaves(tree)
+    # Device->host snapshot happens on the caller's thread: once save()
+    # returns, the training loop may donate or overwrite every buffer.
+    host = [np.asarray(x) for x in leaves]
+
+    def write():
+        final = _step_dir(ckpt_dir, step)
+        tmp = final + ".tmp"
+        arrays = os.path.join(tmp, "arrays")
+        os.makedirs(arrays, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for i, a in enumerate(host):
+            fname = f"{i:05d}.bin"
+            with open(os.path.join(arrays, fname), "wb") as f:
+                f.write(np.ascontiguousarray(a).tobytes())
+            manifest["leaves"].append({"file": fname,
+                                       "shape": list(a.shape),
+                                       "dtype": str(a.dtype)})
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):  # re-save of the same step
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+
+    if blocking:
+        write()
+        return None
+    th = _SaveThread(write, name=f"ckpt-save-{step}")
+    th.start()
+    return th
+
+
+def restore_host(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore checkpoint `step` as host numpy arrays in `like`'s
+    structure (dtypes come from the manifest, bit-identical to save)."""
+    d = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, _MANIFEST)) as f:
+        manifest = json.load(f)
+    treedef = jax.tree.structure(like)
+    entries = manifest["leaves"]
+    if treedef.num_leaves != len(entries):
+        raise ValueError(
+            f"checkpoint {d} has {len(entries)} leaves, expected "
+            f"{treedef.num_leaves} (model/optimizer structure changed?)")
+    out = []
+    for e in entries:
+        with open(os.path.join(d, "arrays", e["file"]), "rb") as f:
+            raw = f.read()
+        a = np.frombuffer(raw, dtype=_np_dtype(e["dtype"]))
+        out.append(a.reshape(e["shape"]))
+    return jax.tree.unflatten(treedef, out)
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    """Restore checkpoint `step` as device arrays (single-device/no-mesh
+    placement; see fault.reshard_restore for mesh-aware restore)."""
+    import jax.numpy as jnp
+    return jax.tree.map(jnp.asarray, restore_host(ckpt_dir, step, like))
+
+
+def available_steps(ckpt_dir: str) -> list:
+    """Committed checkpoint steps, ascending (partial writes ignored)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if not m:
+            continue
+        if not os.path.isfile(os.path.join(ckpt_dir, name, _MANIFEST)):
+            continue  # crashed before the manifest/rename commit
+        steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None

@@ -25,7 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.dist.sharding import (fsdp_spans_pods, get_mesh, logical_to_spec,
-                                 shard)
+                                 shard, shard_map)
 from repro.models import layers as L
 from repro.models.common import ParamDef, attn_defs, embed_defs, mlp_defs
 from repro.models import dense
@@ -194,8 +194,8 @@ def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False):
     specs_in = (batch_spec, P(fsdp_ax, None), P("model", fsdp_ax, None),
                 P("model", None, fsdp_ax),
                 P("model", fsdp_ax, None) if cfg.act == "swiglu" else P())
-    fn = jax.shard_map(body, mesh=mesh, in_specs=specs_in,
-                       out_specs=(out_spec, P()), check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=specs_in,
+                   out_specs=(out_spec, P()))
     we3 = lp.get("we3")
     if we3 is None:
         we3 = jnp.zeros((), x.dtype)

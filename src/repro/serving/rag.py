@@ -45,6 +45,11 @@ class RAGAnswer:
     energy_model_j: float
     scr: Optional[SCRResult] = None
     generated: Optional[str] = None
+    # real-generation fields, filled by answer(..., generate=True): token
+    # ids decoded by serving.Engine on the reduced on-device sLM, and the
+    # MEASURED prefill+first-token time (vs the Table-6 ttft_model_s model)
+    gen_tokens: Optional[List[int]] = None
+    ttft_measured_s: Optional[float] = None
 
 
 def _tok_count(text: str) -> int:
@@ -63,12 +68,18 @@ class RAGBase:
     def __init__(self, docs: Sequence[str], embed: Callable, *,
                  top_k: int = 3, slm: str = "qwen25_0_5b", index=None,
                  generator: Optional[Callable] = None,
-                 device_retrieval: Optional[bool] = None):
+                 device_retrieval: Optional[bool] = None,
+                 gen_arch: str = "qwen25_0_5b"):
         self.docs = list(docs)
         self.embed = embed
         self.top_k = top_k
         self.slm = SLM_SPEEDS[slm]
         self.generator = generator
+        # arch for answer(..., generate=True); the Table-6 `slm` keys are
+        # speed models only — real generation always runs a config that
+        # exists in repro.configs (reduced to CPU smoke size)
+        self.gen_arch = gen_arch
+        self._slm_engine = None
         if device_retrieval is not None:
             self.device_retrieval = device_retrieval
         if hasattr(embed, "fit") and not getattr(embed, "fitted", True):
@@ -131,27 +142,62 @@ class RAGBase:
     # never pay a second embedder forward).
     _finish = None
 
-    def answer(self, query: str) -> RAGAnswer:
+    # --------------------------------------------- real on-device decoding
+
+    def _ensure_slm(self):
+        if self._slm_engine is None:
+            from repro.serving.slm import ReducedSLM
+            self._slm_engine = ReducedSLM(self.gen_arch)
+        return self._slm_engine
+
+    def _attach_generation(self, answers: List[RAGAnswer],
+                           max_new: int = 16) -> List[RAGAnswer]:
+        """Run the final prompts through the real Engine decode loop (one
+        fixed-shape wave for the whole list) and record the decoded token
+        ids + measured prefill TTFT on each answer."""
+        slm = self._ensure_slm()
+        gens = slm.generate([a.prompt for a in answers], max_new=max_new)
+        for a, g in zip(answers, gens):
+            a.gen_tokens = g.tokens
+            a.generated = g.text
+            a.ttft_measured_s = g.ttft_s
+        return answers
+
+    def answer(self, query: str, *, generate: bool = False,
+               max_new: int = 16) -> RAGAnswer:
+        """One query end to end. With `generate=True` the answer carries
+        REAL decoded tokens from serving.Engine (retrieval -> post -> LM
+        generate on device), not just the analytical TTFT estimate."""
         if self._finish is None:
             raise NotImplementedError
         t0 = time.perf_counter()
         qv = np.asarray(self.embed([query]))[0]
         ids = self._retrieve(qv, self.top_k)
         t_ret = time.perf_counter() - t0
-        return self._finish(query, ids, t_ret, qv=qv)
+        ans = self._finish(query, ids, t_ret, qv=qv)
+        if generate:
+            self._attach_generation([ans], max_new=max_new)
+        return ans
 
-    def answer_batch(self, queries: Sequence[str]) -> List[RAGAnswer]:
+    def answer_batch(self, queries: Sequence[str], *,
+                     generate: bool = False,
+                     max_new: int = 16) -> List[RAGAnswer]:
         """Batched serving entry point: one embed + one (device-)batched
         retrieval for the whole query set, then per-query post-processing.
-        Pipelines without a `_finish` hook fall back to per-query answers."""
+        Pipelines without a `_finish` hook fall back to per-query answers.
+        `generate=True` decodes every final prompt in one Engine wave."""
         if self._finish is None:
-            return [self.answer(q) for q in queries]
-        t0 = time.perf_counter()
-        qvs = np.asarray(self.embed(list(queries)), np.float32)
-        ids_b = self._retrieve_batch(qvs, self.top_k)
-        t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
-        return [self._finish(q, ids, t_ret, qv=qv)
-                for q, ids, qv in zip(queries, ids_b, qvs)]
+            out = [self.answer(q) for q in queries]
+        else:
+            t0 = time.perf_counter()
+            qvs = np.asarray(self.embed(list(queries)), np.float32)
+            ids_b = self._retrieve_batch(qvs, self.top_k)
+            t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
+            out = [self._finish(q, ids, t_ret, qv=qv)
+                   for q, ids, qv in zip(queries, ids_b, qvs)]
+        if generate and out:
+            self._attach_generation(out, max_new=max_new)
+        return out
 
 
 class NaiveRAG(RAGBase):
@@ -169,7 +215,8 @@ class AdvancedRAG(RAGBase):
     model, which adds the post-retrieval latency the paper measures)."""
     name = "Advanced-RAG"
 
-    def answer(self, query: str) -> RAGAnswer:
+    def answer(self, query: str, *, generate: bool = False,
+               max_new: int = 16) -> RAGAnswer:
         t0 = time.perf_counter()
         qv = np.asarray(self.embed([query]))[0]
         ids = self._retrieve(qv, self.top_k * 3)
@@ -185,7 +232,10 @@ class AdvancedRAG(RAGBase):
         ids = [ids[i] for i in order]
         t_post = time.perf_counter() - t1
         prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
-        return self._finalize(query, prompt, ids, t_ret, t_post)
+        ans = self._finalize(query, prompt, ids, t_ret, t_post)
+        if generate:
+            self._attach_generation([ans], max_new=max_new)
+        return ans
 
 
 class EdgeRAG(RAGBase):
@@ -199,7 +249,8 @@ class EdgeRAG(RAGBase):
         self._qcache: Dict[str, np.ndarray] = {}
         return idx
 
-    def answer(self, query: str) -> RAGAnswer:
+    def answer(self, query: str, *, generate: bool = False,
+               max_new: int = 16) -> RAGAnswer:
         t0 = time.perf_counter()
         if query in self._qcache:
             qv = self._qcache[query]
@@ -209,7 +260,10 @@ class EdgeRAG(RAGBase):
         ids = self._retrieve(qv, self.top_k)
         t_ret = time.perf_counter() - t0
         prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
-        return self._finalize(query, prompt, ids, t_ret, 0.0)
+        ans = self._finalize(query, prompt, ids, t_ret, 0.0)
+        if generate:
+            self._attach_generation([ans], max_new=max_new)
+        return ans
 
 
 class MobileRAG(RAGBase):
@@ -260,12 +314,16 @@ class MobileRAG(RAGBase):
         ids = [ids[i] for i in res.order]
         return self._finalize(query, prompt, ids, t_ret, t_post, scr=res)
 
-    def answer_batch(self, queries: Sequence[str]) -> List[RAGAnswer]:
+    def answer_batch(self, queries: Sequence[str], *,
+                     generate: bool = False,
+                     max_new: int = 16) -> List[RAGAnswer]:
         """Fully batched MobileRAG: ONE query embed feeds both the fused
         EcoVector retrieval and the fused SCR select; everything after the
-        two device calls is host-side string assembly."""
+        two device calls is host-side string assembly (plus, with
+        `generate=True`, one Engine wave over the final prompts)."""
         if self.window_index is None or not queries:
-            return super().answer_batch(queries)
+            return super().answer_batch(queries, generate=generate,
+                                        max_new=max_new)
         self._sync_window_index()
         t0 = time.perf_counter()
         qvs = np.asarray(self.embed(list(queries)), np.float32)
@@ -281,6 +339,8 @@ class MobileRAG(RAGBase):
             out.append(self._finalize(q, prompt,
                                       [ids[i] for i in res.order],
                                       t_ret, t_post, scr=res))
+        if generate and out:
+            self._attach_generation(out, max_new=max_new)
         return out
 
 

@@ -1,8 +1,8 @@
 """HNSW structural invariants + Algorithm 1/2 behaviour, including
 hypothesis property tests over random insert/delete interleavings."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.hnsw import HNSW
 

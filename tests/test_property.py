@@ -2,7 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.analytical import (memory_bytes, n_search_ops,
                                    search_energy_mj, search_latency_ms)

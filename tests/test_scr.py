@@ -1,7 +1,8 @@
 """SCR (§4) behaviour + hypothesis properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.scr import (SCRConfig, apply_scr, build_prompt,
                             sliding_windows, split_sentences)

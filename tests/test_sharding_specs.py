@@ -1,0 +1,181 @@
+"""Dist-layer spec helpers on a 1-device CPU environment: the logical->
+physical mapping, shape pruning, no-mesh degradation, and RestartManager
+surviving a simulated process crash (fresh manager instance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import checkpoint as ckpt
+from repro.dist.fault import RestartManager
+from repro.dist.sharding import (axis_size, fsdp_spans_pods, get_mesh,
+                                 logical_to_spec, set_fsdp_spans_pods,
+                                 shard, sharding_for,
+                                 spec_tree_to_shardings, use_mesh)
+
+
+class FakeMesh:
+    """Shape-only stand-in so the mapping logic is testable for mesh
+    geometries (4x2, multi-pod) that a 1-CPU host cannot instantiate."""
+
+    def __init__(self, **shape):
+        self._shape = dict(shape)
+
+    @property
+    def shape(self):
+        return dict(self._shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def size(self):
+        n = 1
+        for s in self._shape.values():
+            n *= s
+        return n
+
+
+def real_mesh_1x1():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+# ------------------------------------------------------------ mesh context
+
+
+def test_no_mesh_is_default_and_nesting_restores():
+    assert get_mesh() is None
+    m1, m2 = FakeMesh(data=2), FakeMesh(data=4)
+    with use_mesh(m1):
+        assert get_mesh() is m1
+        with use_mesh(m2):
+            assert get_mesh() is m2
+        assert get_mesh() is m1
+    assert get_mesh() is None
+
+
+def test_shard_is_identity_without_mesh():
+    x = jnp.arange(6.0).reshape(2, 3)
+    assert shard(x, "batch", "tp") is x
+    assert shard(x) is x
+
+
+def test_shard_is_identity_on_single_device_mesh():
+    x = jnp.arange(8.0).reshape(2, 4)
+    with use_mesh(real_mesh_1x1()):
+        assert shard(x, "batch", "tp") is x
+
+
+# ------------------------------------------------------- logical -> spec
+
+
+def test_axis_size_off_mesh_and_on_mesh():
+    assert axis_size(None, "tp") == 1
+    m = FakeMesh(data=4, model=2)
+    assert axis_size(m, "tp") == 2
+    assert axis_size(m, "fsdp") == 4
+    assert axis_size(m, "batch") == 4          # no pod axis on this mesh
+    assert axis_size(FakeMesh(pod=2, data=4, model=2), "batch") == 8
+    assert axis_size(m, None) == 1
+
+
+def test_logical_to_spec_basic_mapping():
+    m = FakeMesh(data=4, model=2)
+    assert logical_to_spec(m, ("batch", None, "tp")) == \
+        P("data", None, "model")
+    assert logical_to_spec(m, ("fsdp", "tp")) == P("data", "model")
+    assert logical_to_spec(m, ("expert", "fsdp", None)) == \
+        P("model", "data", None)
+
+
+def test_logical_to_spec_fsdp_spans_pods_toggle():
+    m = FakeMesh(pod=2, data=4, model=2)
+    try:
+        assert logical_to_spec(m, ("fsdp",)) == P("data")
+        set_fsdp_spans_pods(True)
+        assert fsdp_spans_pods()
+        assert logical_to_spec(m, ("fsdp",)) == P(("pod", "data"))
+    finally:
+        set_fsdp_spans_pods(False)
+    assert logical_to_spec(m, ("batch",)) == P(("pod", "data"))
+
+
+def test_logical_to_spec_prunes_indivisible_dims():
+    m = FakeMesh(data=4, model=2)
+    # 6 % 4 != 0 and 5 % 2 != 0 -> fully replicated
+    assert logical_to_spec(m, ("batch", "tp"), shape=(6, 5)) == P(None, None)
+    assert logical_to_spec(m, ("batch", "tp"), shape=(8, 4)) == \
+        P("data", "model")
+    # multi-axis entry keeps the divisible prefix: 2 % pod(2) == 0 but
+    # 2 % (pod*data)=8 != 0 -> shard over pod only
+    mp = FakeMesh(pod=2, data=4, model=2)
+    assert logical_to_spec(mp, ("batch",), shape=(2,)) == P("pod")
+
+
+def test_logical_to_spec_never_reuses_a_mesh_axis():
+    m = FakeMesh(data=4, model=2)
+    # "tp" and "expert" both map to "model": second claim is dropped
+    assert logical_to_spec(m, ("tp", "expert")) == P("model", None)
+
+
+def test_unknown_logical_axis_raises():
+    with pytest.raises(ValueError, match="unknown logical axis"):
+        logical_to_spec(FakeMesh(data=2), ("bogus",))
+
+
+# ------------------------------------------------- tree-level shardings
+
+
+def test_spec_tree_to_shardings_round_trips_a_pytree():
+    mesh = real_mesh_1x1()
+    tree = {"params": {"w": jnp.arange(32.0).reshape(4, 8),
+                       "b": jnp.ones((8,), jnp.bfloat16)},
+            "step": jnp.int32(3)}
+    specs = {"params": {"w": ("fsdp", "tp"), "b": ("tp",)}, "step": ()}
+    sh = spec_tree_to_shardings(mesh, specs, tree)
+    assert jax.tree.structure(sh) == jax.tree.structure(tree)
+    assert all(isinstance(s, NamedSharding) for s in jax.tree.leaves(sh))
+    placed = jax.tree.map(jax.device_put, tree, sh)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(placed)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_spec_shorter_or_longer_than_rank_is_padded():
+    mesh = real_mesh_1x1()
+    x = jnp.ones((2, 3, 4))
+    s = sharding_for(mesh, "batch", shape=x.shape)       # rank-1 spec
+    assert s.spec == P(*logical_to_spec(mesh, ("batch", None, None),
+                                        shape=x.shape))
+    s2 = sharding_for(mesh, "batch", None, "tp", None, None,
+                      shape=(2, 3))                      # over-long spec
+    assert len(s2.spec) <= 2
+
+
+# ------------------------------------------------------- restart manager
+
+
+def test_restart_manager_resumes_after_simulated_crash(tmp_path):
+    state = {"w": jnp.arange(4.0), "n": jnp.int32(7)}
+    rm = RestartManager(str(tmp_path), interval=3)
+    rm.on_step(1, state)                     # below interval: no save
+    assert ckpt.latest_step(str(tmp_path)) is None
+    rm.on_step(3, state)
+    # "crash": the manager object is lost; a fresh process builds a new one
+    rm2 = RestartManager(str(tmp_path), interval=3)
+    restored, start = rm2.maybe_restore(jax.tree.map(jnp.zeros_like, state))
+    assert start == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(4.0))
+    assert restored["n"].dtype == jnp.int32
+
+
+def test_restart_manager_async_save_commits_on_flush(tmp_path):
+    rm = RestartManager(str(tmp_path), interval=2, async_save=True)
+    rm.on_step(2, {"w": jnp.ones((3,))})
+    rm.flush()
+    assert ckpt.latest_step(str(tmp_path)) == 2
