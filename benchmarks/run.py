@@ -21,6 +21,7 @@ SUITES = [
     ("rag_e2e", "benchmarks.bench_rag_e2e"),          # Table 5
     ("battery", "benchmarks.bench_battery"),          # Table 6
     ("kernels", "benchmarks.bench_kernels"),          # kernels (extra)
+    ("serving", "benchmarks.bench_serving"),          # wave vs continuous
 ]
 
 

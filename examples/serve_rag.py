@@ -1,6 +1,7 @@
-"""End-to-end serving driver: batched RAG requests through the scheduler
-(dynamic length-bucketed batching, hedged re-dispatch on replica failure),
-MobileRAG retrieval + SCR + real decode loop on reduced models.
+"""End-to-end serving example on the request-centric API: MobileRAG
+retrieval + SCR condensation streamed through a RagSession (continuous
+batching on the slot-paged engine), plus multi-replica slot admission
+with failover through the SlotScheduler.
 
   PYTHONPATH=src python examples/serve_rag.py --questions 8 --replicas 2 \
       [--inject-failure]
@@ -12,11 +13,22 @@ import time
 import numpy as np
 
 from repro.data.synthetic import make_qa_corpus
-from repro.data.tokenizer import HashTokenizer
-from repro.launch.serve import make_generator
 from repro.serving.embedder import HashEmbedder
 from repro.serving.rag import MobileRAG, accuracy
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import SlotScheduler
+
+
+class BrokenEngine:
+    """A replica whose step() always raises — exercises drain/failover."""
+
+    def submit(self, prompt, max_new):
+        return 0
+
+    def available_slots(self):
+        return 2
+
+    def step(self):
+        raise RuntimeError("injected replica failure")
 
 
 def main():
@@ -25,41 +37,46 @@ def main():
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--inject-failure", action="store_true",
-                    help="first replica always fails: exercises hedging")
+                    help="first replica always fails: exercises failover")
     args = ap.parse_args()
 
     corpus = make_qa_corpus("squad", n_docs=150,
                             n_questions=args.questions, seed=0)
     emb = HashEmbedder(dim=128)
     pipe = MobileRAG(corpus.docs, emb, top_k=3)
-    gen, tok, eng = make_generator()
+    questions = [e.question for e in corpus.examples[: args.questions]]
 
-    def healthy(prompts, mx):
-        return gen(prompts, mx)
-
-    def broken(prompts, mx):
-        raise RuntimeError("injected replica failure")
-
-    replicas = [broken if (args.inject_failure and i == 0) else healthy
-                for i in range(args.replicas)]
-    sched = Scheduler(replicas, max_wave=4, max_strikes=1)
-
+    # 1) the streaming session surface: submit/step/stream events
     t0 = time.perf_counter()
-    answers = []
-    for ex in corpus.examples[: args.questions]:
-        a = pipe.answer(ex.question)
-        answers.append(a)
-        sched.submit(np.asarray(tok.encode(a.prompt)[-96:], np.int32),
+    n_tokens = 0
+    answers = {}
+    for ev in pipe.stream(questions, max_new=args.max_new):
+        if ev.kind == "token":
+            n_tokens += 1
+        elif ev.kind == "done":
+            answers[ev.req_id] = ev.payload
+    wall = time.perf_counter() - t0
+    acc = accuracy(pipe, corpus.examples, max_q=args.questions)
+    print(f"[session] {len(answers)} answers, {n_tokens} streamed tokens "
+          f"in {wall:.1f}s | acc={acc:.2f} | mean prompt tokens="
+          f"{np.mean([a.prompt_tokens for a in answers.values()]):.0f}")
+
+    # 2) multi-replica slot admission + failover
+    slm = pipe._ensure_slm()
+    engines = [slm.continuous(slots=2)]
+    for _ in range(1, args.replicas):
+        engines.append(engines[0].clone())
+    if args.inject_failure:
+        engines[0] = BrokenEngine()
+    sched = SlotScheduler(engines, max_strikes=1)
+    for a in answers.values():
+        sched.submit(slm.encode_prompt(a.prompt, bucket=False),
                      args.max_new)
     completions = sched.run()
-    wall = time.perf_counter() - t0
-
-    acc = accuracy(pipe, corpus.examples, max_q=args.questions)
-    print(f"{len(completions)} completions in {wall:.1f}s | "
-          f"acc={acc:.2f} | "
-          f"mean prompt tokens={np.mean([a.prompt_tokens for a in answers]):.0f} | "
+    print(f"[scheduler] {len(completions)} completions | "
           f"hedged={sum(c.hedged for c in completions)} | "
-          f"replica health={[s.healthy for s in sched.state]}")
+          f"replica health={[s.healthy for s in sched.state]} | "
+          f"served={[s.served for s in sched.state]}")
     return 0
 
 

@@ -51,9 +51,14 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("ts", "interpret"))
-def decode_attention(q, k, v, kv_len, ts: int = 512, interpret: bool = True):
-    """q: [B, H, dh]; k, v: [B, S, G, dh] (H % G == 0); kv_len: i32 scalar.
-    Returns [B, H, dh]."""
+def decode_attention(q, k, v, kv_len, ts: int = 512,
+                     interpret: bool | None = None):
+    """q: [B, H, dh]; k, v: [B, S, G, dh] (H % G == 0); kv_len: i32 scalar
+    (shared length) or [B] vector (slot-paged batches where every request
+    sits at its own position). Returns [B, H, dh]."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
     B, H, dh = q.shape
     S, G = k.shape[1], k.shape[2]
     Hg = H // G
@@ -66,7 +71,8 @@ def decode_attention(q, k, v, kv_len, ts: int = 512, interpret: bool = True):
     Sp = k.shape[1]
     nsteps = Sp // ts
     scale = 1.0 / (dh ** 0.5)
-    lens = jnp.full((B,), kv_len, jnp.int32)
+    lens = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                       # lens

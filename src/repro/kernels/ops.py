@@ -126,7 +126,7 @@ def pq_adc(lut, codes, use_pallas=True):
 
 def decode_attention(q, k, v, kv_len, use_pallas=True):
     if use_pallas:
-        return _decode_attn(q, k, v, kv_len, interpret=not _on_tpu())
+        return _decode_attn(q, k, v, kv_len, interpret=default_interpret())
     return ref.decode_attention(q, k, v, kv_len)
 
 

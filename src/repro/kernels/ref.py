@@ -98,13 +98,14 @@ def pq_adc(lut, codes):
 
 def decode_attention(q, k, v, kv_len):
     """q: [B, H, dh]; k,v: [B, S, G, dh]; H % G == 0. Softmax over the
-    first kv_len positions."""
+    first kv_len positions (kv_len: scalar or per-row [B] vector)."""
     B, H, dh = q.shape
     S, G = k.shape[1], k.shape[2]
     qg = q.reshape(B, G, H // G, dh)
     s = jnp.einsum("bgnd,bsgd->bgns", qg, k) / jnp.sqrt(dh).astype(q.dtype)
     s = s.astype(jnp.float32)
-    mask = jnp.arange(S)[None, None, None, :] < kv_len
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    mask = jnp.arange(S)[None, None, None, :] < lens[:, None, None, None]
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgns,bsgd->bgnd", p.astype(v.dtype), v)

@@ -1,43 +1,119 @@
-"""Serving driver: full MobileRAG pipeline with batched requests.
+"""Serving driver: the full MobileRAG pipeline on the request-centric API.
 
-  PYTHONPATH=src python -m repro.launch.serve --pipeline mobile \
-      --questions 16 --replicas 2
+  # batched: answer_batch(generate=True) through the RagSession
+  PYTHONPATH=src python -m repro.launch.serve --pipeline mobile --questions 16
 
-Wires: synthetic corpus -> embedder -> EcoVector (or baseline index) ->
-SCR -> sLM generation (reduced model, real decode loop) through the
-Scheduler (dynamic batching + hedged re-dispatch).
+  # streaming: Poisson arrivals into a live session, per-request latency
+  PYTHONPATH=src python -m repro.launch.serve --stream --arrival-qps 4
+
+  # multi-replica: SlotScheduler over N continuous engines
+  PYTHONPATH=src python -m repro.launch.serve --replicas 2
+
+Wires: synthetic corpus -> embedder -> EcoVector -> SCR -> RagSession
+(continuous-batching decode on the slot-paged engine; retrieval/SCR of the
+next queries overlaps decode of the previous ones).
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import get_reduced
 from repro.data.synthetic import make_qa_corpus
-from repro.data.tokenizer import HashTokenizer
-from repro.models import model
 from repro.serving.embedder import HashEmbedder
-from repro.serving.engine import Engine
 from repro.serving.rag import PIPELINES, accuracy
-from repro.serving.scheduler import Scheduler
 
 
-def make_generator(seed: int = 0, max_len: int = 192):
-    cfg = get_reduced("qwen25_0_5b")
-    params = model.init_params(cfg, jax.random.PRNGKey(seed))
-    eng = Engine(cfg, params, max_len=max_len)
-    tok = HashTokenizer(cfg.vocab_size)
+def _percentiles(xs):
+    if not xs:
+        return 0.0, 0.0
+    return (float(np.percentile(xs, 50)), float(np.percentile(xs, 95)))
 
-    def generate(prompts, max_new=16):
-        arrs = [np.asarray(tok.encode(p)[-128:], np.int32) for p in prompts] \
-            if isinstance(prompts[0], str) else prompts
-        res = eng.generate(arrs, max_new=max_new)
-        return [r.tokens for r in res]
 
-    return generate, tok, eng
+def run_batch(pipe, corpus, args) -> None:
+    questions = [e.question for e in corpus.examples[: args.questions]]
+    t0 = time.perf_counter()
+    answers = pipe.answer_batch(questions, generate=True,
+                                max_new=args.max_new)
+    wall = time.perf_counter() - t0
+    acc = accuracy(pipe, corpus.examples, max_q=args.questions)
+    toks = [a.prompt_tokens for a in answers]
+    print(f"[serve] {len(answers)} answers in {wall:.2f}s | "
+          f"answer-in-context acc={acc:.2f} | "
+          f"prompt tokens mean={np.mean(toks):.0f} | "
+          f"measured TTFT={np.mean([a.ttft_measured_s for a in answers]):.3f}s | "
+          f"model TTFT={np.mean([a.ttft_model_s for a in answers]):.2f}s | "
+          f"model energy={np.mean([a.energy_model_j for a in answers]):.2f}J")
+    for a in answers[:3]:
+        print(f"  docs={a.doc_ids} gen={a.gen_tokens[:8]}")
+
+
+def run_stream(pipe, corpus, args) -> None:
+    """Poisson arrival process into a live RagSession: queries become
+    visible to the session at their arrival times while it keeps stepping,
+    so retrieval/SCR of late arrivals overlaps decode of early ones."""
+    rng = np.random.default_rng(args.seed)
+    n = args.questions
+    gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
+    arrivals = np.cumsum(gaps)
+    sess = pipe.session(max_new=args.max_new, slots=args.slots)
+    t0 = time.perf_counter()
+    submitted = 0
+    latencies = []
+    trace = []
+    while submitted < n or sess.pending:
+        now = time.perf_counter() - t0
+        while submitted < n and arrivals[submitted] <= now:
+            rid = sess.submit(corpus.examples[submitted].question)
+            trace.append((now, rid, "submitted"))
+            submitted += 1
+        if not sess.pending:
+            time.sleep(min(arrivals[submitted] - now, 0.05))
+            continue
+        for ev in sess.step():
+            if ev.kind in ("retrieved", "done"):
+                trace.append((time.perf_counter() - t0, ev.req_id, ev.kind))
+            if ev.kind == "done":
+                req = sess.requests[ev.req_id]
+                latencies.append(req.latency_s)
+    wall = time.perf_counter() - t0
+    p50, p95 = _percentiles(latencies)
+    eng = sess.engine
+    print(f"[serve --stream] {n} requests at ~{args.arrival_qps:.1f} qps "
+          f"in {wall:.2f}s | latency p50={p50:.3f}s p95={p95:.3f}s | "
+          f"slot util={eng.utilisation():.2f} "
+          f"({eng.steps} decode steps x {eng.slots} slots)")
+    for t, rid, kind in trace[: 3 * 3]:
+        print(f"  t={t:6.3f}s req={rid} {kind}")
+
+
+def run_replicas(pipe, corpus, args) -> None:
+    """SlotScheduler over N continuous-engine replicas (slot admission,
+    per-slot stall hedging, failover)."""
+    from repro.serving.scheduler import SlotScheduler
+    slm = pipe._ensure_slm()
+    engines = [slm.continuous(args.slots)]
+    for _ in range(1, args.replicas):
+        engines.append(engines[0].clone())
+    sched = SlotScheduler(engines)
+    questions = [e.question for e in corpus.examples[: args.questions]]
+    answers = pipe.answer_batch(questions)          # retrieval + SCR
+    t0 = time.perf_counter()
+    for a in answers:
+        sched.submit(slm.encode_prompt(a.prompt, bucket=False),
+                     args.max_new)
+    completions = sched.run()
+    wall = time.perf_counter() - t0
+    lat = [c.latency_s for c in completions]
+    p50, p95 = _percentiles(lat)
+    print(f"[serve --replicas {args.replicas}] {len(completions)} "
+          f"completions in {wall:.2f}s | p50={p50:.3f}s p95={p95:.3f}s | "
+          f"served per replica="
+          f"{[s.served for s in sched.state]}")
+    for c in completions[:3]:
+        print(f"  rid={c.rid} replica={c.replica} hedged={c.hedged} "
+              f"tokens={c.tokens[:8]}")
 
 
 def main():
@@ -48,39 +124,26 @@ def main():
     ap.add_argument("--docs", type=int, default=150)
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stream", action="store_true",
+                    help="Poisson arrival process into a live RagSession")
+    ap.add_argument("--arrival-qps", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     corpus = make_qa_corpus("squad", n_docs=args.docs,
-                            n_questions=args.questions, seed=0)
+                            n_questions=args.questions, seed=args.seed)
     emb = HashEmbedder(dim=128)
     pipe = PIPELINES[args.pipeline](corpus.docs, emb, top_k=3)
     print(f"[serve] pipeline={pipe.name} docs={len(corpus.docs)} "
           f"index_build={pipe.build_s:.2f}s")
 
-    gen, tok, eng = make_generator()
-    replicas = [lambda prompts, mx: gen(prompts, mx)
-                for _ in range(args.replicas)]
-    sched = Scheduler(replicas, max_wave=4)
-
-    t0 = time.perf_counter()
-    answers = []
-    for ex in corpus.examples[: args.questions]:
-        a = pipe.answer(ex.question)
-        answers.append(a)
-        sched.submit(np.asarray(tok.encode(a.prompt)[-96:], np.int32),
-                     args.max_new)
-    completions = sched.run()
-    wall = time.perf_counter() - t0
-    acc = accuracy(pipe, corpus.examples, max_q=args.questions)
-    toks = [a.prompt_tokens for a in answers]
-    print(f"[serve] {len(completions)} completions in {wall:.2f}s | "
-          f"answer-in-context acc={acc:.2f} | "
-          f"prompt tokens mean={np.mean(toks):.0f} | "
-          f"model TTFT={np.mean([a.ttft_model_s for a in answers]):.2f}s | "
-          f"model energy={np.mean([a.energy_model_j for a in answers]):.2f}J")
-    for c in completions[:3]:
-        print(f"  rid={c.rid} replica={c.replica} hedged={c.hedged} "
-              f"tokens={c.tokens[:8]}")
+    if args.stream:
+        run_stream(pipe, corpus, args)
+    elif args.replicas > 1:
+        run_replicas(pipe, corpus, args)
+    else:
+        run_batch(pipe, corpus, args)
 
 
 if __name__ == "__main__":

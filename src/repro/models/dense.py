@@ -174,6 +174,109 @@ def block_decode(cfg: ModelConfig, lp, x, pos, cache, idx,
     return res + y, cache
 
 
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
+    """One decode step over a slot-paged cache (continuous batching).
+
+    token [B,1] int32; pos [B] int32 — the per-slot write position (== the
+    slot's current kv length); active [B] bool. Every slot advances one
+    position at ITS OWN offset: k/v land at cache[:, b, pos[b]] via a
+    scatter, attention masks each row to its own kv_len = pos[b]+1.
+    Inactive slots (free, or mid-prefill-admission) scatter out of bounds
+    with mode="drop" so they cannot clobber a page another request is
+    filling; their logits rows are garbage the engine discards.
+    """
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    b = token.shape[0]
+    sc = cache["k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = jnp.where(active, pos, sc)       # OOB for inactive -> dropped
+    bidx = jnp.arange(b)
+
+    def body(carry, inp):
+        xc, ck, cv = carry
+        lp, idx = inp
+        h = cfg.num_heads
+        res = xc
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, y, pos[:, None])
+        ck = ck.at[idx, bidx, slot].set(k[:, 0].astype(ck.dtype),
+                                        mode="drop")
+        cv = cv.at[idx, bidx, slot].set(v[:, 0].astype(cv.dtype),
+                                        mode="drop")
+        klay = jax.lax.dynamic_index_in_dim(ck, idx, 0, keepdims=False)
+        vlay = jax.lax.dynamic_index_in_dim(cv, idx, 0, keepdims=False)
+        ctx = L.decode_attention(q, klay.astype(k.dtype),
+                                 vlay.astype(v.dtype), pos + 1)
+        ctx = ctx[:, :, :h, :]
+        xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
+        res = xc
+        y = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+        y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+        return (res + y, ck, cv), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, ck, cv), _ = jax.lax.scan(body, (x, cache["k"], cache["v"]),
+                                  (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
+                        offset):
+    """One prefill chunk of an admitted prompt, written into one slot of
+    the paged cache while the other slots keep decoding between chunks.
+
+    tokens [1, C] int32; slot / offset: traced scalars. The chunk's k/v
+    land at cache[:, slot, offset:offset+C]; its queries attend the page
+    prefix [0, offset+C) causally (L.attention's q_offset/kv_len path), so
+    a prompt longer than C is prefilled in several calls that all compile
+    to the same [1, C] shape. Rows past the prompt's true end (final
+    ragged chunk padded up to C) write junk that is either overwritten by
+    the next write at that position or masked by kv_len before anything
+    attends it. Returns (logits [1, C, V], cache).
+    """
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    c = tokens.shape[1]
+    positions = offset + jnp.arange(c)[None, :]
+    zero = jnp.int32(0)
+
+    def body(carry, inp):
+        xc, ck, cv = carry
+        lp, idx = inp
+        h = cfg.num_heads
+        res = xc
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, y, positions)
+        ck = jax.lax.dynamic_update_slice(
+            ck, k[None].astype(ck.dtype), (idx, slot, offset, zero, zero))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v[None].astype(cv.dtype), (idx, slot, offset, zero, zero))
+        klay = jax.lax.dynamic_index_in_dim(ck, idx, 0, keepdims=False)
+        kslot = jax.lax.dynamic_slice_in_dim(klay, slot, 1, axis=0)
+        vlay = jax.lax.dynamic_index_in_dim(cv, idx, 0, keepdims=False)
+        vslot = jax.lax.dynamic_slice_in_dim(vlay, slot, 1, axis=0)
+        ctx = L.attention(q, kslot.astype(k.dtype), vslot.astype(v.dtype),
+                          causal=True, q_offset=offset, kv_len=offset + c)
+        ctx = ctx[:, :, :h, :]
+        xc = res + ctx.reshape(1, c, -1) @ lp["wo"]
+        res = xc
+        y = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+        y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
+        return (res + y, ck, cv), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, ck, cv), _ = jax.lax.scan(body, (x, cache["k"], cache["v"]),
+                                  (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(cfg, params, x)
+    return logits, {"k": ck, "v": cv}
+
+
 def mrope_positions_decode(pos, b):
     p = IMG_GRID + pos - N_IMG
     return jnp.broadcast_to(jnp.stack([p, p, p])[None, None, :], (b, 1, 3))

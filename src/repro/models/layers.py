@@ -192,6 +192,24 @@ def quantize_kv(x):
     return q, s
 
 
+def _decode_valid_mask(kv_len, b: int, s: int, *, window=None,
+                       ring: bool = False):
+    """[B, S] valid-slot mask for a padded decode cache. `kv_len` is the
+    shared scalar length OR a per-row [B] vector (slot-paged batches where
+    every request sits at its own position)."""
+    kv = jnp.asarray(kv_len, jnp.int32)
+    if kv.ndim == 0:
+        kv = jnp.broadcast_to(kv[None], (b,))
+    kv = kv[:, None]                                     # [B, 1]
+    slots = jnp.arange(s)[None, :]                       # [1, S]
+    if ring:
+        return slots < jnp.minimum(kv, s)
+    valid = slots < kv
+    if window is not None:
+        valid = valid & (slots >= kv - window)
+    return valid
+
+
 def decode_attention_q8(q, kq, ks, vq, vs, kv_len, *, window=None,
                         ring: bool = False):
     """int8-KV decode attention. kq/vq: [B,S,G,dh] int8; ks/vs: [B,S,G].
@@ -207,14 +225,8 @@ def decode_attention_q8(q, kq, ks, vq, vs, kv_len, *, window=None,
     scores = _grouped_scores(q, kq.astype(q.dtype)) * scale  # [B,G,N,1,S]
     scores = scores.astype(jnp.float32) * \
         ks.transpose(0, 2, 1)[:, :, None, None, :]
-    slots = jnp.arange(s_len)
-    if ring:
-        valid = slots < jnp.minimum(kv_len, s_len)
-    else:
-        valid = slots < kv_len
-        if window is not None:
-            valid = valid & (slots >= kv_len - window)
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    valid = _decode_valid_mask(kv_len, b, s_len, window=window, ring=ring)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     p = p * vs.transpose(0, 2, 1)[:, :, None, None, :]
     ctx = _grouped_context(p.astype(q.dtype), vq.astype(q.dtype))
@@ -225,6 +237,7 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window=None,
                      ring: bool = False):
     """Single-position attention. q [B,1,H,dh]; caches [B,S,G,dh].
 
+    `kv_len`: scalar shared length or per-row [B] vector (paged slots).
     `ring`: cache is a ring buffer (SWA) — all filled slots are valid.
     """
     b, _, h, dh = q.shape
@@ -232,14 +245,8 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, window=None,
     scale = 1.0 / math.sqrt(dh)
     s_scores = _grouped_scores(q, k_cache) * scale       # [B,G,N,1,S]
     s_scores = s_scores.astype(jnp.float32)
-    slots = jnp.arange(s)
-    if ring:
-        valid = slots < jnp.minimum(kv_len, s)
-    else:
-        valid = slots < kv_len
-        if window is not None:
-            valid = valid & (slots >= kv_len - window)
-    s_scores = jnp.where(valid[None, None, None, None, :], s_scores, -1e30)
+    valid = _decode_valid_mask(kv_len, b, s, window=window, ring=ring)
+    s_scores = jnp.where(valid[:, None, None, None, :], s_scores, -1e30)
     p = jax.nn.softmax(s_scores, axis=-1)
     ctx = _grouped_context(p.astype(q.dtype), v_cache)   # [B,1,H,dh]
     return ctx

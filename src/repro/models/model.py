@@ -108,6 +108,35 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
         cfg, cast_params(params, compute_dtype(cfg)), cache, token, pos)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether the slot-paged decode path (continuous batching) covers this
+    config. Plain-text dense KV caches only: ring (SWA) caches and int8 KV
+    tie a slot's layout to a shared scalar position, and M-RoPE decode
+    bakes in a scalar offset — those families stay on the wave path."""
+    return (cfg.family == "dense" and cfg.modality == "text"
+            and not cfg.kv_quant and cfg.sliding_window is None)
+
+
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
+    """Per-slot-position decode step. token [B,1]; pos [B] (each slot's
+    write position / current kv_len); active [B] bool (inactive slots'
+    cache writes are dropped)."""
+    assert supports_paged(cfg), cfg.name
+    return dense.decode_step_paged(
+        cfg, cast_params(params, compute_dtype(cfg)), cache, token, pos,
+        active)
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
+                        offset):
+    """One [1, C] prefill chunk written into `slot` at `offset` of a paged
+    cache; returns (chunk logits [1, C, V], cache)."""
+    assert supports_paged(cfg), cfg.name
+    return dense.prefill_chunk_paged(
+        cfg, cast_params(params, compute_dtype(cfg)), cache, tokens, slot,
+        offset)
+
+
 def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
     return family(cfg).init_cache(cfg, b, seq_len, dtype)
 

@@ -1,17 +1,26 @@
-"""Generation engine: jitted prefill + decode with dynamic (wave) batching.
+"""Generation engines.
 
-Requests are grouped into fixed-size waves (padded to the wave's max prompt
-length); the wave decodes until every member finishes, then the next wave
-is formed — iteration-level batching without per-slot position plumbing.
-A wave whose decode step exceeds its latency budget is *hedged*: the
-scheduler re-dispatches the remaining requests (straggler mitigation; see
-scheduler.py).
+`ContinuousEngine` is the request-centric serving core: a slot-paged KV
+cache (fixed [slots, max_len] pages, per-slot position/kv_len vectors fed
+to decode_attention), `submit()`/`step()` lifecycle, admission of a queued
+prompt into any slot the step after its occupant hits EOS, and prefill of
+admitted prompts chunked into the running decode loop so a long prompt
+never stalls other slots for more than one chunk.
+
+`Engine` keeps the legacy wave surface: `generate()` is now a thin
+compatibility wrapper that routes greedy requests through a shared
+`ContinuousEngine` whenever the config supports the paged path (token
+output is identical — see tests/test_serving.py parity test), and falls
+back to fixed length-bucketed waves (`generate_wave`) for sampling and
+for families without paged KV (SWA ring caches, int8 KV, M-RoPE,
+recurrent state).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,18 +42,262 @@ class GenResult:
         return self.prefill_s
 
 
+@dataclass
+class EngineEvent:
+    """One request-visible state change from a `ContinuousEngine.step()`:
+    kind is "admitted" (slot assigned, prefill starting), "token" (one new
+    token id in `token`), or "done" (`result` carries the GenResult)."""
+    rid: int
+    kind: str
+    token: Optional[int] = None
+    result: Optional[GenResult] = None
+
+
+@dataclass
+class _Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    submitted_s: float
+    tokens: List[int] = field(default_factory=list)
+    filled: int = 0                  # prefill progress (tokens in the page)
+    slot: int = -1
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class ContinuousEngine:
+    """Continuous (slot-level) batching over a paged KV cache.
+
+    The cache is one fixed [L, slots, max_len, G, dh] allocation; each
+    slot is an independent page with its own `pos` (kv length). Decode
+    steps run all slots at once through `model.decode_step_paged`;
+    admission prefill runs one `prefill_chunk` slice of one prompt per
+    slot per step through `model.prefill_chunk_paged`, interleaved with
+    decode, so the running requests keep streaming while a new prompt
+    fills its page. A slot freed by EOS (or max_new / page exhaustion)
+    admits the next queued request on the following step.
+
+    Greedy decoding only: continuous batching interleaves requests at
+    step granularity, so a shared sampling key would make output depend
+    on co-residents; the wave path keeps the sampling surface.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, eos_id: int = 2,
+                 prefill_chunk: int = 32):
+        if not model.supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name}: family/config without slot-paged KV support "
+                "(use Engine's wave path)")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.prefill_chunk = prefill_chunk
+        # pages are allocated rounded UP to a whole number of prefill
+        # chunks: dynamic_update_slice CLAMPS an out-of-bounds start, so a
+        # final chunk crossing the page end would silently shift backwards
+        # over earlier prompt positions; with the padded allocation every
+        # chunk write fits, and the tail positions (>= max_len) are never
+        # attended because kv_len masking tops out at max_len
+        self._page_len = -(-max_len // prefill_chunk) * prefill_chunk
+        self.cache = model.init_cache(cfg, slots, self._page_len,
+                                      dtype=model.compute_dtype(cfg))
+        self._decode = jax.jit(
+            lambda p, c, t, pos, act: model.decode_step_paged(
+                cfg, p, c, t, pos, act),
+            donate_argnums=(1,))
+        self._chunk = jax.jit(
+            lambda p, c, t, slot, off: model.prefill_chunk_paged(
+                cfg, p, c, t, slot, off),
+            donate_argnums=(1,))
+        # host-side slot state
+        self.pos = np.zeros(slots, np.int32)
+        self.last_tok = np.zeros(slots, np.int32)
+        self.active = np.zeros(slots, bool)      # decoding (prefill done)
+        self._occupant: List[Optional[_Request]] = [None] * slots
+        self.queue: Deque[_Request] = deque()
+        self._inflight: Dict[int, _Request] = {}
+        self._next_rid = 0
+        # utilisation counters (decode steps only)
+        self.steps = 0
+        self.active_slot_steps = 0
+
+    def clone(self, *, slots: Optional[int] = None) -> "ContinuousEngine":
+        """An independent replica: same params/config, its own paged cache
+        and slot state (the SlotScheduler's unit of failover)."""
+        return ContinuousEngine(
+            self.cfg, self.params, slots=slots or self.slots,
+            max_len=self.max_len, eos_id=self.eos_id,
+            prefill_chunk=self.prefill_chunk)
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32,
+               rid: Optional[int] = None) -> int:
+        """Queue one request; returns its rid. The prompt is truncated to
+        the last max_len - max_new tokens so the page can always hold the
+        whole generation."""
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        p = np.asarray(prompt, np.int32).reshape(-1)
+        keep = max(self.max_len - max_new, 1)
+        req = _Request(rid, p[-keep:], max_new, time.perf_counter())
+        self.queue.append(req)
+        self._inflight[rid] = req
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._inflight)
+
+    def free_slots(self) -> int:
+        return sum(1 for r in self._occupant if r is None)
+
+    def available_slots(self) -> int:
+        """Admission capacity: free slots minus already-queued requests
+        (what a scheduler should look at, not raw free_slots)."""
+        return self.free_slots() - len(self.queue)
+
+    # ------------------------------------------------------------- stepping
+
+    def _finish(self, req: _Request, events: List[EngineEvent]) -> None:
+        s = req.slot
+        self.active[s] = False
+        self._occupant[s] = None
+        self._inflight.pop(req.rid, None)
+        events.append(EngineEvent(req.rid, "done", result=GenResult(
+            req.tokens, len(req.prompt), req.prefill_s, req.decode_s)))
+
+    def _emit_token(self, req: _Request, tok: int,
+                    events: List[EngineEvent]) -> None:
+        req.tokens.append(tok)
+        events.append(EngineEvent(req.rid, "token", token=tok))
+        if tok == self.eos_id or len(req.tokens) >= req.max_new:
+            self._finish(req, events)
+
+    def _admit(self, events: List[EngineEvent]) -> None:
+        for s in range(self.slots):
+            if self._occupant[s] is None and self.queue:
+                req = self.queue.popleft()
+                req.slot, req.filled = s, 0
+                self._occupant[s] = req
+                self.active[s] = False
+                events.append(EngineEvent(req.rid, "admitted"))
+
+    def _prefill_step(self, events: List[EngineEvent]) -> None:
+        """Advance every admitting slot by one prompt chunk."""
+        c = self.prefill_chunk
+        for s in range(self.slots):
+            req = self._occupant[s]
+            if req is None or self.active[s]:
+                continue
+            t0 = time.perf_counter()
+            chunk = req.prompt[req.filled:req.filled + c]
+            real = len(chunk)
+            if real < c:
+                chunk = np.concatenate([chunk, np.zeros(c - real, np.int32)])
+            logits, self.cache = self._chunk(
+                self.params, self.cache, jnp.asarray(chunk[None]),
+                jnp.int32(s), jnp.int32(req.filled))
+            req.filled += real
+            if req.filled >= len(req.prompt):
+                row = np.asarray(logits)[0, real - 1]
+                tok = int(np.argmax(row))
+                self.pos[s] = len(req.prompt)
+                self.last_tok[s] = tok
+                self.active[s] = True
+                req.prefill_s += time.perf_counter() - t0
+                self._emit_token(req, tok, events)
+            else:
+                req.prefill_s += time.perf_counter() - t0
+
+    def _decode_step(self, events: List[EngineEvent]) -> None:
+        if not self.active.any():
+            return
+        t0 = time.perf_counter()
+        posv = np.minimum(self.pos, self.max_len - 1)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_tok[:, None]),
+            jnp.asarray(posv), jnp.asarray(self.active))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        dt = time.perf_counter() - t0
+        self.steps += 1
+        self.active_slot_steps += int(self.active.sum())
+        for s in range(self.slots):
+            if not self.active[s]:
+                continue
+            req = self._occupant[s]
+            req.decode_s += dt
+            self.pos[s] += 1
+            tok = int(nxt[s])
+            self.last_tok[s] = tok
+            self._emit_token(req, tok, events)
+
+    def step(self) -> List[EngineEvent]:
+        """One engine step: admit queued prompts into freed slots, advance
+        each admitting slot by one prefill chunk, then run one decode step
+        over all active slots. Returns the request events it produced."""
+        events: List[EngineEvent] = []
+        self._admit(events)
+        self._prefill_step(events)
+        self._decode_step(events)
+        return events
+
+    def utilisation(self) -> float:
+        """Mean fraction of slots doing useful decode work per step."""
+        return self.active_slot_steps / max(self.steps * self.slots, 1)
+
+    # ----------------------------------------------------------- draining
+
+    def warmup(self) -> None:
+        """Compile the chunk-prefill and paged-decode executables off the
+        measured path (shapes are fixed, so one tiny request covers it)."""
+        self.generate([np.arange(2, dtype=np.int32)], max_new=2)
+        self.steps = self.active_slot_steps = 0
+
+    def generate(self, prompts: List[np.ndarray],
+                 max_new: int = 32) -> List[GenResult]:
+        """Batch convenience: submit everything, step until drained."""
+        assert not self._inflight, "generate() on a busy engine"
+        rids = [self.submit(p, max_new) for p in prompts]
+        results: Dict[int, GenResult] = {}
+        while self._inflight:
+            for ev in self.step():
+                if ev.kind == "done":
+                    results[ev.rid] = ev.result
+        return [results[r] for r in rids]
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
-                 eos_id: int = 2, prefill_chunk: Optional[int] = None):
+                 eos_id: int = 2, prefill_chunk: Optional[int] = None,
+                 slots: int = 4):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.eos_id = eos_id
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk or 32
         self._prefill = jax.jit(
             lambda p, b: model.prefill(cfg, p, b))
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(cfg, p, c, t, pos),
             donate_argnums=(1,))
+        self._cont: Dict[int, ContinuousEngine] = {}
+
+    def continuous(self, slots: Optional[int] = None) -> ContinuousEngine:
+        """The shared slot-paged engine over the same params/KV budget
+        (one per slot count — the decode jit keys on it)."""
+        n = slots or self.slots
+        if n not in self._cont:
+            self._cont[n] = ContinuousEngine(
+                self.cfg, self.params, slots=n, max_len=self.max_len,
+                eos_id=self.eos_id, prefill_chunk=self.prefill_chunk)
+        return self._cont[n]
 
     def _grow_cache(self, cache, b: int):
         """Caches come back sized to the prompt; decode needs max_len."""
@@ -63,9 +316,19 @@ class Engine:
         return cache  # state caches (mamba2/rglru) are fixed-size
 
     def generate(self, prompts: List[np.ndarray], max_new: int = 32,
-                 greedy: bool = True, seed: int = 0) -> List[GenResult]:
-        """Length-buckets prompts, runs each bucket as one wave (equal
-        lengths keep causal semantics exact without pad masking)."""
+                 greedy: bool = True, seed: int = 0,
+                 continuous: Optional[bool] = None) -> List[GenResult]:
+        """Compatibility wrapper. `continuous=None` auto-routes greedy
+        requests through the slot-paged ContinuousEngine when the config
+        supports it (token-identical to the wave path); `False` forces the
+        legacy length-bucketed waves (equal lengths keep causal semantics
+        exact without pad masking), which sampling always uses."""
+        if continuous is None:
+            continuous = greedy and model.supports_paged(self.cfg)
+        if continuous:
+            if not greedy:
+                raise ValueError("continuous batching is greedy-only")
+            return self.continuous().generate(prompts, max_new=max_new)
         buckets: dict[int, List[int]] = {}
         for i, p in enumerate(prompts):
             buckets.setdefault(len(p), []).append(i)

@@ -12,8 +12,9 @@ so Table-5-style comparisons run offline without a phone.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -185,19 +186,50 @@ class RAGBase:
         """Batched serving entry point: one embed + one (device-)batched
         retrieval for the whole query set, then per-query post-processing.
         Pipelines without a `_finish` hook fall back to per-query answers.
-        `generate=True` decodes every final prompt in one Engine wave."""
+        `generate=True` routes through a RagSession over the continuous
+        engine: retrieval/SCR for the next chunk of queries overlaps
+        decode of the previous ones (DESIGN.md §9)."""
+        queries = list(queries)
+        if generate and queries:
+            return self._answer_batch_generate(queries, max_new)
         if self._finish is None:
-            out = [self.answer(q) for q in queries]
-        else:
-            t0 = time.perf_counter()
-            qvs = np.asarray(self.embed(list(queries)), np.float32)
-            ids_b = self._retrieve_batch(qvs, self.top_k)
-            t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
-            out = [self._finish(q, ids, t_ret, qv=qv)
-                   for q, ids, qv in zip(queries, ids_b, qvs)]
-        if generate and out:
-            self._attach_generation(out, max_new=max_new)
-        return out
+            return [self.answer(q) for q in queries]
+        t0 = time.perf_counter()
+        qvs = np.asarray(self.embed(queries), np.float32)
+        ids_b = self._retrieve_batch(qvs, self.top_k)
+        t_ret = (time.perf_counter() - t0) / max(len(queries), 1)
+        return [self._finish(q, ids, t_ret, qv=qv)
+                for q, ids, qv in zip(queries, ids_b, qvs)]
+
+    # -------------------------------------------- request-centric serving
+
+    def session(self, *, max_new: int = 16, slots: int = 4,
+                retrieve_chunk: int = 4):
+        """A RagSession over this pipeline: submit/step/stream with
+        continuous-batching decode (raises ValueError when `gen_arch`
+        has no slot-paged KV path)."""
+        from repro.serving.session import RagSession
+        return RagSession(self, max_new=max_new, slots=slots,
+                          retrieve_chunk=retrieve_chunk)
+
+    def stream(self, queries: Sequence[str] = (), *, max_new: int = 16,
+               slots: int = 4, retrieve_chunk: int = 4):
+        """Event generator (submitted/retrieved/condensed/token/done) for
+        a batch of queries through a fresh RagSession."""
+        return self.session(max_new=max_new, slots=slots,
+                            retrieve_chunk=retrieve_chunk).stream(queries)
+
+    def _answer_batch_generate(self, queries: List[str],
+                               max_new: int) -> List[RAGAnswer]:
+        """generate=True body: a RagSession pipelines retrieval/SCR chunks
+        into the continuous decode loop. Falls back to condense-everything
+        + one legacy Engine wave for archs without paged KV support."""
+        try:
+            sess = self.session(max_new=max_new)
+        except ValueError:
+            out = self.answer_batch(queries, generate=False)
+            return self._attach_generation(out, max_new=max_new)
+        return sess.run(queries)
 
 
 class NaiveRAG(RAGBase):
@@ -239,24 +271,40 @@ class AdvancedRAG(RAGBase):
 
 
 class EdgeRAG(RAGBase):
-    """IVF-DISK retrieval + embedding cache (the paper's EdgeRAG baseline)."""
+    """IVF-DISK retrieval + embedding cache (the paper's EdgeRAG baseline).
+
+    The query-embedding cache is a bounded LRU (`qcache_cap` entries) so a
+    long-running query stream cannot grow it without limit; hit/miss
+    counters feed the serving benchmarks."""
     name = "EdgeRAG"
+    qcache_cap = 256
 
     def _build_index(self):
         idx = IVFDisk(self.doc_vecs.shape[1],
                       n_clusters=max(4, len(self.docs) // 64))
         idx.build(self.doc_vecs)
-        self._qcache: Dict[str, np.ndarray] = {}
+        self._qcache: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self.qcache_hits = 0
+        self.qcache_misses = 0
         return idx
+
+    def _embed_query_cached(self, query: str) -> np.ndarray:
+        qv = self._qcache.get(query)
+        if qv is not None:
+            self._qcache.move_to_end(query)     # LRU promotion
+            self.qcache_hits += 1
+            return qv
+        qv = np.asarray(self.embed([query]))[0]
+        self.qcache_misses += 1
+        self._qcache[query] = qv
+        while len(self._qcache) > self.qcache_cap:
+            self._qcache.popitem(last=False)    # evict LRU head
+        return qv
 
     def answer(self, query: str, *, generate: bool = False,
                max_new: int = 16) -> RAGAnswer:
         t0 = time.perf_counter()
-        if query in self._qcache:
-            qv = self._qcache[query]
-        else:
-            qv = np.asarray(self.embed([query]))[0]
-            self._qcache[query] = qv
+        qv = self._embed_query_cached(query)
         ids = self._retrieve(qv, self.top_k)
         t_ret = time.perf_counter() - t0
         prompt = self._make_prompt(query, [self.docs[i] for i in ids], ids)
@@ -319,14 +367,19 @@ class MobileRAG(RAGBase):
                      max_new: int = 16) -> List[RAGAnswer]:
         """Fully batched MobileRAG: ONE query embed feeds both the fused
         EcoVector retrieval and the fused SCR select; everything after the
-        two device calls is host-side string assembly (plus, with
-        `generate=True`, one Engine wave over the final prompts)."""
+        two device calls is host-side string assembly. `generate=True`
+        routes through the RagSession (whose retrieval chunks re-enter
+        this fused path with generate=False) so SCR for the next chunk
+        overlaps continuous decode of the previous one."""
+        queries = list(queries)
         if self.window_index is None or not queries:
             return super().answer_batch(queries, generate=generate,
                                         max_new=max_new)
+        if generate:
+            return self._answer_batch_generate(queries, max_new)
         self._sync_window_index()
         t0 = time.perf_counter()
-        qvs = np.asarray(self.embed(list(queries)), np.float32)
+        qvs = np.asarray(self.embed(queries), np.float32)
         ids_b = self._retrieve_batch(qvs, self.top_k)
         t_ret = (time.perf_counter() - t0) / len(queries)
         t1 = time.perf_counter()
@@ -339,8 +392,6 @@ class MobileRAG(RAGBase):
             out.append(self._finalize(q, prompt,
                                       [ids[i] for i in res.order],
                                       t_ret, t_post, scr=res))
-        if generate and out:
-            self._attach_generation(out, max_new=max_new)
         return out
 
 
@@ -361,10 +412,12 @@ def answer_in_context(example, ans: RAGAnswer) -> bool:
 
 def accuracy(pipe: RAGBase, examples, max_q: Optional[int] = None) -> float:
     """Answer-in-final-context accuracy: the retrieval-quality proxy for
-    Table 5 accuracy (no on-device sLM here)."""
-    n = ok = 0
-    for ex in examples[:max_q]:
-        if answer_in_context(ex, pipe.answer(ex.question)):
-            ok += 1
-        n += 1
-    return ok / max(n, 1)
+    Table 5 accuracy (no on-device sLM here). Runs through `answer_batch`
+    so Table-5 accuracy uses the fused batched retrieval/SCR path (one
+    embed + one device retrieval + one SCR select for the whole set)."""
+    exs = list(examples[:max_q])
+    if not exs:
+        return 0.0
+    answers = pipe.answer_batch([ex.question for ex in exs])
+    ok = sum(bool(answer_in_context(ex, a)) for ex, a in zip(exs, answers))
+    return ok / len(exs)

@@ -1,17 +1,24 @@
-"""Request scheduler: dynamic length-bucketed batching, latency budgets,
-hedged re-dispatch (straggler mitigation), replica failover.
+"""Request schedulers.
 
-Model: N replicas (engine callables). Requests are queued; the scheduler
-forms waves per replica. If a replica misses its p99 deadline, the wave is
-re-dispatched to a healthy replica (the first response wins); replicas
-that miss `max_strikes` deadlines are marked unhealthy and drained — the
+`SlotScheduler` is the request-centric path: N `ContinuousEngine`
+replicas, slot admission instead of wave formation (a queued request goes
+to the replica with the most free slots; the engines themselves admit on
+EOS), and hedging on per-slot stall — a request that stops producing
+tokens for `stall_s` while its replica is being stepped is re-submitted to
+another replica, first completion wins. A replica whose `step()` raises is
+drained: its in-flight requests re-queue and it is marked unhealthy — the
 serve-side analogue of the training-side RestartManager.
+
+`Scheduler` keeps the legacy wave surface (length-bucketed waves over
+engine callables with whole-wave deadline hedging) for generators without
+a slot-paged engine.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -38,6 +45,134 @@ class ReplicaState:
     healthy: bool = True
     strikes: int = 0
     served: int = 0
+
+
+@dataclass
+class _SlotReq:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    submitted_s: float
+    # engine rid per replica currently decoding this request
+    placements: Dict[int, int] = field(default_factory=dict)
+    last_progress_s: float = 0.0
+    hedged: bool = False
+
+
+class SlotScheduler:
+    """Slot-admission scheduling over ContinuousEngine replicas."""
+
+    def __init__(self, engines: List, *, stall_s: float = 30.0,
+                 max_strikes: int = 2):
+        """engines: ContinuousEngine-likes (submit/step/available_slots).
+        `stall_s`: per-slot stall budget — a placed request with no new
+        token for this long (while its replica is stepped) is hedged to
+        another replica."""
+        self.engines = engines
+        self.state = [ReplicaState() for _ in engines]
+        self.stall_s = stall_s
+        self.max_strikes = max_strikes
+        self.queue: Deque[_SlotReq] = deque()
+        self._live: Dict[int, _SlotReq] = {}
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = _SlotReq(rid, np.asarray(prompt, np.int32), max_new,
+                       time.perf_counter())
+        self.queue.append(req)
+        self._live[rid] = req
+        return rid
+
+    def _healthy(self) -> List[int]:
+        return [i for i, s in enumerate(self.state) if s.healthy]
+
+    def _strike(self, ridx: int) -> None:
+        self.state[ridx].strikes += 1
+        if self.state[ridx].strikes >= self.max_strikes:
+            self._drain(ridx)
+
+    def _drain(self, ridx: int) -> None:
+        """Mark a replica unhealthy and re-queue its in-flight requests."""
+        self.state[ridx].healthy = False
+        for req in list(self._live.values()):
+            if req.placements.pop(ridx, None) is not None \
+                    and not req.placements:
+                self.queue.appendleft(req)
+
+    def _place(self, req: _SlotReq, ridx: int) -> None:
+        erid = self.engines[ridx].submit(req.prompt, req.max_new)
+        req.placements[ridx] = erid
+        req.last_progress_s = time.perf_counter()
+
+    def _admit(self) -> None:
+        """Queued requests go to the healthy replica with most free slots
+        (admission happens slot-by-slot as engines free them on EOS)."""
+        while self.queue:
+            healthy = [i for i in self._healthy()
+                       if self.engines[i].available_slots() > 0]
+            if not healthy:
+                if not self._healthy():
+                    raise RuntimeError("all replicas unhealthy")
+                return
+            ridx = max(healthy,
+                       key=lambda i: self.engines[i].available_slots())
+            self._place(self.queue.popleft(), ridx)
+
+    def _hedge_stalled(self) -> None:
+        now = time.perf_counter()
+        for req in self._live.values():
+            if not req.placements or req.hedged:
+                continue
+            if now - req.last_progress_s <= self.stall_s:
+                continue
+            targets = [i for i in self._healthy()
+                       if i not in req.placements]
+            if targets:
+                stalled = list(req.placements)
+                ridx = max(targets,
+                           key=lambda i: self.engines[i].available_slots())
+                req.hedged = True
+                self._place(req, ridx)
+                for s in stalled:
+                    self._strike(s)
+
+    def run(self) -> List[Completion]:
+        """Drain the queue; returns completions in finish order."""
+        done: List[Completion] = []
+        while self._live:
+            self._admit()
+            self._hedge_stalled()
+            progressed = False
+            for ridx in self._healthy():
+                eng = self.engines[ridx]
+                try:
+                    events = eng.step()
+                except Exception:
+                    self._strike(ridx)
+                    self._drain(ridx)
+                    continue
+                for ev in events:
+                    req = next((r for r in self._live.values()
+                                if r.placements.get(ridx) == ev.rid), None)
+                    if req is None:
+                        continue
+                    progressed = True
+                    req.last_progress_s = time.perf_counter()
+                    if ev.kind == "done":
+                        # first completion wins; other placements (hedges)
+                        # keep decoding and their events are dropped above
+                        self._live.pop(req.rid, None)
+                        self.state[ridx].served += 1
+                        done.append(Completion(
+                            req.rid, list(ev.result.tokens), ridx,
+                            time.perf_counter() - req.submitted_s,
+                            req.hedged))
+            if not progressed and not self.queue and self._live \
+                    and not any(r.placements for r in self._live.values()):
+                raise RuntimeError("requests stuck with no placement")
+        return done
 
 
 class Scheduler:

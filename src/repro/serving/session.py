@@ -1,0 +1,157 @@
+"""Request-centric RAG serving sessions.
+
+A `RagSession` runs the full MobileRAG request lifecycle as an event
+stream over a `ContinuousEngine`:
+
+    submitted -> retrieved -> condensed -> token ... token -> done
+
+`submit(query)` queues a request and returns its id; every `step()`
+(1) retrieves + SCR-condenses up to `retrieve_chunk` queued queries in one
+fused batch through the pipeline's `answer_batch`, hands the condensed
+prompts to the engine, and (2) advances the engine one continuous-batching
+step — so retrieval/SCR for query N+1 runs while query N's slots are still
+decoding, instead of the whole batch blocking on the slowest member.
+`stream(queries)` wraps submit+step into a generator of `RagEvent`s;
+`run(queries)` drains to completed `RAGAnswer`s in submit order.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Iterable, Iterator, List, Optional
+
+from collections import deque
+
+from repro.serving.engine import ContinuousEngine
+
+# request lifecycle states, in order
+STATES = ("submitted", "retrieved", "condensed", "decoding", "done")
+
+
+@dataclass
+class RagRequest:
+    req_id: int
+    query: str
+    max_new: int
+    state: str = "submitted"
+    submitted_s: float = field(default_factory=time.perf_counter)
+    done_s: Optional[float] = None
+    answer: Optional[object] = None       # RAGAnswer once condensed
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.done_s is None else self.done_s - self.submitted_s
+
+
+@dataclass
+class RagEvent:
+    """One request-visible state change. kind: "submitted" | "retrieved"
+    (payload: doc id list) | "condensed" (payload: prompt token count) |
+    "token" (payload: token id) | "done" (payload: completed RAGAnswer)."""
+    req_id: int
+    kind: str
+    payload: object = None
+    t: float = field(default_factory=time.perf_counter)
+
+
+class RagSession:
+    """Streaming session over one RAG pipeline + one ContinuousEngine."""
+
+    def __init__(self, pipe, *, max_new: int = 16, slots: int = 4,
+                 retrieve_chunk: int = 4):
+        self.pipe = pipe
+        self.max_new = max_new
+        self.retrieve_chunk = retrieve_chunk
+        slm = pipe._ensure_slm()
+        self.engine: ContinuousEngine = slm.continuous(slots)  # may raise
+        self._slm = slm
+        self.requests: Dict[int, RagRequest] = {}
+        self._queued: Deque[int] = deque()
+        self._decoding: Dict[int, RagRequest] = {}   # engine rid -> request
+        self._next_id = 0
+        if not self.engine.pending:
+            # compile the chunk-prefill/decode executables off the measured
+            # path so the first request's ttft reports execution, not jit
+            self.engine.warmup()
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, query: str, max_new: Optional[int] = None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        req = RagRequest(rid, query, max_new or self.max_new)
+        self.requests[rid] = req
+        self._queued.append(rid)
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self._queued) + len(self._decoding)
+
+    # ----------------------------------------------------------- stepping
+
+    def _retrieve_step(self, events: List[RagEvent]) -> None:
+        """Retrieve + condense the next chunk of queued queries (one fused
+        answer_batch call) and admit their prompts to the engine."""
+        take = [self._queued.popleft()
+                for _ in range(min(self.retrieve_chunk, len(self._queued)))]
+        if not take:
+            return
+        reqs = [self.requests[r] for r in take]
+        answers = self.pipe.answer_batch([r.query for r in reqs])
+        for req, ans in zip(reqs, answers):
+            req.answer = ans
+            req.state = "condensed"
+            events.append(RagEvent(req.req_id, "retrieved",
+                                   list(ans.doc_ids)))
+            events.append(RagEvent(req.req_id, "condensed",
+                                   ans.prompt_tokens))
+            prompt = self._slm.encode_prompt(ans.prompt, bucket=False)
+            erid = self.engine.submit(prompt, req.max_new)
+            self._decoding[erid] = req
+            req.state = "decoding"
+
+    def _engine_step(self, events: List[RagEvent]) -> None:
+        tok = self._slm.tokenizer
+        for ev in self.engine.step():
+            req = self._decoding.get(ev.rid)
+            if req is None:
+                continue
+            if ev.kind == "token":
+                events.append(RagEvent(req.req_id, "token", ev.token))
+            elif ev.kind == "done":
+                del self._decoding[ev.rid]
+                ans = req.answer
+                ans.gen_tokens = list(ev.result.tokens)
+                ans.generated = tok.decode(
+                    [t for t in ev.result.tokens if t != tok.eos_id])
+                ans.ttft_measured_s = ev.result.prefill_s
+                req.state = "done"
+                req.done_s = time.perf_counter()
+                events.append(RagEvent(req.req_id, "done", ans))
+
+    def step(self) -> List[RagEvent]:
+        """Advance the session: one retrieval/condense chunk + one engine
+        step. Returns the events produced (possibly empty when idle)."""
+        events: List[RagEvent] = []
+        self._retrieve_step(events)
+        self._engine_step(events)
+        return events
+
+    # ----------------------------------------------------------- draining
+
+    def stream(self, queries: Iterable[str] = ()) -> Iterator[RagEvent]:
+        """Submit `queries`, then yield events until the session drains.
+        More queries may be submitted concurrently from the consuming
+        loop — the generator keeps stepping while anything is pending."""
+        for q in queries:
+            yield RagEvent(self.submit(q), "submitted")
+        while self.pending:
+            yield from self.step()
+
+    def run(self, queries: Iterable[str]) -> List[object]:
+        """Drain `queries` to completed RAGAnswers, in submit order."""
+        rids = [self.submit(q) for q in queries]
+        while self.pending:
+            self.step()
+        return [self.requests[r].answer for r in rids]

@@ -64,15 +64,31 @@ class ReducedSLM:
             self._tok = HashTokenizer(cfg.vocab_size)
         return self._engine, self._tok
 
-    def encode_prompt(self, prompt: str) -> np.ndarray:
+    def encode_prompt(self, prompt: str, *, bucket: bool = True) -> np.ndarray:
         """Bucketed ids: left-truncate to max_prompt, left-pad to the
-        next pad_multiple so prompt length maps to few prefill shapes."""
+        next pad_multiple so prompt length maps to few prefill shapes.
+        `bucket=False` skips the padding: the continuous engine prefills
+        in fixed-size chunks, so ragged lengths cost no extra compiles and
+        a shorter (SCR-condensed) prompt pays for exactly its own
+        tokens."""
         _, tok = self._ensure()
         ids = tok.encode(prompt)[-self.max_prompt:]
+        if not bucket:
+            return np.asarray(ids or [tok.pad_id], np.int32)
         m = self.pad_multiple
-        bucket = min(self.max_prompt, -(-max(len(ids), 1) // m) * m)
-        pad = bucket - len(ids)
+        bucket_len = min(self.max_prompt, -(-max(len(ids), 1) // m) * m)
+        pad = bucket_len - len(ids)
         return np.asarray([tok.pad_id] * pad + ids, np.int32)
+
+    def continuous(self, slots: int = 4):
+        """The shared slot-paged ContinuousEngine over this sLM's params
+        (the RagSession decode backend)."""
+        eng, _ = self._ensure()
+        return eng.continuous(slots)
+
+    @property
+    def tokenizer(self) -> HashTokenizer:
+        return self._ensure()[1]
 
     def warmup(self) -> None:
         """Compile the prefill/decode executables off the measured path."""

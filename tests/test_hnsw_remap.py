@@ -67,6 +67,44 @@ def test_reinsert_same_external_id():
     assert int(ids[0]) == 5
 
 
+def test_recycled_slot_reuse_under_heavy_churn():
+    """ROADMAP debt from PR 1/2: interleaved delete/re-add cycles must
+    keep recycling freed slots (internal slot count bounded by the peak
+    live count, backing array never regrows) and search must stay correct
+    on the survivors and the re-added points."""
+    n, d = 48, 12
+    g, X = build(n, d=d)
+    peak_live = len(g)
+    cap0 = g.vectors.shape[0]
+    rng = np.random.default_rng(3)
+    extra = rng.normal(size=(200, d)).astype(np.float32)
+    next_id = 10**9
+    live = {i: X[i] for i in range(n)}
+    for cycle in range(8):
+        # delete a third of the live set...
+        doomed = rng.choice(sorted(live), size=len(live) // 3, replace=False)
+        for vid in doomed:
+            g.delete(int(vid))
+            live.pop(int(vid))
+        # ...and re-add the same number under fresh (huge) external ids
+        for _ in range(len(doomed)):
+            vec = extra[(next_id - 10**9) % len(extra)]
+            g.insert(next_id, vec)
+            live[next_id] = vec
+            next_id += 1
+        assert len(g) == peak_live == len(live)
+        # slot count stays <= peak live ids: churn reuses freed slots
+        assert len(g._int2ext) <= peak_live
+        assert g.vectors.shape[0] == cap0
+    # search correctness after churn: every probe's exact point comes back
+    hits = 0
+    probes = rng.choice(sorted(live), size=12, replace=False)
+    for vid in probes:
+        ids, _ = g.search(live[int(vid)], k=1, ef_search=96)
+        hits += int(ids[0]) == int(vid)
+    assert hits >= 10  # graph quality survives heavy delete/re-add churn
+
+
 def test_reconstruct_by_external_id():
     base = 77_000_000
     g, X = build(10, ids=[base + i for i in range(10)])

@@ -1,4 +1,5 @@
-"""Serving: engine generation, scheduler hedging/failover, RAG pipelines."""
+"""Serving: engine generation (wave + continuous), scheduler hedging /
+failover / slot admission, RAG pipelines and streaming sessions."""
 import numpy as np
 import pytest
 import jax
@@ -7,9 +8,10 @@ from repro.configs import get_reduced
 from repro.data.synthetic import make_qa_corpus
 from repro.models import model
 from repro.serving.embedder import HashEmbedder
-from repro.serving.engine import Engine
-from repro.serving.rag import PIPELINES, MobileRAG, NaiveRAG, accuracy
-from repro.serving.scheduler import Scheduler
+from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.rag import (PIPELINES, EdgeRAG, MobileRAG, NaiveRAG,
+                               accuracy)
+from repro.serving.scheduler import Scheduler, SlotScheduler
 
 
 @pytest.fixture(scope="module")
@@ -38,6 +40,66 @@ def test_engine_buckets_unequal_lengths(engine):
     # determinism within equal inputs
     out2 = engine.generate(prompts, max_new=3)
     assert out[0].tokens == out2[0].tokens
+
+
+def test_continuous_matches_wave_greedy(engine):
+    """Acceptance: under mixed-length concurrent requests (more requests
+    than slots, so admission churn happens mid-stream) the slot-paged
+    continuous engine produces token-identical greedy outputs to the
+    legacy wave path, for every request."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(4, 500, n).astype(np.int32)
+               for n in (16, 24, 16, 33, 40, 9, 24)]
+    wave = engine.generate(prompts, max_new=8, continuous=False)
+    cont = engine.generate(prompts, max_new=8, continuous=True)
+    for i, (w, c) in enumerate(zip(wave, cont)):
+        assert w.tokens == c.tokens, f"request {i} diverged"
+        assert c.prefill_s > 0
+    ce = engine.continuous()
+    assert ce.steps > 0 and 0 < ce.utilisation() <= 1.0
+
+
+def test_continuous_parity_misaligned_page(engine):
+    """max_len NOT a multiple of prefill_chunk: the final prompt chunk
+    would cross the page end, and dynamic_update_slice CLAMPS rather than
+    drops — the page must be allocated rounded up to whole chunks or the
+    last chunk silently shifts back over earlier positions."""
+    eng = Engine(engine.cfg, engine.params, max_len=100, slots=2)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(4, 500, n).astype(np.int32) for n in (97, 65)]
+    wave = eng.generate(prompts, max_new=3, continuous=False)
+    cont = eng.generate(prompts, max_new=3, continuous=True)
+    for w, c in zip(wave, cont):
+        assert w.tokens == c.tokens
+
+
+def test_continuous_engine_step_lifecycle(engine):
+    """submit/step surface: admitted -> token(s) -> done, slot freed on
+    EOS/max_new admits the next queued prompt on a later step."""
+    ce = ContinuousEngine(engine.cfg, engine.params, slots=2, max_len=96)
+    rng = np.random.default_rng(3)
+    rids = [ce.submit(rng.integers(4, 500, n).astype(np.int32), max_new=4)
+            for n in (12, 20, 8)]             # 3 requests, 2 slots
+    seen = {r: [] for r in rids}
+    results = {}
+    while ce.pending:
+        for ev in ce.step():
+            seen[ev.rid].append(ev.kind)
+            if ev.kind == "done":
+                results[ev.rid] = ev.result
+    for r in rids:
+        assert seen[r][0] == "admitted"
+        assert seen[r][-1] == "done"
+        assert 1 <= len(results[r].tokens) <= 4
+    # the third request can only have been admitted after a slot freed
+    assert ce.free_slots() == 2
+
+
+def test_continuous_rejects_unpaged_family():
+    cfg = get_reduced("mamba2_780m")
+    with pytest.raises(ValueError):
+        ContinuousEngine(cfg, None, slots=2, max_len=32)
+    assert not model.supports_paged(cfg)
 
 
 def test_scheduler_hedges_on_failure():
@@ -74,6 +136,35 @@ def test_scheduler_buckets_by_length():
     s.run()
     for wave in seen:
         assert len(set(wave)) == 1  # equal lengths within a wave
+
+
+def test_slot_scheduler_spreads_and_fails_over(engine):
+    e1 = ContinuousEngine(engine.cfg, engine.params, slots=2, max_len=96)
+    e2 = ContinuousEngine(engine.cfg, engine.params, slots=2, max_len=96)
+    s = SlotScheduler([e1, e2])
+    rng = np.random.default_rng(0)
+    for n in (12, 20, 16, 8, 24, 12):
+        s.submit(rng.integers(4, 500, n).astype(np.int32), max_new=4)
+    done = s.run()
+    assert len(done) == 6
+    assert {c.replica for c in done} == {0, 1}   # slot admission spreads
+
+    class Broken:
+        def submit(self, p, m):
+            return 0
+
+        def available_slots(self):
+            return 2
+
+        def step(self):
+            raise RuntimeError("replica down")
+
+    s2 = SlotScheduler([Broken(), e1], max_strikes=1)
+    for n in (10, 14):
+        s2.submit(rng.integers(4, 500, n).astype(np.int32), max_new=3)
+    done2 = s2.run()
+    assert len(done2) == 2 and all(c.replica == 1 for c in done2)
+    assert not s2.state[0].healthy               # broken replica drained
 
 
 @pytest.fixture(scope="module")
@@ -120,6 +211,63 @@ def test_mobilerag_generate_end_to_end(corpus):
         [e.question for e in corpus.examples[:2]], generate=True)
     assert all(x.gen_tokens for x in batch)
     assert all(x.ttft_measured_s > 0 for x in batch)
+
+
+def test_rag_session_event_lifecycle(corpus):
+    """RagSession streams the full request lifecycle in order: submitted
+    -> retrieved -> condensed -> token(s) -> done, and the completed
+    answers carry real decoded tokens."""
+    emb = HashEmbedder(dim=96)
+    mobile = MobileRAG(corpus.docs, emb, top_k=3)
+    qs = [e.question for e in corpus.examples[:4]]
+    kinds = {}
+    answers = {}
+    for ev in mobile.stream(qs, max_new=5, slots=2, retrieve_chunk=2):
+        kinds.setdefault(ev.req_id, []).append(ev.kind)
+        if ev.kind == "done":
+            answers[ev.req_id] = ev.payload
+    assert set(kinds) == {0, 1, 2, 3}
+    for rid, ks in kinds.items():
+        assert ks[0] == "submitted"
+        assert ks[1:3] == ["retrieved", "condensed"]
+        assert ks[-1] == "done"
+        assert ks[3:-1] and all(k == "token" for k in ks[3:-1])
+        a = answers[rid]
+        assert a.gen_tokens and a.ttft_measured_s > 0
+        assert isinstance(a.generated, str)
+
+
+def test_session_overlaps_retrieval_with_decode(corpus):
+    """With retrieve_chunk < len(queries), later queries are still
+    un-retrieved while earlier ones already decode — the pipelining the
+    session exists for. (Each step retrieves ONE query and advances the
+    engine one step; request 0's prompt prefills in a few 32-token
+    chunks, so its first token precedes the tail queries' retrieval.)"""
+    emb = HashEmbedder(dim=96)
+    mobile = MobileRAG(corpus.docs, emb, top_k=2)
+    sess = mobile.session(max_new=6, slots=2, retrieve_chunk=1)
+    last = 7
+    events = []
+    for e in corpus.examples[:last + 1]:
+        sess.submit(e.question)
+    while sess.pending:
+        events.extend(sess.step())
+    order = [(e.req_id, e.kind) for e in events]
+    first_token_req0 = order.index((0, "token"))
+    retrieved_last = order.index((last, "retrieved"))
+    assert first_token_req0 < retrieved_last
+
+
+def test_edge_rag_qcache_lru_bounded(corpus):
+    emb = HashEmbedder(dim=96)
+    edge = EdgeRAG(corpus.docs, emb, top_k=3)
+    edge.qcache_cap = 3
+    stream = ["a?", "b?", "c?", "a?", "d?", "e?", "a?"]
+    for q in stream:
+        edge.answer(q)
+    assert len(edge._qcache) <= 3                 # bounded under churn
+    assert edge.qcache_hits >= 1                  # repeat query hit
+    assert edge.qcache_hits + edge.qcache_misses == len(stream)
 
 
 def test_mobilerag_ttft_beats_naive(corpus):
