@@ -16,6 +16,11 @@ into the running decode loop, every request stops at its own budget.
 
 Emits p50/p95 request latency (submit -> last token) for both, plus slot
 utilisation for the continuous engine.
+
+A second section exercises the post-PR-5 coverage of the paged path:
+continuous-only rows for a sliding-window (ring-page) config, an int8-KV
+config, an MoE config and a sampled (non-greedy, per-slot PRNG streams)
+run — quick mode keeps one swa + one sampled row for the CI smoke.
 """
 from __future__ import annotations
 
@@ -75,7 +80,7 @@ def _run_wave(eng, prompts, gens, arrivals):
     return np.array([lat[i] for i in range(n)])
 
 
-def _run_continuous(ce, prompts, gens, arrivals):
+def _run_continuous(ce, prompts, gens, arrivals, greedy=True):
     n = len(prompts)
     ce.steps = ce.active_slot_steps = 0
     t0 = time.perf_counter()
@@ -85,7 +90,8 @@ def _run_continuous(ce, prompts, gens, arrivals):
     while len(lat) < n:
         now = time.perf_counter() - t0
         while nxt < n and arrivals[nxt] <= now:
-            rid2i[ce.submit(prompts[nxt], int(gens[nxt]))] = nxt
+            rid2i[ce.submit(prompts[nxt], int(gens[nxt]),
+                            greedy=greedy)] = nxt
             nxt += 1
         if not ce.pending:
             time.sleep(max(arrivals[nxt] - now, 0.0) + 1e-4)
@@ -95,6 +101,47 @@ def _run_continuous(ce, prompts, gens, arrivals):
                 i = rid2i[ev.rid]
                 lat[i] = (time.perf_counter() - t0) - arrivals[i]
     return np.array([lat[i] for i in range(n)])
+
+
+def _variant_cfgs(mode: str):
+    """(row name, reduced config, greedy) for the paged-coverage rows."""
+    import dataclasses
+    from repro.configs import get_reduced
+    out = [
+        ("swa", get_reduced("h2o_danube_1_8b"), True),
+        ("sampled", get_reduced("qwen25_0_5b"), False),
+    ]
+    if mode != "quick":
+        out += [
+            ("int8", dataclasses.replace(get_reduced("qwen25_0_5b"),
+                                         kv_quant=True), True),
+            ("moe", get_reduced("granite_moe_1b_a400m"), True),
+        ]
+    return out
+
+
+def _run_variants(mode: str, prompts, gens):
+    """Continuous-only latency rows for swa / int8 / moe / sampled
+    configs: the model zoo the slot-paged engine covers since PR 5."""
+    import jax
+    from repro.models import model
+    from repro.serving.engine import ContinuousEngine
+
+    n = 8 if mode == "quick" else len(prompts)
+    prompts, gens = prompts[:n], gens[:n]
+    for name, cfg, greedy in _variant_cfgs(mode):
+        params = model.init_params(cfg, jax.random.PRNGKey(0))
+        ce = ContinuousEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
+        ce.generate(prompts[:2], max_new=2, greedy=greedy)       # warm
+        t0 = time.perf_counter()
+        # everything arrives at t=0: a pure drain through the shared loop
+        lat = _run_continuous(ce, prompts, gens, np.zeros(n),
+                              greedy=greedy)
+        wall = time.perf_counter() - t0
+        p50, p95 = np.percentile(lat, [50, 95])
+        emit(f"serving.continuous_{name}", p50 * 1e6,
+             f"p95_ms={p95 * 1e3:.0f};wall_s={wall:.2f};"
+             f"slot_util={ce.utilisation():.2f};n={len(prompts)}")
 
 
 def run(mode="quick"):
@@ -138,6 +185,8 @@ def run(mode="quick"):
          f"p95_ms={p95c * 1e3:.0f};slot_util={ce.utilisation():.2f}")
     emit("serving.p95_speedup", (p95w / max(p95c, 1e-9)) * 1e6,
          f"continuous_beats_wave={bool(p95c < p95w)}")
+
+    _run_variants(mode, prompts, gens)
 
 
 if __name__ == "__main__":

@@ -50,12 +50,17 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("ts", "interpret"))
+@functools.partial(jax.jit, static_argnames=("ts", "interpret", "ring"))
 def decode_attention(q, k, v, kv_len, ts: int = 512,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None, ring: bool = False):
     """q: [B, H, dh]; k, v: [B, S, G, dh] (H % G == 0); kv_len: i32 scalar
     (shared length) or [B] vector (slot-paged batches where every request
-    sits at its own position). Returns [B, H, dh]."""
+    sits at its own position). `ring=True`: each row's cache is a
+    sliding-window ring page whose write cursor is `kv_len % S` — every
+    FILLED slot is valid (evicted positions were overwritten in place),
+    so the per-row mask length is `min(kv_len, S)`; position order inside
+    the ring is irrelevant because RoPE is baked into the stored keys.
+    Returns [B, H, dh]."""
     if interpret is None:
         from repro.kernels.ops import default_interpret
         interpret = default_interpret()
@@ -73,6 +78,8 @@ def decode_attention(q, k, v, kv_len, ts: int = 512,
     scale = 1.0 / (dh ** 0.5)
     lens = jnp.broadcast_to(
         jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    if ring:
+        lens = jnp.minimum(lens, S)    # per-slot ring: filled slots valid
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                       # lens

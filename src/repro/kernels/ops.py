@@ -124,10 +124,14 @@ def pq_adc(lut, codes, use_pallas=True):
     return ref.pq_adc(lut, codes)
 
 
-def decode_attention(q, k, v, kv_len, use_pallas=True):
+def decode_attention(q, k, v, kv_len, use_pallas=True, ring=False):
+    """Flash-decode attention; `kv_len` scalar or per-row [B] vector,
+    `ring=True` for per-slot sliding-window ring pages (mask length
+    min(kv_len, S) per row)."""
     if use_pallas:
-        return _decode_attn(q, k, v, kv_len, interpret=default_interpret())
-    return ref.decode_attention(q, k, v, kv_len)
+        return _decode_attn(q, k, v, kv_len, interpret=default_interpret(),
+                            ring=ring)
+    return ref.decode_attention(q, k, v, kv_len, ring=ring)
 
 
 def flash_prefill(q, k, v, causal=True, window=None, use_pallas=True):

@@ -96,15 +96,19 @@ def pq_adc(lut, codes):
     return jnp.sum(g, axis=-1)
 
 
-def decode_attention(q, k, v, kv_len):
+def decode_attention(q, k, v, kv_len, ring: bool = False):
     """q: [B, H, dh]; k,v: [B, S, G, dh]; H % G == 0. Softmax over the
-    first kv_len positions (kv_len: scalar or per-row [B] vector)."""
+    first kv_len positions (kv_len: scalar or per-row [B] vector).
+    `ring=True`: per-slot sliding-window ring pages — every filled slot
+    is valid, i.e. the mask length is min(kv_len, S) per row."""
     B, H, dh = q.shape
     S, G = k.shape[1], k.shape[2]
     qg = q.reshape(B, G, H // G, dh)
     s = jnp.einsum("bgnd,bsgd->bgns", qg, k) / jnp.sqrt(dh).astype(q.dtype)
     s = s.astype(jnp.float32)
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    if ring:
+        lens = jnp.minimum(lens, S)
     mask = jnp.arange(S)[None, None, None, :] < lens[:, None, None, None]
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)

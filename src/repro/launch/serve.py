@@ -57,7 +57,8 @@ def run_stream(pipe, corpus, args) -> None:
     n = args.questions
     gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
     arrivals = np.cumsum(gaps)
-    sess = pipe.session(max_new=args.max_new, slots=args.slots)
+    sess = pipe.session(max_new=args.max_new, slots=args.slots,
+                        greedy=not args.sample, seed=args.seed)
     t0 = time.perf_counter()
     submitted = 0
     latencies = []
@@ -127,6 +128,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--stream", action="store_true",
                     help="Poisson arrival process into a live RagSession")
+    ap.add_argument("--sample", action="store_true",
+                    help="sampled decode (per-request PRNG streams; "
+                         "draws are independent of co-residents) instead "
+                         "of greedy — --stream path")
     ap.add_argument("--arrival-qps", type=float, default=4.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

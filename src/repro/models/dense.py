@@ -94,12 +94,23 @@ def _qkv(cfg: ModelConfig, lp, x, positions):
     return q, k, v
 
 
-def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool):
-    """One transformer block (training / prefill full-sequence path)."""
+def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool,
+          fake_quant_kv: bool = False):
+    """One transformer block (training / prefill full-sequence path).
+
+    `fake_quant_kv` (serving prefill of int8-KV configs): attention reads
+    `dequantize_kv(quantize_kv(k))` instead of raw k/v — exactly the
+    values every later decode step reads back from the int8 cache, so
+    wave prefill and chunked paged prefill see bit-identical KV and the
+    wave/continuous greedy-parity contract extends to `kv_quant` configs.
+    Training never sets it."""
     h = cfg.num_heads
     res = x
     y = L.rmsnorm(x, lp["attn_norm"], cfg.norm_eps)
     q, k, v = _qkv(cfg, lp, y, positions)
+    if fake_quant_kv and cfg.kv_quant:
+        k = L.dequantize_kv(*L.quantize_kv(k), k.dtype)
+        v = L.dequantize_kv(*L.quantize_kv(v), v.dtype)
     ctx = L.attention(q, k, v, causal=cfg.causal, window=cfg.sliding_window)
     ctx = ctx[:, :, :h, :]                           # drop padded heads
     y = ctx.reshape(ctx.shape[0], ctx.shape[1], -1) @ lp["wo"]
@@ -174,16 +185,189 @@ def block_decode(cfg: ModelConfig, lp, x, pos, cache, idx,
     return res + y, cache
 
 
+def _cache_layer(c: dict, name: str, idx):
+    return jax.lax.dynamic_index_in_dim(c[name], idx, 0, keepdims=False)
+
+
+def paged_attn_decode(cfg: ModelConfig, lp, y, pos, slot, bidx, c, idx):
+    """One layer of slot-paged decode attention, shared by the dense and
+    moe families (moe.decode_step_paged reuses it verbatim; only the FFN
+    differs between the two paged decode bodies).
+
+    y [B,1,d] (already normed); pos [B] absolute per-slot positions; slot
+    [B] per-slot WRITE CURSORS (`pos % sc` for sliding-window ring pages,
+    `pos` otherwise; the out-of-bounds sentinel `sc` for inactive slots —
+    their scatters drop); c: dict of full stacked cache arrays
+    [L, slots, sc, G, dh] (+ [L, slots, sc, G] scales when `kv_quant`).
+    Returns (ctx [B,1,Hp,dh], updated c). int8 configs quantize this
+    step's k/v with per-slot per-head scales and attend through
+    `decode_attention_q8`; ring caches mask all filled slots valid
+    (`min(kv_len, sc)` — position order inside the ring is irrelevant to
+    decode because RoPE is already baked into the stored keys."""
+    q, k, v = _qkv(cfg, lp, y, pos[:, None])
+    ring = cfg.sliding_window is not None
+    if cfg.kv_quant:
+        kq, ks = L.quantize_kv(k)
+        vq, vs = L.quantize_kv(v)
+        c["k"] = c["k"].at[idx, bidx, slot].set(kq[:, 0], mode="drop")
+        c["k_s"] = c["k_s"].at[idx, bidx, slot].set(ks[:, 0], mode="drop")
+        c["v"] = c["v"].at[idx, bidx, slot].set(vq[:, 0], mode="drop")
+        c["v_s"] = c["v_s"].at[idx, bidx, slot].set(vs[:, 0], mode="drop")
+        ctx = L.decode_attention_q8(
+            q, _cache_layer(c, "k", idx), _cache_layer(c, "k_s", idx),
+            _cache_layer(c, "v", idx), _cache_layer(c, "v_s", idx),
+            pos + 1, ring=ring)
+    else:
+        c["k"] = c["k"].at[idx, bidx, slot].set(
+            k[:, 0].astype(c["k"].dtype), mode="drop")
+        c["v"] = c["v"].at[idx, bidx, slot].set(
+            v[:, 0].astype(c["v"].dtype), mode="drop")
+        ctx = L.decode_attention(
+            q, _cache_layer(c, "k", idx).astype(k.dtype),
+            _cache_layer(c, "v", idx).astype(v.dtype), pos + 1, ring=ring)
+    return ctx, c
+
+
+def paged_attn_chunk(cfg: ModelConfig, lp, y, positions, slot, offset,
+                     limit, c, idx, page_len: int):
+    """One layer of chunked paged prefill attention (dense + moe shared).
+
+    y [1,C,d] (already normed); slot/offset/limit traced scalars (`limit`
+    = offset + the chunk's REAL token count, pre-padding). Non-ring pages:
+    write the chunk at [offset, offset+C) and attend the slot's page
+    prefix (dequantized from int8 when `kv_quant`). Ring pages
+    (sliding-window with sc < page_len): the slot's ring is first
+    re-materialized into ABSOLUTE position order (ring slot j holds
+    position `offset-1-((offset-1-j) % sc)`), the chunk is appended at
+    its absolute offset, and attention runs over that [page_len] buffer
+    with the same causal/window masks the wave prefill uses — identical
+    index placement is what keeps greedy parity bit-exact. Only the real
+    tokens are then scattered into the ring at cursors `p % sc`: the
+    padded tail of a final ragged chunk must NOT evict positions still
+    inside other queries' windows. Returns (ctx [1,C,Hp,dh], c)."""
+    csz = y.shape[1]
+    q, k, v = _qkv(cfg, lp, y, positions)
+    sc = c["k"].shape[2]
+    ring = cfg.sliding_window is not None and sc < page_len
+    zero = jnp.int32(0)
+    if cfg.kv_quant:
+        kq, ks = L.quantize_kv(k)
+        vq, vs = L.quantize_kv(v)
+    if ring:
+        # 1. history (pre-chunk ring contents) in absolute position order
+        j = jnp.arange(sc)
+        p_hist = offset - 1 - ((offset - 1 - j) % sc)
+        hist_dst = jnp.where(p_hist >= 0, p_hist, page_len)  # <0 -> drop
+        if cfg.kv_quant:
+            kslot = L.dequantize_kv(
+                jax.lax.dynamic_index_in_dim(
+                    _cache_layer(c, "k", idx), slot, 0, keepdims=False),
+                jax.lax.dynamic_index_in_dim(
+                    _cache_layer(c, "k_s", idx), slot, 0, keepdims=False),
+                k.dtype)
+            vslot = L.dequantize_kv(
+                jax.lax.dynamic_index_in_dim(
+                    _cache_layer(c, "v", idx), slot, 0, keepdims=False),
+                jax.lax.dynamic_index_in_dim(
+                    _cache_layer(c, "v_s", idx), slot, 0, keepdims=False),
+                v.dtype)
+            k_new = L.dequantize_kv(kq, ks, k.dtype)[0]
+            v_new = L.dequantize_kv(vq, vs, v.dtype)[0]
+        else:
+            kslot = jax.lax.dynamic_index_in_dim(
+                _cache_layer(c, "k", idx), slot, 0,
+                keepdims=False).astype(k.dtype)
+            vslot = jax.lax.dynamic_index_in_dim(
+                _cache_layer(c, "v", idx), slot, 0,
+                keepdims=False).astype(v.dtype)
+            k_new, v_new = k[0], v[0]
+        g, dh = kslot.shape[1], kslot.shape[2]
+        kfull = jnp.zeros((page_len, g, dh), k_new.dtype
+                          ).at[hist_dst].set(kslot, mode="drop")
+        vfull = jnp.zeros((page_len, g, dh), v_new.dtype
+                          ).at[hist_dst].set(vslot, mode="drop")
+        # 2. append the chunk at its absolute positions and attend
+        kfull = jax.lax.dynamic_update_slice(kfull, k_new, (offset, zero,
+                                                            zero))
+        vfull = jax.lax.dynamic_update_slice(vfull, v_new, (offset, zero,
+                                                            zero))
+        ctx = L.attention(q, kfull[None], vfull[None], causal=True,
+                          window=cfg.sliding_window, q_offset=offset,
+                          kv_len=offset + csz)
+        # 3. ring-write only the REAL tokens at their per-position cursors
+        p_new = offset + jnp.arange(csz)
+        dst = jnp.where(p_new < limit, p_new % sc, sc)   # pad tail -> drop
+        if cfg.kv_quant:
+            c["k"] = c["k"].at[idx, slot, dst].set(kq[0], mode="drop")
+            c["k_s"] = c["k_s"].at[idx, slot, dst].set(ks[0], mode="drop")
+            c["v"] = c["v"].at[idx, slot, dst].set(vq[0], mode="drop")
+            c["v_s"] = c["v_s"].at[idx, slot, dst].set(vs[0], mode="drop")
+        else:
+            c["k"] = c["k"].at[idx, slot, dst].set(
+                k[0].astype(c["k"].dtype), mode="drop")
+            c["v"] = c["v"].at[idx, slot, dst].set(
+                v[0].astype(c["v"].dtype), mode="drop")
+        return ctx, c
+    if cfg.kv_quant:
+        c["k"] = jax.lax.dynamic_update_slice(
+            c["k"], kq[None], (idx, slot, offset, zero, zero))
+        c["k_s"] = jax.lax.dynamic_update_slice(
+            c["k_s"], ks[None], (idx, slot, offset, zero))
+        c["v"] = jax.lax.dynamic_update_slice(
+            c["v"], vq[None], (idx, slot, offset, zero, zero))
+        c["v_s"] = jax.lax.dynamic_update_slice(
+            c["v_s"], vs[None], (idx, slot, offset, zero))
+        kslot = L.dequantize_kv(
+            jax.lax.dynamic_slice_in_dim(
+                _cache_layer(c, "k", idx), slot, 1, axis=0),
+            jax.lax.dynamic_slice_in_dim(
+                _cache_layer(c, "k_s", idx), slot, 1, axis=0), k.dtype)
+        vslot = L.dequantize_kv(
+            jax.lax.dynamic_slice_in_dim(
+                _cache_layer(c, "v", idx), slot, 1, axis=0),
+            jax.lax.dynamic_slice_in_dim(
+                _cache_layer(c, "v_s", idx), slot, 1, axis=0), v.dtype)
+    else:
+        c["k"] = jax.lax.dynamic_update_slice(
+            c["k"], k[None].astype(c["k"].dtype),
+            (idx, slot, offset, zero, zero))
+        c["v"] = jax.lax.dynamic_update_slice(
+            c["v"], v[None].astype(c["v"].dtype),
+            (idx, slot, offset, zero, zero))
+        kslot = jax.lax.dynamic_slice_in_dim(
+            _cache_layer(c, "k", idx), slot, 1, axis=0).astype(k.dtype)
+        vslot = jax.lax.dynamic_slice_in_dim(
+            _cache_layer(c, "v", idx), slot, 1, axis=0).astype(v.dtype)
+    ctx = L.attention(q, kslot, vslot, causal=True,
+                      window=cfg.sliding_window, q_offset=offset,
+                      kv_len=offset + csz)
+    return ctx, c
+
+
+def paged_cursor(cfg: ModelConfig, sc: int, pos, active):
+    """Per-slot write cursor for one paged decode step: `pos % sc` on a
+    sliding-window ring page (position p lives in ring slot p % sc —
+    the invariant prefill rolls, chunk-prefill scatters and decode all
+    share), plain `pos` otherwise; the OOB sentinel `sc` for inactive
+    slots so their scatters drop instead of clobbering a page a
+    co-resident is still filling."""
+    cursor = pos % sc if cfg.sliding_window is not None else pos
+    return jnp.where(active, cursor, sc)
+
+
 def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
     """One decode step over a slot-paged cache (continuous batching).
 
     token [B,1] int32; pos [B] int32 — the per-slot write position (== the
     slot's current kv length); active [B] bool. Every slot advances one
-    position at ITS OWN offset: k/v land at cache[:, b, pos[b]] via a
-    scatter, attention masks each row to its own kv_len = pos[b]+1.
-    Inactive slots (free, or mid-prefill-admission) scatter out of bounds
-    with mode="drop" so they cannot clobber a page another request is
-    filling; their logits rows are garbage the engine discards.
+    position at ITS OWN cursor (see `paged_cursor`): k/v land at
+    cache[:, b, cursor[b]] via a scatter, attention masks each row to its
+    own kv_len = pos[b]+1 (clamped to the ring size for sliding-window
+    pages, where every filled slot is valid). Inactive slots (free, or
+    mid-prefill-admission) scatter out of bounds with mode="drop" so they
+    cannot clobber a page another request is filling; their logits rows
+    are garbage the engine discards. Covers plain, sliding-window (ring)
+    and int8-KV dense configs.
     """
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
@@ -191,90 +375,81 @@ def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
     b = token.shape[0]
     sc = cache["k"].shape[2]
     pos = jnp.asarray(pos, jnp.int32)
-    slot = jnp.where(active, pos, sc)       # OOB for inactive -> dropped
+    slot = paged_cursor(cfg, sc, pos, active)
     bidx = jnp.arange(b)
 
     def body(carry, inp):
-        xc, ck, cv = carry
+        xc, cd = carry
         lp, idx = inp
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        q, k, v = _qkv(cfg, lp, y, pos[:, None])
-        ck = ck.at[idx, bidx, slot].set(k[:, 0].astype(ck.dtype),
-                                        mode="drop")
-        cv = cv.at[idx, bidx, slot].set(v[:, 0].astype(cv.dtype),
-                                        mode="drop")
-        klay = jax.lax.dynamic_index_in_dim(ck, idx, 0, keepdims=False)
-        vlay = jax.lax.dynamic_index_in_dim(cv, idx, 0, keepdims=False)
-        ctx = L.decode_attention(q, klay.astype(k.dtype),
-                                 vlay.astype(v.dtype), pos + 1)
+        ctx, cd = paged_attn_decode(cfg, lp, y, pos, slot, bidx, cd, idx)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
         res = xc
         y = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
         y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
-        return (res + y, ck, cv), None
+        return (res + y, cd), None
 
     idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
-    (x, ck, cv), _ = jax.lax.scan(body, (x, cache["k"], cache["v"]),
-                                  (params["layers"], idxs))
+    (x, cache), _ = jax.lax.scan(body, (x, dict(cache)),
+                                 (params["layers"], idxs))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params, x)[:, 0]
-    return logits, {"k": ck, "v": cv}
+    return logits, cache
 
 
 def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
-                        offset):
+                        offset, limit=None, *, page_len: int = 0):
     """One prefill chunk of an admitted prompt, written into one slot of
     the paged cache while the other slots keep decoding between chunks.
 
-    tokens [1, C] int32; slot / offset: traced scalars. The chunk's k/v
-    land at cache[:, slot, offset:offset+C]; its queries attend the page
-    prefix [0, offset+C) causally (L.attention's q_offset/kv_len path), so
-    a prompt longer than C is prefilled in several calls that all compile
-    to the same [1, C] shape. Rows past the prompt's true end (final
-    ragged chunk padded up to C) write junk that is either overwritten by
-    the next write at that position or masked by kv_len before anything
-    attends it. Returns (logits [1, C, V], cache).
+    tokens [1, C] int32; slot / offset / limit: traced scalars (`limit` =
+    offset + the chunk's real token count; defaults to offset + C).
+    `page_len`: the engine's static page length (0 -> the cache's own
+    seq dim; ring reconstruction needs the true page size because a
+    sliding-window cache is allocated at only `window` positions). The
+    chunk's k/v land at cache[:, slot, offset:offset+C] (ring cursors
+    `p % sc` for sliding-window configs, int8+scales for `kv_quant`
+    configs); its queries attend the page prefix [0, offset+C) causally
+    (L.attention's q_offset/kv_len path), so a prompt longer than C is
+    prefilled in several calls that all compile to the same [1, C] shape.
+    On non-ring pages, rows past the prompt's true end (final ragged
+    chunk padded up to C) write junk that is either overwritten by the
+    next write at that position or masked by kv_len before anything
+    attends it; ring pages drop those writes via `limit` (see
+    `paged_attn_chunk`). Returns (chunk logits [1, C, V], cache).
     """
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
     c = tokens.shape[1]
     positions = offset + jnp.arange(c)[None, :]
-    zero = jnp.int32(0)
+    limit = offset + c if limit is None else limit
+    plen = page_len or cache["k"].shape[2]
 
     def body(carry, inp):
-        xc, ck, cv = carry
+        xc, cd = carry
         lp, idx = inp
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        q, k, v = _qkv(cfg, lp, y, positions)
-        ck = jax.lax.dynamic_update_slice(
-            ck, k[None].astype(ck.dtype), (idx, slot, offset, zero, zero))
-        cv = jax.lax.dynamic_update_slice(
-            cv, v[None].astype(cv.dtype), (idx, slot, offset, zero, zero))
-        klay = jax.lax.dynamic_index_in_dim(ck, idx, 0, keepdims=False)
-        kslot = jax.lax.dynamic_slice_in_dim(klay, slot, 1, axis=0)
-        vlay = jax.lax.dynamic_index_in_dim(cv, idx, 0, keepdims=False)
-        vslot = jax.lax.dynamic_slice_in_dim(vlay, slot, 1, axis=0)
-        ctx = L.attention(q, kslot.astype(k.dtype), vslot.astype(v.dtype),
-                          causal=True, q_offset=offset, kv_len=offset + c)
+        ctx, cd = paged_attn_chunk(cfg, lp, y, positions, slot, offset,
+                                   limit, cd, idx, plen)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(1, c, -1) @ lp["wo"]
         res = xc
         y = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
         y = L.mlp(y, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
-        return (res + y, ck, cv), None
+        return (res + y, cd), None
 
     idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
-    (x, ck, cv), _ = jax.lax.scan(body, (x, cache["k"], cache["v"]),
-                                  (params["layers"], idxs))
+    (x, cache), _ = jax.lax.scan(body, (x, dict(cache)),
+                                 (params["layers"], idxs))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params, x)
-    return logits, {"k": ck, "v": cv}
+    return logits, cache
 
 
 def mrope_positions_decode(pos, b):
@@ -286,7 +461,7 @@ def mrope_positions_decode(pos, b):
 
 
 def _scan_blocks(cfg: ModelConfig, params, x, positions, *, seq_sp: bool,
-                 collect_kv: bool = False):
+                 collect_kv: bool = False, fake_quant_kv: bool = False):
     stacked = params["layers"]
 
     def body(xc, lp):
@@ -294,7 +469,8 @@ def _scan_blocks(cfg: ModelConfig, params, x, positions, *, seq_sp: bool,
             # recompute k/v for the cache (prefill)
             y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
             _, k, v = _qkv(cfg, lp, y, positions)
-            out = block(cfg, lp, xc, positions, seq_sp=seq_sp)
+            out = block(cfg, lp, xc, positions, seq_sp=seq_sp,
+                        fake_quant_kv=fake_quant_kv)
             return out, (k, v)
         return block(cfg, lp, xc, positions, seq_sp=seq_sp), None
 
@@ -368,11 +544,16 @@ def cache_specs(cfg: ModelConfig):
 
 
 def prefill(cfg: ModelConfig, params, batch):
-    """Full-sequence forward; returns (last-position logits, kv cache)."""
+    """Full-sequence forward; returns (last-position logits, kv cache).
+
+    For `kv_quant` configs the forward attends fake-quantized k/v (see
+    `block`): the int8 cache is the single source of truth, so prefill
+    must read the same values decode will — that is what makes the
+    wave and chunked-paged prefill paths token-identical."""
     x, positions = embed_inputs(cfg, params, batch)
     x = shard(x, "batch", None, None)
     x, (k, v) = _scan_blocks(cfg, params, x, positions, seq_sp=False,
-                             collect_kv=True)
+                             collect_kv=True, fake_quant_kv=True)
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = logits_from_hidden(cfg, params, x[:, -1:, :])[:, 0]
     S = k.shape[2]

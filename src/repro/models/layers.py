@@ -185,11 +185,25 @@ def attention(q, k, v, *, causal: bool, window: Optional[int] = None,
 
 
 def quantize_kv(x):
-    """[.., S, G, dh] -> (int8 values, f32 scales [.., S, G])."""
+    """[.., S, G, dh] -> (int8 values, f32 scales [.., S, G]).
+
+    Scales are per token per kv-head — in a slot-paged cache that means
+    per SLOT per position per head (`k_s`/`v_s` are `[L, slots, S, G]`),
+    so each slot's quantisation is independent of its co-residents."""
     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
     s = jnp.maximum(s, 1e-10)
     q = jnp.round(x.astype(jnp.float32) / s[..., None]).astype(jnp.int8)
     return q, s
+
+
+def dequantize_kv(q, s, dtype=jnp.bfloat16):
+    """Inverse of `quantize_kv`: int8 values [.., S, G, dh] x scales
+    [.., S, G] -> dtype. `dequantize_kv(*quantize_kv(x))` is the exact
+    value every int8-KV attention path sees for x — prefill fake-quant
+    (dense.block), chunked paged prefill, and the score/probability-side
+    scaling in `decode_attention_q8` all agree on it bit for bit."""
+    return (q.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+            ).astype(dtype)
 
 
 def _decode_valid_mask(kv_len, b: int, s: int, *, window=None,

@@ -109,32 +109,46 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
-    """Whether the slot-paged decode path (continuous batching) covers this
-    config. Plain-text dense KV caches only: ring (SWA) caches and int8 KV
-    tie a slot's layout to a shared scalar position, and M-RoPE decode
-    bakes in a scalar offset — those families stay on the wave path."""
-    return (cfg.family == "dense" and cfg.modality == "text"
-            and not cfg.kv_quant and cfg.sliding_window is None)
+    """Whether the slot-paged decode path (continuous batching) covers
+    this config: the dense and moe text decoder families — for dense
+    including sliding-window (per-slot ring pages) and int8-KV
+    (per-slot scales) variants. Still excluded: M-RoPE decode (bakes in
+    a scalar position offset per image grid), non-causal encoders, the
+    encdec / recurrent-state families (mamba2 / rglru keep fixed-size
+    state, not paged KV), and moe+swa / moe+int8 combos — the paged
+    helpers would handle them, but the legacy wave path (the parity
+    baseline and `continuous=False` fallback) implements neither ring
+    rolls nor KV quantization for moe, so claiming support would let
+    `continuous=False` silently produce divergent tokens."""
+    if cfg.modality != "text" or not cfg.causal or cfg.rope_type == "mrope":
+        return False
+    if cfg.family == "dense":
+        return True
+    return (cfg.family == "moe" and not cfg.kv_quant
+            and cfg.sliding_window is None)
 
 
 def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
     """Per-slot-position decode step. token [B,1]; pos [B] (each slot's
-    write position / current kv_len); active [B] bool (inactive slots'
-    cache writes are dropped)."""
+    write position / current kv_len — the ring cursor `pos % window` is
+    derived inside for sliding-window configs); active [B] bool (inactive
+    slots' cache writes are dropped)."""
     assert supports_paged(cfg), cfg.name
-    return dense.decode_step_paged(
+    return family(cfg).decode_step_paged(
         cfg, cast_params(params, compute_dtype(cfg)), cache, token, pos,
         active)
 
 
 def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
-                        offset):
+                        offset, limit=None, *, page_len: int = 0):
     """One [1, C] prefill chunk written into `slot` at `offset` of a paged
-    cache; returns (chunk logits [1, C, V], cache)."""
+    cache; `limit` = offset + the chunk's real (pre-padding) length,
+    `page_len` the engine's static page size (needed by sliding-window
+    ring reconstruction). Returns (chunk logits [1, C, V], cache)."""
     assert supports_paged(cfg), cfg.name
-    return dense.prefill_chunk_paged(
+    return family(cfg).prefill_chunk_paged(
         cfg, cast_params(params, compute_dtype(cfg)), cache, tokens, slot,
-        offset)
+        offset, limit, page_len=page_len)
 
 
 def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):

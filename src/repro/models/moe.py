@@ -92,12 +92,20 @@ q8_all_gather.defvjp(_q8_fwd, _q8_bwd)
 # ----------------------------------------------------------- dispatch core
 
 
-def _local_moe(cfg: ModelConfig, x, router, we1, we2, we3, e_offset, E_total):
+def _local_moe(cfg: ModelConfig, x, router, we1, we2, we3, e_offset, E_total,
+               capacity: int | None = None):
     """Token-choice top-k MoE over the experts resident in this shard.
 
     x: [T, d] local tokens; we*: [El, ...] local experts covering global
     ids [e_offset, e_offset + El). Returns (y [T, d] partial sum over local
     experts, aux load-balance loss term).
+
+    `capacity` overrides the capacity_factor-derived per-expert buffer
+    size. Serving paths pass T — the true no-drop bound, since top_k
+    assigns distinct experts per token: every token's output then
+    depends only on its own row, which is what makes wave/paged decode
+    bit-identical and a slot's tokens independent of its co-residents.
+    Training keeps the capacity_factor drops.
     """
     m = cfg.moe
     T, d = x.shape
@@ -112,7 +120,7 @@ def _local_moe(cfg: ModelConfig, x, router, we1, we2, we3, e_offset, E_total):
     pbar = probs.mean(0)
     aux = E_total * jnp.sum(f * pbar)
 
-    C = max(4, int(T * k * m.capacity_factor) // E_total)
+    C = capacity or max(4, int(T * k * m.capacity_factor) // E_total)
     eids = topi.reshape(-1)                                     # [T*k]
     local = (eids >= e_offset) & (eids < e_offset + El)
     leids = jnp.where(local, eids - e_offset, El)               # El = trash
@@ -142,20 +150,30 @@ def _local_moe(cfg: ModelConfig, x, router, we1, we2, we3, e_offset, E_total):
     return y, aux
 
 
-def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False):
+def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False,
+            drop: bool = True):
     """x: [B, S, d] -> (y, aux). Uses shard_map EP on-mesh, local off-mesh.
 
     out_scatter (train/seq_sp path): the combining reduction over "model"
     is emitted as psum_scatter over the sequence dim instead of a full
     all-reduce — the residual stream is sequence-sharded anyway, so this
     halves the combine's ICI traffic and skips the re-shard.
+
+    drop=False (every serving path: prefill, wave decode, paged decode):
+    per-expert capacity is raised to the theoretical max T (top_k picks
+    DISTINCT experts per token, so one expert can receive at most one
+    slot per token) — no token is ever dropped, and a co-batched (or
+    junk co-resident) token can never displace another request's
+    expert slot.
     """
     b, s, d = x.shape
     mesh = get_mesh()
     m = cfg.moe
     if mesh is None or "model" not in mesh.axis_names:
+        cap = None if drop else b * s
         y, aux = _local_moe(cfg, x.reshape(-1, d), lp["router"], lp["we1"],
-                            lp["we2"], lp.get("we3"), 0, m.num_experts)
+                            lp["we2"], lp.get("we3"), 0, m.num_experts,
+                            capacity=cap)
         return y.reshape(b, s, d), aux
 
     tp = mesh.shape["model"]
@@ -180,8 +198,9 @@ def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False):
         we3_f = gather(we3_l, 1, 2) if cfg.act == "swiglu" else None
         midx = jax.lax.axis_index("model")
         xt = xl.reshape(-1, d)
+        cap = None if drop else xt.shape[0]
         y, aux = _local_moe(cfg, xt, router_f, we1_f, we2_f, we3_f,
-                            midx * El, m.num_experts)
+                            midx * El, m.num_experts, capacity=cap)
         y = y.reshape(xl.shape)
         if scatter:
             y = jax.lax.psum_scatter(y, "model", scatter_dimension=1,
@@ -206,7 +225,10 @@ def moe_ffn(cfg: ModelConfig, lp, x, *, out_scatter: bool = False):
 # ----------------------------------------------------------- blocks
 
 
-def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool):
+def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool,
+          inference: bool = False):
+    """One MoE transformer block. `inference` (serving prefill): expert
+    capacity never drops tokens (see `moe_ffn(drop=False)`)."""
     h = cfg.num_heads
     sp = "seq_sp" if seq_sp else None
     res = x
@@ -221,7 +243,7 @@ def block(cfg: ModelConfig, lp, x, positions, *, seq_sp: bool):
     res = x
     norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
     y = L.rmsnorm(x, lp[norm_name], cfg.norm_eps)
-    ymoe, aux = moe_ffn(cfg, lp, y, out_scatter=seq_sp)
+    ymoe, aux = moe_ffn(cfg, lp, y, out_scatter=seq_sp, drop=not inference)
     if cfg.moe.dense_residual:
         yd = L.rmsnorm(x, lp["mlp_norm"], cfg.norm_eps)
         ydense = L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
@@ -256,13 +278,16 @@ cache_specs = dense.cache_specs
 
 
 def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence forward; returns (last-position logits, kv cache).
+    Inference capacity semantics: no expert ever drops a token (a
+    co-batched prompt must not perturb another request's logits)."""
     x, positions = dense.embed_inputs(cfg, params, batch)
 
     def body(carry, lp):
         xc, aux = carry
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
         _, k, v = dense._qkv(cfg, lp, y, positions)
-        xc, a = block(cfg, lp, xc, positions, seq_sp=False)
+        xc, a = block(cfg, lp, xc, positions, seq_sp=False, inference=True)
         return (xc, aux + a), (k, v)
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
@@ -302,7 +327,7 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
         res = xc
         norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
         y = L.rmsnorm(xc, lp[norm_name], cfg.norm_eps)
-        ymoe, _ = moe_ffn(cfg, lp, y)
+        ymoe, _ = moe_ffn(cfg, lp, y, drop=False)
         if cfg.moe.dense_residual:
             yd = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
             ymoe = ymoe + L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"), cfg.act)
@@ -314,3 +339,90 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = dense.logits_from_hidden(cfg, params, x)[:, 0]
     return logits, {"k": k, "v": v}
+
+
+# ------------------------------------------------- slot-paged serving
+
+
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
+    """MoE mirror of `dense.decode_step_paged`: the attention/cache layer
+    is the shared `dense.paged_attn_decode` (per-slot cursors, OOB-drop
+    for inactive slots, ring/int8 variants); only the FFN differs.
+    Expert routing is per token, so the slot dimension threads straight
+    through dispatch/combine — with `drop=False` capacity a slot's
+    expert outputs depend only on its own row, never on co-residents."""
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    b = token.shape[0]
+    sc = cache["k"].shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = dense.paged_cursor(cfg, sc, pos, active)
+    bidx = jnp.arange(b)
+
+    def body(carry, inp):
+        xc, cd = carry
+        lp, idx = inp
+        h = cfg.num_heads
+        res = xc
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        ctx, cd = dense.paged_attn_decode(cfg, lp, y, pos, slot, bidx, cd,
+                                          idx)
+        ctx = ctx[:, :, :h, :]
+        xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
+        res = xc
+        norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
+        y = L.rmsnorm(xc, lp[norm_name], cfg.norm_eps)
+        ymoe, _ = moe_ffn(cfg, lp, y, drop=False)
+        if cfg.moe.dense_residual:
+            yd = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+            ymoe = ymoe + L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"),
+                                cfg.act)
+        return (res + ymoe, cd), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, cache), _ = jax.lax.scan(body, (x, dict(cache)),
+                                 (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, cache
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
+                        offset, limit=None, *, page_len: int = 0):
+    """MoE mirror of `dense.prefill_chunk_paged` (shared
+    `dense.paged_attn_chunk` attention, drop-free MoE FFN)."""
+    emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
+    x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    c = tokens.shape[1]
+    positions = offset + jnp.arange(c)[None, :]
+    limit = offset + c if limit is None else limit
+    plen = page_len or cache["k"].shape[2]
+
+    def body(carry, inp):
+        xc, cd = carry
+        lp, idx = inp
+        h = cfg.num_heads
+        res = xc
+        y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
+        ctx, cd = dense.paged_attn_chunk(cfg, lp, y, positions, slot,
+                                         offset, limit, cd, idx, plen)
+        ctx = ctx[:, :, :h, :]
+        xc = res + ctx.reshape(1, c, -1) @ lp["wo"]
+        res = xc
+        norm_name = "moe_norm" if cfg.moe.dense_residual else "mlp_norm"
+        y = L.rmsnorm(xc, lp[norm_name], cfg.norm_eps)
+        ymoe, _ = moe_ffn(cfg, lp, y, drop=False)
+        if cfg.moe.dense_residual:
+            yd = L.rmsnorm(xc, lp["mlp_norm"], cfg.norm_eps)
+            ymoe = ymoe + L.mlp(yd, lp["w1"], lp["w2"], lp.get("w3"),
+                                cfg.act)
+        return (res + ymoe, cd), None
+
+    idxs = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    (x, cache), _ = jax.lax.scan(body, (x, dict(cache)),
+                                 (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = dense.logits_from_hidden(cfg, params, x)
+    return logits, cache

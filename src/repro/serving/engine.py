@@ -1,19 +1,28 @@
 """Generation engines.
 
 `ContinuousEngine` is the request-centric serving core: a slot-paged KV
-cache (fixed [slots, max_len] pages, per-slot position/kv_len vectors fed
-to decode_attention), `submit()`/`step()` lifecycle, admission of a queued
-prompt into any slot the step after its occupant hits EOS, and prefill of
-admitted prompts chunked into the running decode loop so a long prompt
-never stalls other slots for more than one chunk.
+cache (fixed [slots, max_len] pages — [slots, window] rings for
+sliding-window configs, int8 values + per-slot scales for `kv_quant`
+configs — with per-slot position/kv_len vectors fed to decode_attention),
+`submit()`/`step()` lifecycle, admission of a queued prompt into any slot
+the step after its occupant hits EOS, and prefill of admitted prompts
+chunked into the running decode loop so a long prompt never stalls other
+slots for more than one chunk. Both greedy and sampled requests run here:
+each sampled request draws from its own PRNG stream
+`fold_in(PRNGKey(seed), request_id)` advanced by a per-request draw
+counter, so its tokens are bit-identical regardless of co-residents
+(DESIGN.md §10).
 
 `Engine` keeps the legacy wave surface: `generate()` is now a thin
-compatibility wrapper that routes greedy requests through a shared
-`ContinuousEngine` whenever the config supports the paged path (token
-output is identical — see tests/test_serving.py parity test), and falls
-back to fixed length-bucketed waves (`generate_wave`) for sampling and
-for families without paged KV (SWA ring caches, int8 KV, M-RoPE,
-recurrent state).
+compatibility wrapper that routes requests through a shared
+`ContinuousEngine` whenever the config supports the paged path
+(`model.supports_paged`: the dense and moe text families, including
+sliding-window and int8-KV — greedy token output is identical to the
+wave path, see tests/test_serving.py and tests/test_paged_families.py),
+and falls back to fixed length-bucketed waves (`generate_wave`) for the
+families without paged KV (M-RoPE, encdec, recurrent state).
+`generate(..., continuous=False)` forces the legacy wave path, which
+remains the parity baseline every serving bench compares against.
 """
 from __future__ import annotations
 
@@ -32,6 +41,9 @@ from repro.models import model
 
 @dataclass
 class GenResult:
+    """One finished generation: decoded token ids (including the EOS, if
+    hit), the prompt length after any page truncation, and measured
+    prefill / decode wall time attributed to this request."""
     tokens: List[int]
     prompt_len: int
     prefill_s: float = 0.0
@@ -39,6 +51,8 @@ class GenResult:
 
     @property
     def ttft_s(self) -> float:
+        """Time to first token == the measured prefill time (the first
+        token is drawn from the prefill logits)."""
         return self.prefill_s
 
 
@@ -55,6 +69,8 @@ class EngineEvent:
 
 @dataclass
 class _Request:
+    """Engine-internal per-request state: prompt, prefill/decode
+    progress, the occupied slot, timing, and the sampling mode/stream."""
     rid: int
     prompt: np.ndarray
     max_new: int
@@ -64,28 +80,43 @@ class _Request:
     slot: int = -1
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    greedy: bool = True
+    # sampled requests only: this request's own PRNG stream root,
+    # fold_in(PRNGKey(seed), rid); draw t folds in t = len(tokens)
+    key: Optional[object] = None
 
 
 class ContinuousEngine:
     """Continuous (slot-level) batching over a paged KV cache.
 
-    The cache is one fixed [L, slots, max_len, G, dh] allocation; each
-    slot is an independent page with its own `pos` (kv length). Decode
-    steps run all slots at once through `model.decode_step_paged`;
-    admission prefill runs one `prefill_chunk` slice of one prompt per
-    slot per step through `model.prefill_chunk_paged`, interleaved with
-    decode, so the running requests keep streaming while a new prompt
-    fills its page. A slot freed by EOS (or max_new / page exhaustion)
-    admits the next queued request on the following step.
+    The cache is one fixed [L, slots, max_len, G, dh] allocation (the
+    seq dim shrinks to `window` for sliding-window configs — each slot
+    keeps a [window] ring with its own write cursor `pos % window`; for
+    `kv_quant` configs the values are int8 with per-slot [L, slots, S, G]
+    scales); each slot is an independent page with its own `pos` (kv
+    length). Decode steps run all slots at once through
+    `model.decode_step_paged`; admission prefill runs one `prefill_chunk`
+    slice of one prompt per slot per step through
+    `model.prefill_chunk_paged`, interleaved with decode, so the running
+    requests keep streaming while a new prompt fills its page. A slot
+    freed by EOS (or max_new / page exhaustion) admits the next queued
+    request on the following step.
 
-    Greedy decoding only: continuous batching interleaves requests at
-    step granularity, so a shared sampling key would make output depend
-    on co-residents; the wave path keeps the sampling surface.
+    Sampling: `submit(..., greedy=False, seed=s)` gives the request its
+    own PRNG stream `fold_in(PRNGKey(s), rid)`; draw t folds in the
+    number of tokens already emitted. Because paged decode rows are
+    independent and the stream depends only on (seed, rid), a request's
+    sampled tokens are bit-identical whatever else is co-resident.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: int = 2,
                  prefill_chunk: int = 32):
+        """Allocate the paged cache (`slots` pages of `max_len` positions,
+        rounded up to whole prefill chunks; `min(max_len, window)` ring
+        positions for sliding-window configs) and jit the paged decode /
+        chunk-prefill executables. Raises ValueError for configs without
+        slot-paged support (`model.supports_paged`)."""
         if not model.supports_paged(cfg):
             raise ValueError(
                 f"{cfg.name}: family/config without slot-paged KV support "
@@ -110,8 +141,8 @@ class ContinuousEngine:
                 cfg, p, c, t, pos, act),
             donate_argnums=(1,))
         self._chunk = jax.jit(
-            lambda p, c, t, slot, off: model.prefill_chunk_paged(
-                cfg, p, c, t, slot, off),
+            lambda p, c, t, slot, off, lim: model.prefill_chunk_paged(
+                cfg, p, c, t, slot, off, lim, page_len=self._page_len),
             donate_argnums=(1,))
         # host-side slot state
         self.pos = np.zeros(slots, np.int32)
@@ -136,25 +167,44 @@ class ContinuousEngine:
     # ------------------------------------------------------------- intake
 
     def submit(self, prompt: np.ndarray, max_new: int = 32,
-               rid: Optional[int] = None) -> int:
+               rid: Optional[int] = None, *, greedy: bool = True,
+               seed: int = 0) -> int:
         """Queue one request; returns its rid. The prompt is truncated to
         the last max_len - max_new tokens so the page can always hold the
-        whole generation."""
+        whole generation. `greedy=False` samples from this request's own
+        PRNG stream `fold_in(PRNGKey(seed), rid)` — pass an explicit
+        `rid` to make a sampled request's draws reproducible across
+        engines/runs regardless of what else is co-resident."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
         p = np.asarray(prompt, np.int32).reshape(-1)
         keep = max(self.max_len - max_new, 1)
-        req = _Request(rid, p[-keep:], max_new, time.perf_counter())
+        req = _Request(rid, p[-keep:], max_new, time.perf_counter(),
+                       greedy=greedy)
+        if not greedy:
+            req.key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
         self.queue.append(req)
         self._inflight[rid] = req
         return rid
 
+    def _draw(self, req: _Request, row: np.ndarray) -> int:
+        """Next token for `req` from its logits row [V]. Greedy: argmax.
+        Sampled: categorical under fold_in(req.key, t) where t is the
+        number of tokens already emitted — the draw depends only on
+        (seed, rid, t, row), never on co-residents."""
+        if req.greedy:
+            return int(np.argmax(row))
+        key = jax.random.fold_in(req.key, len(req.tokens))
+        return int(jax.random.categorical(key, jnp.asarray(row)))
+
     @property
     def pending(self) -> int:
+        """Requests still in flight (queued, prefilling or decoding)."""
         return len(self._inflight)
 
     def free_slots(self) -> int:
+        """Slots with no occupant (neither decoding nor admitting)."""
         return sum(1 for r in self._occupant if r is None)
 
     def available_slots(self) -> int:
@@ -165,6 +215,7 @@ class ContinuousEngine:
     # ------------------------------------------------------------- stepping
 
     def _finish(self, req: _Request, events: List[EngineEvent]) -> None:
+        """Free the request's slot and emit its terminal "done" event."""
         s = req.slot
         self.active[s] = False
         self._occupant[s] = None
@@ -174,12 +225,15 @@ class ContinuousEngine:
 
     def _emit_token(self, req: _Request, tok: int,
                     events: List[EngineEvent]) -> None:
+        """Record one emitted token; finish the request on EOS/max_new."""
         req.tokens.append(tok)
         events.append(EngineEvent(req.rid, "token", token=tok))
         if tok == self.eos_id or len(req.tokens) >= req.max_new:
             self._finish(req, events)
 
     def _admit(self, events: List[EngineEvent]) -> None:
+        """Assign queued requests to free slots (prefill starts on the
+        same step, via `_prefill_step`)."""
         for s in range(self.slots):
             if self._occupant[s] is None and self.queue:
                 req = self.queue.popleft()
@@ -202,11 +256,12 @@ class ContinuousEngine:
                 chunk = np.concatenate([chunk, np.zeros(c - real, np.int32)])
             logits, self.cache = self._chunk(
                 self.params, self.cache, jnp.asarray(chunk[None]),
-                jnp.int32(s), jnp.int32(req.filled))
+                jnp.int32(s), jnp.int32(req.filled),
+                jnp.int32(req.filled + real))
             req.filled += real
             if req.filled >= len(req.prompt):
-                row = np.asarray(logits)[0, real - 1]
-                tok = int(np.argmax(row))
+                row = np.asarray(logits, np.float32)[0, real - 1]
+                tok = self._draw(req, row)
                 self.pos[s] = len(req.prompt)
                 self.last_tok[s] = tok
                 self.active[s] = True
@@ -216,6 +271,9 @@ class ContinuousEngine:
                 req.prefill_s += time.perf_counter() - t0
 
     def _decode_step(self, events: List[EngineEvent]) -> None:
+        """One `decode_step_paged` over every active slot, then one token
+        draw per slot from its own row (greedy argmax or the request's
+        private PRNG stream — see `_draw`)."""
         if not self.active.any():
             return
         t0 = time.perf_counter()
@@ -223,7 +281,13 @@ class ContinuousEngine:
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.last_tok[:, None]),
             jnp.asarray(posv), jnp.asarray(self.active))
+        # all-greedy steps transfer only [slots] argmax ints; the full
+        # [slots, V] logits come to host only when a sampled occupant
+        # needs its row for a categorical draw
+        sampled = any(self.active[s] and not self._occupant[s].greedy
+                      for s in range(self.slots))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        logits_np = np.asarray(logits, np.float32) if sampled else None
         dt = time.perf_counter() - t0
         self.steps += 1
         self.active_slot_steps += int(self.active.sum())
@@ -233,7 +297,8 @@ class ContinuousEngine:
             req = self._occupant[s]
             req.decode_s += dt
             self.pos[s] += 1
-            tok = int(nxt[s])
+            tok = int(nxt[s]) if req.greedy else self._draw(
+                req, logits_np[s])
             self.last_tok[s] = tok
             self._emit_token(req, tok, events)
 
@@ -259,11 +324,16 @@ class ContinuousEngine:
         self.generate([np.arange(2, dtype=np.int32)], max_new=2)
         self.steps = self.active_slot_steps = 0
 
-    def generate(self, prompts: List[np.ndarray],
-                 max_new: int = 32) -> List[GenResult]:
-        """Batch convenience: submit everything, step until drained."""
+    def generate(self, prompts: List[np.ndarray], max_new: int = 32,
+                 greedy: bool = True, seed: int = 0) -> List[GenResult]:
+        """Batch convenience: submit everything, step until drained.
+        `greedy=False` samples each request from its own
+        fold_in(PRNGKey(seed), rid) stream; rids are pinned to the batch
+        index so the same (prompts, seed) call draws the same tokens no
+        matter what the engine served before."""
         assert not self._inflight, "generate() on a busy engine"
-        rids = [self.submit(p, max_new) for p in prompts]
+        rids = [self.submit(p, max_new, rid=i, greedy=greedy, seed=seed)
+                for i, p in enumerate(prompts)]
         results: Dict[int, GenResult] = {}
         while self._inflight:
             for ev in self.step():
@@ -273,9 +343,19 @@ class ContinuousEngine:
 
 
 class Engine:
+    """Serving engine over one model: `generate()` auto-routes through a
+    shared slot-paged `ContinuousEngine` for paged-capable configs and
+    falls back to the legacy length-bucketed wave path
+    (`generate_wave`) for the rest (M-RoPE, encdec, recurrent state) or
+    when forced with `continuous=False`."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  eos_id: int = 2, prefill_chunk: Optional[int] = None,
                  slots: int = 4):
+        """`max_len`: page/cache budget per request (prompt + generation);
+        `slots`: default concurrent-request count of the shared
+        ContinuousEngine; `prefill_chunk`: tokens per admission prefill
+        chunk (continuous path only)."""
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -300,10 +380,17 @@ class Engine:
         return self._cont[n]
 
     def _grow_cache(self, cache, b: int):
-        """Caches come back sized to the prompt; decode needs max_len."""
+        """Caches come back sized to the prompt; decode needs max_len —
+        capped at the sliding window for SWA configs: growing a ring past
+        its window would change the `pos % len` cursor modulus that the
+        prefill roll already baked into the layout."""
+        target = self.max_len
+        if self.cfg.family in ("dense", "moe") and self.cfg.sliding_window:
+            target = min(target, self.cfg.sliding_window)
+
         def grow(x):
-            if x.ndim in (4, 5) and x.shape[2] < self.max_len:
-                pad = self.max_len - x.shape[2]
+            if x.ndim in (4, 5) and x.shape[2] < target:
+                pad = target - x.shape[2]
                 z = jnp.zeros(x.shape[:2] + (pad,) + x.shape[3:], x.dtype)
                 return jnp.concatenate([x, z], axis=2)
             return x
@@ -318,17 +405,20 @@ class Engine:
     def generate(self, prompts: List[np.ndarray], max_new: int = 32,
                  greedy: bool = True, seed: int = 0,
                  continuous: Optional[bool] = None) -> List[GenResult]:
-        """Compatibility wrapper. `continuous=None` auto-routes greedy
-        requests through the slot-paged ContinuousEngine when the config
-        supports it (token-identical to the wave path); `False` forces the
-        legacy length-bucketed waves (equal lengths keep causal semantics
-        exact without pad masking), which sampling always uses."""
+        """Compatibility wrapper. `continuous=None` auto-routes requests
+        through the slot-paged ContinuousEngine when the config supports
+        it (greedy output is token-identical to the wave path; sampled
+        requests draw from per-request fold_in(PRNGKey(seed), rid)
+        streams, so their tokens don't depend on what else is in the
+        batch). `False` forces the legacy length-bucketed waves (equal
+        lengths keep causal semantics exact without pad masking; wave
+        sampling advances one shared key, so its draws DO depend on the
+        batch composition — kept only as the pre-paged baseline)."""
         if continuous is None:
-            continuous = greedy and model.supports_paged(self.cfg)
+            continuous = model.supports_paged(self.cfg)
         if continuous:
-            if not greedy:
-                raise ValueError("continuous batching is greedy-only")
-            return self.continuous().generate(prompts, max_new=max_new)
+            return self.continuous().generate(prompts, max_new=max_new,
+                                              greedy=greedy, seed=seed)
         buckets: dict[int, List[int]] = {}
         for i, p in enumerate(prompts):
             buckets.setdefault(len(p), []).append(i)

@@ -204,13 +204,16 @@ class RAGBase:
     # -------------------------------------------- request-centric serving
 
     def session(self, *, max_new: int = 16, slots: int = 4,
-                retrieve_chunk: int = 4):
+                retrieve_chunk: int = 4, greedy: bool = True,
+                seed: int = 0):
         """A RagSession over this pipeline: submit/step/stream with
         continuous-batching decode (raises ValueError when `gen_arch`
-        has no slot-paged KV path)."""
+        has no slot-paged KV path). `greedy=False` samples each request
+        from its own co-residency-independent PRNG stream."""
         from repro.serving.session import RagSession
         return RagSession(self, max_new=max_new, slots=slots,
-                          retrieve_chunk=retrieve_chunk)
+                          retrieve_chunk=retrieve_chunk, greedy=greedy,
+                          seed=seed)
 
     def stream(self, queries: Sequence[str] = (), *, max_new: int = 16,
                slots: int = 4, retrieve_chunk: int = 4):

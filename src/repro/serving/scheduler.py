@@ -25,6 +25,7 @@ import numpy as np
 
 @dataclass
 class Request:
+    """One queued wave-path request (legacy `Scheduler`)."""
     rid: int
     prompt: np.ndarray
     max_new: int = 32
@@ -33,6 +34,8 @@ class Request:
 
 @dataclass
 class Completion:
+    """One finished request: decoded tokens, the replica that won (first
+    completion wins under hedging) and the submit->done latency."""
     rid: int
     tokens: List[int]
     replica: int
@@ -42,6 +45,7 @@ class Completion:
 
 @dataclass
 class ReplicaState:
+    """Scheduler-side health bookkeeping for one replica."""
     healthy: bool = True
     strikes: int = 0
     served: int = 0
@@ -49,6 +53,8 @@ class ReplicaState:
 
 @dataclass
 class _SlotReq:
+    """Scheduler-internal request state: per-replica placements (engine
+    rids), progress timestamps for stall hedging, sampling mode."""
     rid: int
     prompt: np.ndarray
     max_new: int
@@ -57,6 +63,8 @@ class _SlotReq:
     placements: Dict[int, int] = field(default_factory=dict)
     last_progress_s: float = 0.0
     hedged: bool = False
+    greedy: bool = True
+    seed: int = 0
 
 
 class SlotScheduler:
@@ -76,19 +84,27 @@ class SlotScheduler:
         self._live: Dict[int, _SlotReq] = {}
         self._next_rid = 0
 
-    def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int = 32, *,
+               greedy: bool = True, seed: int = 0) -> int:
+        """Queue one request; returns its scheduler rid. `greedy=False`
+        samples on whichever replica hosts it (per-request PRNG streams
+        are keyed by the ENGINE-assigned rid, so a hedged copy on a
+        second replica may draw a different — equally valid — sample;
+        first completion still wins)."""
         rid = self._next_rid
         self._next_rid += 1
         req = _SlotReq(rid, np.asarray(prompt, np.int32), max_new,
-                       time.perf_counter())
+                       time.perf_counter(), greedy=greedy, seed=seed)
         self.queue.append(req)
         self._live[rid] = req
         return rid
 
     def _healthy(self) -> List[int]:
+        """Indices of replicas still accepting work."""
         return [i for i, s in enumerate(self.state) if s.healthy]
 
     def _strike(self, ridx: int) -> None:
+        """One failure strike; at max_strikes the replica is drained."""
         self.state[ridx].strikes += 1
         if self.state[ridx].strikes >= self.max_strikes:
             self._drain(ridx)
@@ -102,7 +118,16 @@ class SlotScheduler:
                 self.queue.appendleft(req)
 
     def _place(self, req: _SlotReq, ridx: int) -> None:
-        erid = self.engines[ridx].submit(req.prompt, req.max_new)
+        """Submit `req` to replica `ridx` and record the placement.
+        Sampling kwargs are only forwarded for sampled requests so
+        greedy scheduling keeps working against any engine-like with a
+        plain `submit(prompt, max_new)` signature."""
+        eng = self.engines[ridx]
+        if req.greedy:
+            erid = eng.submit(req.prompt, req.max_new)
+        else:
+            erid = eng.submit(req.prompt, req.max_new, greedy=False,
+                              seed=req.seed)
         req.placements[ridx] = erid
         req.last_progress_s = time.perf_counter()
 
@@ -121,6 +146,8 @@ class SlotScheduler:
             self._place(self.queue.popleft(), ridx)
 
     def _hedge_stalled(self) -> None:
+        """Re-place requests with no progress for `stall_s` on another
+        replica (first completion wins); the stalled replica is struck."""
         now = time.perf_counter()
         for req in self._live.values():
             if not req.placements or req.hedged:
@@ -176,6 +203,11 @@ class SlotScheduler:
 
 
 class Scheduler:
+    """Legacy wave scheduler: length-bucketed waves over engine
+    callables with whole-wave deadline/failure hedging — kept for
+    generators without a slot-paged engine (see SlotScheduler for the
+    request-centric path)."""
+
     def __init__(self, replicas: List[Callable], *, max_wave: int = 8,
                  deadline_s: float = 60.0, max_strikes: int = 2):
         """replicas: callables (prompts, max_new) -> list of token lists.
@@ -189,15 +221,20 @@ class Scheduler:
         self._next_rid = 0
 
     def submit(self, prompt: np.ndarray, max_new: int = 32) -> int:
+        """Queue one request; returns its rid (wave path is greedy-only —
+        it predates per-request PRNG streams)."""
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
         return rid
 
     def _healthy(self) -> List[int]:
+        """Indices of replicas still accepting work."""
         return [i for i, s in enumerate(self.state) if s.healthy]
 
     def _form_wave(self) -> List[Request]:
+        """Take up to max_wave equal-length requests (largest length
+        bucket first) off the queue."""
         if not self.queue:
             return []
         # bucket by prompt length; take the largest bucket first
@@ -212,6 +249,8 @@ class Scheduler:
 
     def _dispatch(self, wave: List[Request], ridx: int,
                   hedged: bool) -> Optional[List[Completion]]:
+        """Run one wave on replica `ridx`; None (plus a strike) on
+        failure or deadline overrun — the caller re-dispatches."""
         t0 = time.perf_counter()
         try:
             outs = self.replicas[ridx]([r.prompt for r in wave],
@@ -233,6 +272,8 @@ class Scheduler:
                 for r, o in zip(wave, outs)]
 
     def run(self) -> List[Completion]:
+        """Drain the queue wave by wave (round-robin over healthy
+        replicas, re-dispatching failed/overdue waves)."""
         done: List[Completion] = []
         rr = 0
         while self.queue:

@@ -30,6 +30,9 @@ STATES = ("submitted", "retrieved", "condensed", "decoding", "done")
 
 @dataclass
 class RagRequest:
+    """One query's lifecycle record inside a RagSession (state machine
+    over `STATES`; `answer` carries the RAGAnswer once condensed and is
+    completed in place when decode finishes)."""
     req_id: int
     query: str
     max_new: int
@@ -40,6 +43,7 @@ class RagRequest:
 
     @property
     def latency_s(self) -> Optional[float]:
+        """submit -> done wall time (None while still in flight)."""
         return None if self.done_s is None else self.done_s - self.submitted_s
 
 
@@ -58,10 +62,19 @@ class RagSession:
     """Streaming session over one RAG pipeline + one ContinuousEngine."""
 
     def __init__(self, pipe, *, max_new: int = 16, slots: int = 4,
-                 retrieve_chunk: int = 4):
+                 retrieve_chunk: int = 4, greedy: bool = True,
+                 seed: int = 0):
+        """`pipe`: a RAG pipeline with `_ensure_slm`/`answer_batch`.
+        `greedy=False` samples every request from its own
+        fold_in(PRNGKey(seed), engine-rid) stream (ContinuousEngine
+        semantics: draws are independent of co-resident requests).
+        Raises ValueError when the pipeline's generation arch has no
+        slot-paged KV path (`model.supports_paged`)."""
         self.pipe = pipe
         self.max_new = max_new
         self.retrieve_chunk = retrieve_chunk
+        self.greedy = greedy
+        self.seed = seed
         slm = pipe._ensure_slm()
         self.engine: ContinuousEngine = slm.continuous(slots)  # may raise
         self._slm = slm
@@ -77,6 +90,8 @@ class RagSession:
     # ------------------------------------------------------------- intake
 
     def submit(self, query: str, max_new: Optional[int] = None) -> int:
+        """Queue one query; returns its request id. Retrieval/condense
+        happens in a later `step()` (chunked, so it overlaps decode)."""
         rid = self._next_id
         self._next_id += 1
         req = RagRequest(rid, query, max_new or self.max_new)
@@ -86,6 +101,7 @@ class RagSession:
 
     @property
     def pending(self) -> int:
+        """Requests not yet done (queued for retrieval or decoding)."""
         return len(self._queued) + len(self._decoding)
 
     # ----------------------------------------------------------- stepping
@@ -107,11 +123,14 @@ class RagSession:
             events.append(RagEvent(req.req_id, "condensed",
                                    ans.prompt_tokens))
             prompt = self._slm.encode_prompt(ans.prompt, bucket=False)
-            erid = self.engine.submit(prompt, req.max_new)
+            erid = self.engine.submit(prompt, req.max_new,
+                                      greedy=self.greedy, seed=self.seed)
             self._decoding[erid] = req
             req.state = "decoding"
 
     def _engine_step(self, events: List[RagEvent]) -> None:
+        """Advance the ContinuousEngine one step and translate its
+        token/done events onto the session's requests."""
         tok = self._slm.tokenizer
         for ev in self.engine.step():
             req = self._decoding.get(ev.rid)

@@ -259,6 +259,44 @@ def test_decode_attention_sweep(B, H, G, dh, S, kvlen, dtype):
                                rtol=tol, atol=tol)
 
 
+def test_decode_attention_per_slot_lengths():
+    """Slot-paged batches: kv_len is a per-row [B] vector — every row is
+    masked to its OWN length, matching per-row calls of the oracle."""
+    B, H, G, dh, S = 4, 8, 2, 32, 128
+    q = jax.random.normal(k(0), (B, H, dh))
+    kk = jax.random.normal(k(1), (B, S, G, dh))
+    vv = jax.random.normal(k(2), (B, S, G, dh))
+    lens = jnp.asarray([3, 100, 128, 57], jnp.int32)
+    o1 = decode_attention(q, kk, vv, lens)
+    for b in range(B):
+        row = ref.decode_attention(q[b:b + 1], kk[b:b + 1], vv[b:b + 1],
+                                   int(lens[b]))
+        np.testing.assert_allclose(np.asarray(o1[b:b + 1], np.float32),
+                                   np.asarray(row, np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_attention_ring_clamps_per_slot():
+    """Ring pages: a slot whose absolute position exceeds the ring size
+    attends ALL S filled slots (mask length min(kv_len, S)), while a
+    co-resident still inside the ring keeps its shorter mask. Kernel and
+    oracle agree, and ring=True differs from the unclamped call only via
+    the clamp."""
+    B, H, G, dh, S = 2, 4, 1, 32, 64
+    q = jax.random.normal(k(3), (B, H, dh))
+    kk = jax.random.normal(k(4), (B, S, G, dh))
+    vv = jax.random.normal(k(5), (B, S, G, dh))
+    lens = jnp.asarray([150, 20], jnp.int32)       # slot 0 wrapped, 1 not
+    o1 = decode_attention(q, kk, vv, lens, ring=True)
+    o2 = ref.decode_attention(q, kk, vv, lens, ring=True)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    full = ref.decode_attention(q, kk, vv, jnp.asarray([64, 20], jnp.int32))
+    np.testing.assert_allclose(np.asarray(o2, np.float32),
+                               np.asarray(full, np.float32))
+
+
 @pytest.mark.parametrize("B,H,S,dh,window", [
     (1, 2, 256, 32, None),
     (1, 2, 300, 64, 64),

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Dead-link checker for the repo's markdown docs (CI `docs` job).
+
+Scans every tracked *.md file for markdown links `[text](target)` and
+bare `file:line` anchors in backticks, and fails (exit 1) when a
+relative target does not exist on disk. Rules:
+
+  - http(s)/mailto targets are skipped (no network in CI);
+  - pure fragment targets (`#section`) are skipped;
+  - `path#fragment` is checked for the file part only;
+  - `path:123` / `path:12-34` file:line anchors resolve to the file;
+  - targets resolve relative to the md file's directory first, then the
+    repo root, then `src/repro/` (the docs' conventional shorthand for
+    module paths, e.g. `core/scr.py` or `serving/engine.py:87`).
+
+Usage: python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+ANCHOR_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|yml|yaml|txt)"
+                       r"(?::\d+(?:-\d+)?)?)`")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".venv", "node_modules",
+             ".claude"}
+
+
+def _md_files(root: Path):
+    for p in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def _strip(target: str) -> str | None:
+    """Normalize a link target to a filesystem path, or None to skip."""
+    if target.startswith(("http://", "https://", "mailto:")):
+        return None
+    target = target.split("#", 1)[0]
+    if not target:
+        return None
+    # file:line / file:line-line anchors
+    m = re.match(r"^(.*?):\d+(?:-\d+)?$", target)
+    if m:
+        target = m.group(1)
+    return target or None
+
+
+def _exists(root: Path, base: Path, rel: str) -> bool:
+    rel = rel.strip()
+    if rel.startswith("/"):          # repo-absolute
+        return (root / rel.lstrip("/")).exists()
+    return ((base / rel).exists() or (root / rel).exists()
+            or (root / "src" / "repro" / rel).exists())
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(
+        __file__).resolve().parent.parent
+    dead: list[str] = []
+    n_links = 0
+    for md in _md_files(root):
+        text = md.read_text(encoding="utf-8", errors="replace")
+        targets = [t for t in LINK_RE.findall(text)]
+        targets += [t for t in ANCHOR_RE.findall(text) if "/" in t]
+        for raw in targets:
+            rel = _strip(raw)
+            if rel is None:
+                continue
+            n_links += 1
+            if not _exists(root, md.parent, rel):
+                dead.append(f"{md.relative_to(root)}: ({raw})")
+    if dead:
+        print(f"[check_links] {len(dead)} dead link(s) "
+              f"(of {n_links} checked):")
+        for d in dead:
+            print(f"  {d}")
+        return 1
+    print(f"[check_links] ok: {n_links} intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
