@@ -21,6 +21,13 @@ A second section exercises the post-PR-5 coverage of the paged path:
 continuous-only rows for a sliding-window (ring-page) config, an int8-KV
 config, an MoE config and a sampled (non-greedy, per-slot PRNG streams)
 run — quick mode keeps one swa + one sampled row for the CI smoke.
+
+A third section measures GOODPUT UNDER CHAOS: 3 SlotScheduler replicas
+wrapped in a seeded FaultPlan (replica crashes, slot stalls, slow steps —
+serving/faults.py), per-request deadlines, and a
+completed-within-deadline / submitted column beside the latency
+percentiles. `python -m benchmarks.bench_serving --chaos` runs just that
+section (the CI chaos smoke).
 """
 from __future__ import annotations
 
@@ -144,6 +151,57 @@ def _run_variants(mode: str, prompts, gens):
              f"slot_util={ce.utilisation():.2f};n={len(prompts)}")
 
 
+def run_chaos(mode="quick", seed=0):
+    """Goodput under a seeded FaultPlan: every request either completes
+    within its deadline or is explicitly shed — the emitted row asserts
+    the partition (lost == 0) on top of the latency percentiles."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.faults import FaultPlan, wrap_replicas
+    from repro.serving.scheduler import SlotScheduler
+
+    n = 16 if mode == "quick" else 48
+    prompts, gens = _workload(mode, seed=seed)
+    while len(prompts) < n:
+        more, mg = _workload(mode, seed=seed + len(prompts))
+        prompts, gens = prompts + more, np.concatenate([gens, mg])
+    prompts, gens = prompts[:n], gens[:n]
+
+    cfg = get_reduced("qwen25_0_5b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    base = ContinuousEngine(cfg, params, slots=2, max_len=MAX_LEN)
+    base.warmup()
+    engines = [base] + [base.clone() for _ in range(2)]
+    for e in engines[1:]:
+        e.warmup()
+
+    plan = FaultPlan.quick(seed)
+    sched = SlotScheduler(wrap_replicas(engines, plan), stall_s=1.0,
+                          probe_cooldown_s=0.1, deadline_s=60.0)
+    t0 = time.perf_counter()
+    deadlines = {}
+    for i, p in enumerate(prompts):
+        # every 5th request gets a tight deadline (exercises shedding)
+        d = 0.02 if i % 5 == 4 else 60.0
+        deadlines[sched.submit(p, int(gens[i]), deadline_s=d)] = d
+    done = sched.run()
+    wall = time.perf_counter() - t0
+
+    lat = np.array([c.latency_s for c in done]) if done else np.zeros(1)
+    p50, p95 = np.percentile(lat, [50, 95])
+    good = sum(1 for c in done if c.latency_s <= deadlines[c.rid])
+    cnt = sched.counters
+    lost = n - len(done) - len(sched.shed)
+    emit("serving.chaos", p50 * 1e6,
+         f"p95_ms={p95 * 1e3:.0f};goodput={good}/{n};"
+         f"shed={len(sched.shed)};lost={lost};hedges={cnt.hedges};"
+         f"drains={cnt.drains};recoveries={cnt.recoveries};"
+         f"wall_s={wall:.2f}")
+    assert lost == 0, f"{lost} requests silently lost under chaos"
+
+
 def run(mode="quick"):
     import jax
     from repro.configs import get_reduced
@@ -187,7 +245,18 @@ def run(mode="quick"):
          f"continuous_beats_wave={bool(p95c < p95w)}")
 
     _run_variants(mode, prompts, gens)
+    run_chaos(mode)
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick", choices=["quick", "full"])
+    ap.add_argument("--chaos", action="store_true",
+                    help="goodput-under-chaos section only")
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    if a.chaos:
+        run_chaos(a.mode, a.seed)
+    else:
+        run(a.mode)

@@ -9,9 +9,17 @@
   # multi-replica: SlotScheduler over N continuous engines
   PYTHONPATH=src python -m repro.launch.serve --replicas 2
 
+  # serving under fire: per-request deadlines + deterministic chaos
+  PYTHONPATH=src python -m repro.launch.serve --replicas 3 --chaos \
+      --deadline-s 30
+
 Wires: synthetic corpus -> embedder -> EcoVector -> SCR -> RagSession
 (continuous-batching decode on the slot-paged engine; retrieval/SCR of the
-next queries overlaps decode of the previous ones).
+next queries overlaps decode of the previous ones). `--deadline-s` bounds
+per-request latency (expired requests are shed, their slots freed);
+`--max-pending` bounds session admission (overload degrades, then sheds);
+`--chaos` wraps each replica in a seeded FaultPlan (serving/faults.py)
+and reports goodput = completed-within-deadline / submitted.
 """
 from __future__ import annotations
 
@@ -58,7 +66,9 @@ def run_stream(pipe, corpus, args) -> None:
     gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
     arrivals = np.cumsum(gaps)
     sess = pipe.session(max_new=args.max_new, slots=args.slots,
-                        greedy=not args.sample, seed=args.seed)
+                        greedy=not args.sample, seed=args.seed,
+                        max_pending=args.max_pending,
+                        deadline_s=args.deadline_s)
     t0 = time.perf_counter()
     submitted = 0
     latencies = []
@@ -73,7 +83,7 @@ def run_stream(pipe, corpus, args) -> None:
             time.sleep(min(arrivals[submitted] - now, 0.05))
             continue
         for ev in sess.step():
-            if ev.kind in ("retrieved", "done"):
+            if ev.kind in ("retrieved", "done", "shed", "failed"):
                 trace.append((time.perf_counter() - t0, ev.req_id, ev.kind))
             if ev.kind == "done":
                 req = sess.requests[ev.req_id]
@@ -81,23 +91,34 @@ def run_stream(pipe, corpus, args) -> None:
     wall = time.perf_counter() - t0
     p50, p95 = _percentiles(latencies)
     eng = sess.engine
+    c = sess.counters
     print(f"[serve --stream] {n} requests at ~{args.arrival_qps:.1f} qps "
           f"in {wall:.2f}s | latency p50={p50:.3f}s p95={p95:.3f}s | "
           f"slot util={eng.utilisation():.2f} "
-          f"({eng.steps} decode steps x {eng.slots} slots)")
+          f"({eng.steps} decode steps x {eng.slots} slots) | "
+          f"done={c.completed} shed={c.shed_deadline + c.shed_overload} "
+          f"degraded={c.degraded} failed={c.failed}")
     for t, rid, kind in trace[: 3 * 3]:
         print(f"  t={t:6.3f}s req={rid} {kind}")
 
 
 def run_replicas(pipe, corpus, args) -> None:
     """SlotScheduler over N continuous-engine replicas (slot admission,
-    per-slot stall hedging, failover)."""
+    per-slot stall hedging, failover). With `--chaos` each replica is
+    wrapped in its seeded FaultPlan sub-schedule and the line reports
+    goodput (completed within deadline / submitted)."""
     from repro.serving.scheduler import SlotScheduler
     slm = pipe._ensure_slm()
     engines = [slm.continuous(args.slots)]
     for _ in range(1, args.replicas):
         engines.append(engines[0].clone())
-    sched = SlotScheduler(engines)
+    if args.chaos:
+        from repro.serving.faults import FaultPlan, wrap_replicas
+        engines = wrap_replicas(engines, FaultPlan.quick(args.seed))
+    sched = SlotScheduler(engines, max_queue=args.max_queue,
+                          deadline_s=args.deadline_s,
+                          stall_s=2.0 if args.chaos else 30.0,
+                          probe_cooldown_s=0.25)
     questions = [e.question for e in corpus.examples[: args.questions]]
     answers = pipe.answer_batch(questions)          # retrieval + SCR
     t0 = time.perf_counter()
@@ -108,10 +129,15 @@ def run_replicas(pipe, corpus, args) -> None:
     wall = time.perf_counter() - t0
     lat = [c.latency_s for c in completions]
     p50, p95 = _percentiles(lat)
+    cnt = sched.counters
+    deadline = args.deadline_s or float("inf")
+    good = sum(1 for c in completions if c.latency_s <= deadline)
     print(f"[serve --replicas {args.replicas}] {len(completions)} "
           f"completions in {wall:.2f}s | p50={p50:.3f}s p95={p95:.3f}s | "
-          f"served per replica="
-          f"{[s.served for s in sched.state]}")
+          f"goodput={good}/{cnt.submitted} | shed={len(sched.shed)} "
+          f"degraded={cnt.degraded} hedges={cnt.hedges} "
+          f"drains={cnt.drains} recoveries={cnt.recoveries} | "
+          f"served per replica={[s.served for s in sched.state]}")
     for c in completions[:3]:
         print(f"  rid={c.rid} replica={c.replica} hedged={c.hedged} "
               f"tokens={c.tokens[:8]}")
@@ -134,6 +160,18 @@ def main():
                          "of greedy — --stream path")
     ap.add_argument("--arrival-qps", type=float, default=4.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline; expired requests are "
+                         "shed with their engine slot freed")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="session admission bound (--stream): overload "
+                         "degrades past half, sheds at the bound")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="scheduler queue bound (--replicas): "
+                         "degrade-then-shed overflow policy")
+    ap.add_argument("--chaos", action="store_true",
+                    help="wrap each replica in a seeded FaultPlan "
+                         "(crashes/stalls/slow steps) — --replicas path")
     args = ap.parse_args()
 
     corpus = make_qa_corpus("squad", n_docs=args.docs,

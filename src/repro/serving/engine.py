@@ -155,6 +155,7 @@ class ContinuousEngine:
         # utilisation counters (decode steps only)
         self.steps = 0
         self.active_slot_steps = 0
+        self.cancelled = 0
 
     def clone(self, *, slots: Optional[int] = None) -> "ContinuousEngine":
         """An independent replica: same params/config, its own paged cache
@@ -211,6 +212,26 @@ class ContinuousEngine:
         """Admission capacity: free slots minus already-queued requests
         (what a scheduler should look at, not raw free_slots)."""
         return self.free_slots() - len(self.queue)
+
+    def cancel(self, rid: int) -> bool:
+        """Abandon one in-flight request (deadline expiry, hedged copy
+        superseded, scheduler failover): its slot is freed immediately —
+        the next `step()` can admit a queued prompt into it — and no
+        further events are emitted for the rid. Returns False when the
+        rid is unknown or already finished."""
+        req = self._inflight.pop(rid, None)
+        if req is None:
+            return False
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
+        s = req.slot
+        if s >= 0 and self._occupant[s] is req:
+            self._occupant[s] = None
+            self.active[s] = False
+        self.cancelled += 1
+        return True
 
     # ------------------------------------------------------------- stepping
 

@@ -76,6 +76,11 @@ class RAGBase:
         self.top_k = top_k
         self.slm = SLM_SPEEDS[slm]
         self.generator = generator
+        # degradation-ladder state: on an index-search exception the
+        # pipeline answers from the last good retrieval (or the corpus
+        # head) instead of raising — counted, never silent
+        self.retrieval_fallbacks = 0
+        self._last_good_ids: Optional[List[List[int]]] = None
         # arch for answer(..., generate=True); the Table-6 `slm` keys are
         # speed models only — real generation always runs a config that
         # exists in repro.configs (reduced to CPU smoke size)
@@ -103,15 +108,34 @@ class RAGBase:
 
     def _retrieve_batch(self, qvs: np.ndarray, k: int) -> List[List[int]]:
         """Retrieve for a [B, d] batch of query vectors in one call when
-        the index has a batched device path, else per-query host search."""
+        the index has a batched device path, else per-query host search.
+        An index exception degrades instead of failing the request: the
+        last good retrieval's ids (or the corpus head) are reused and
+        `retrieval_fallbacks` counts the decision."""
         qvs = np.atleast_2d(np.asarray(qvs, np.float32))
-        if self._use_device_retrieval() and hasattr(self.index,
-                                                    "search_device_batched"):
-            ids_b, _ = self.index.search_device_batched(qvs, k=k, n_probe=4)
-        else:
-            ids_b = [self.index.search(qv, k=k, n_probe=4)[0] for qv in qvs]
-        return [[int(i) for i in row if 0 <= int(i) < len(self.docs)]
-                for row in ids_b]
+        try:
+            if self._use_device_retrieval() and hasattr(
+                    self.index, "search_device_batched"):
+                ids_b, _ = self.index.search_device_batched(qvs, k=k,
+                                                            n_probe=4)
+            else:
+                ids_b = [self.index.search(qv, k=k, n_probe=4)[0]
+                         for qv in qvs]
+        except Exception:
+            self.retrieval_fallbacks += 1
+            return self._fallback_ids(len(qvs), k)
+        clean = [[int(i) for i in row if 0 <= int(i) < len(self.docs)]
+                 for row in ids_b]
+        self._last_good_ids = clean
+        return clean
+
+    def _fallback_ids(self, n: int, k: int) -> List[List[int]]:
+        """Stale-but-serviceable doc ids when the index is down: cycle
+        the last successful batch's rows, else the first k documents."""
+        if self._last_good_ids:
+            rows = self._last_good_ids
+            return [list(rows[i % len(rows)]) for i in range(n)]
+        return [list(range(min(k, len(self.docs)))) for _ in range(n)]
 
     def _retrieve(self, qv, k):
         return self._retrieve_batch(qv[None], k)[0]
@@ -205,15 +229,19 @@ class RAGBase:
 
     def session(self, *, max_new: int = 16, slots: int = 4,
                 retrieve_chunk: int = 4, greedy: bool = True,
-                seed: int = 0):
+                seed: int = 0, max_pending: Optional[int] = None,
+                deadline_s: Optional[float] = None):
         """A RagSession over this pipeline: submit/step/stream with
         continuous-batching decode (raises ValueError when `gen_arch`
         has no slot-paged KV path). `greedy=False` samples each request
-        from its own co-residency-independent PRNG stream."""
+        from its own co-residency-independent PRNG stream. `max_pending`
+        bounds session admission (degrade past half, shed at the bound);
+        `deadline_s` is the default per-request deadline."""
         from repro.serving.session import RagSession
         return RagSession(self, max_new=max_new, slots=slots,
                           retrieve_chunk=retrieve_chunk, greedy=greedy,
-                          seed=seed)
+                          seed=seed, max_pending=max_pending,
+                          deadline_s=deadline_s)
 
     def stream(self, queries: Sequence[str] = (), *, max_new: int = 16,
                slots: int = 4, retrieve_chunk: int = 4):
@@ -335,6 +363,7 @@ class MobileRAG(RAGBase):
         self.scr_cfg = scr
         self.window_index = None
         self.scr_build_s = 0.0
+        self.scr_fallbacks = 0       # SCR stage raised -> full-doc prompt
         if use_window_index:
             t0 = time.perf_counter()
             self.window_index = WindowIndex(self.embed, scr).build(self.docs)
@@ -351,16 +380,26 @@ class MobileRAG(RAGBase):
     def _finish(self, query: str, ids: List[int], t_ret: float,
                 qv=None) -> RAGAnswer:
         t1 = time.perf_counter()
-        if self.window_index is not None:
-            self._sync_window_index()
-            qvs = (None if qv is None
-                   else np.asarray(qv, np.float32)[None])
-            res = apply_scr_batch([query], [ids], self.window_index,
-                                  self.embed, qvs=qvs)[0]
-        else:
-            res = apply_scr(query, [self.docs[i] for i in ids], self.embed,
-                            self.scr_cfg)
+        res = None
+        try:
+            if self.window_index is not None:
+                self._sync_window_index()
+                qvs = (None if qv is None
+                       else np.asarray(qv, np.float32)[None])
+                res = apply_scr_batch([query], [ids], self.window_index,
+                                      self.embed, qvs=qvs)[0]
+            else:
+                res = apply_scr(query, [self.docs[i] for i in ids],
+                                self.embed, self.scr_cfg)
+        except Exception:
+            # degradation ladder: SCR down -> serve the full retrieved
+            # docs (NaiveRAG-shaped prompt) rather than fail the request
+            self.scr_fallbacks += 1
         t_post = time.perf_counter() - t1
+        if res is None:
+            prompt = self._make_prompt(query, [self.docs[i] for i in ids],
+                                       ids)
+            return self._finalize(query, prompt, ids, t_ret, t_post)
         prompt = build_prompt(query, res)
         ids = [ids[i] for i in res.order]
         return self._finalize(query, prompt, ids, t_ret, t_post, scr=res)
@@ -386,8 +425,18 @@ class MobileRAG(RAGBase):
         ids_b = self._retrieve_batch(qvs, self.top_k)
         t_ret = (time.perf_counter() - t0) / len(queries)
         t1 = time.perf_counter()
-        results = apply_scr_batch(queries, ids_b, self.window_index,
-                                  self.embed, qvs=qvs)
+        try:
+            results = apply_scr_batch(queries, ids_b, self.window_index,
+                                      self.embed, qvs=qvs)
+        except Exception:
+            # SCR stage down for the whole batch: degrade every query to
+            # its full retrieved docs instead of raising
+            self.scr_fallbacks += 1
+            t_post = (time.perf_counter() - t1) / len(queries)
+            return [self._finalize(
+                        q, self._make_prompt(q, [self.docs[i] for i in ids],
+                                             ids), ids, t_ret, t_post)
+                    for q, ids in zip(queries, ids_b)]
         t_post = (time.perf_counter() - t1) / len(queries)
         out = []
         for q, ids, res in zip(queries, ids_b, results):

@@ -5,9 +5,21 @@ replicas, slot admission instead of wave formation (a queued request goes
 to the replica with the most free slots; the engines themselves admit on
 EOS), and hedging on per-slot stall — a request that stops producing
 tokens for `stall_s` while its replica is being stepped is re-submitted to
-another replica, first completion wins. A replica whose `step()` raises is
-drained: its in-flight requests re-queue and it is marked unhealthy — the
-serve-side analogue of the training-side RestartManager.
+another replica, first completion wins; the stall budget re-arms after
+every hedge, up to `max_hedges` placements per request.
+
+Failure handling is built on the shared `dist.fault.HealthTracker`
+strike/drain/probation state machine (the serve-side analogue of the
+training-side RestartManager): a replica whose `step()` raises is struck
+and its in-flight requests re-queued (an exception leaves engine state
+unknown); at `max_strikes` it drains; a drained replica re-enters service
+by passing one canary request after a cooldown (exponential backoff per
+failed probe), and strikes decay on success so transient errors don't
+accumulate into a drain. Requests carry optional deadlines — an expired
+request is cancelled (its engine slots freed via `ContinuousEngine.cancel`)
+and reported in `shed`, never silently lost — and the queue can be bounded
+with a reject-or-degrade overflow policy. Every shed / degrade / failover
+decision increments a `SchedCounters` field.
 
 `Scheduler` keeps the legacy wave surface (length-bucketed waves over
 engine callables with whole-wave deadline hedging) for generators without
@@ -21,6 +33,8 @@ from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
+
+from repro.dist.fault import HealthConfig, HealthTracker
 
 
 @dataclass
@@ -44,25 +58,78 @@ class Completion:
 
 
 @dataclass
+class Shed:
+    """One request the scheduler explicitly gave up on (deadline expiry
+    or queue overflow). Together with `Completion`s these partition every
+    submitted rid: nothing is ever silently lost."""
+    rid: int
+    reason: str                     # "deadline" | "queue_full"
+    latency_s: float
+
+
+@dataclass
+class SchedCounters:
+    """Every admission/shed/degrade/failover decision, counted."""
+    submitted: int = 0
+    completed: int = 0
+    shed_deadline: int = 0
+    shed_queue: int = 0
+    degraded: int = 0
+    hedges: int = 0
+    strikes: int = 0
+    drains: int = 0
+    probes: int = 0
+    recoveries: int = 0
+
+
+@dataclass
 class ReplicaState:
-    """Scheduler-side health bookkeeping for one replica."""
+    """Health bookkeeping for one legacy wave replica. `warmed` marks the
+    first successful dispatch: its wall time includes jit compilation, so
+    it is excluded from the deadline check (a cold replica must not eat a
+    spurious strike)."""
     healthy: bool = True
     strikes: int = 0
     served: int = 0
+    warmed: bool = False
+
+
+@dataclass
+class ReplicaHealth:
+    """SlotScheduler-side record for one replica: the shared
+    HealthTracker state machine plus served-work and canary bookkeeping
+    (`canary` is the scheduler rid probing this replica, if any)."""
+    tracker: HealthTracker
+    served: int = 0
+    canary: Optional[int] = None
+
+    @property
+    def healthy(self) -> bool:
+        return self.tracker.healthy
+
+    @property
+    def strikes(self) -> int:
+        return self.tracker.strikes
 
 
 @dataclass
 class _SlotReq:
     """Scheduler-internal request state: per-replica placements (engine
-    rids), progress timestamps for stall hedging, sampling mode."""
+    rids), progress timestamps for stall hedging, deadline, sampling
+    mode. `hedges` is the ACTIVE hedge count — reset when the request is
+    re-queued by a drain, so a rescued request can hedge again — while
+    `ever_hedged` survives for the Completion report."""
     rid: int
     prompt: np.ndarray
     max_new: int
     submitted_s: float
+    expires_s: Optional[float] = None
     # engine rid per replica currently decoding this request
     placements: Dict[int, int] = field(default_factory=dict)
     last_progress_s: float = 0.0
-    hedged: bool = False
+    hedges: int = 0
+    last_hedge_s: float = 0.0
+    ever_hedged: bool = False
     greedy: bool = True
     seed: int = 0
 
@@ -71,51 +138,128 @@ class SlotScheduler:
     """Slot-admission scheduling over ContinuousEngine replicas."""
 
     def __init__(self, engines: List, *, stall_s: float = 30.0,
-                 max_strikes: int = 2):
-        """engines: ContinuousEngine-likes (submit/step/available_slots).
-        `stall_s`: per-slot stall budget — a placed request with no new
-        token for this long (while its replica is stepped) is hedged to
-        another replica."""
+                 max_strikes: int = 2, max_queue: Optional[int] = None,
+                 overflow: str = "degrade", max_hedges: int = 2,
+                 probe_cooldown_s: float = 0.25,
+                 max_probes: Optional[int] = 8,
+                 deadline_s: Optional[float] = None):
+        """engines: ContinuousEngine-likes (submit/step/available_slots,
+        and ideally cancel). `stall_s`: per-slot stall budget — a placed
+        request with no new token for this long (while its replica is
+        stepped) is hedged to another replica, re-armed after each hedge
+        up to `max_hedges`. `max_queue`: admission bound on the queue;
+        `overflow="degrade"` halves an overflowing request's `max_new`
+        (sheds outright past twice the bound), `overflow="reject"` sheds
+        at the bound. `probe_cooldown_s`/`max_probes`: drained-replica
+        probation (see dist.fault.HealthTracker). `deadline_s`: default
+        per-request deadline (None = unbounded)."""
+        assert overflow in ("degrade", "reject")
         self.engines = engines
-        self.state = [ReplicaState() for _ in engines]
+        hc = HealthConfig(max_strikes=max_strikes,
+                          cooldown_s=probe_cooldown_s,
+                          max_probes=max_probes)
+        self.state = [ReplicaHealth(HealthTracker(hc)) for _ in engines]
         self.stall_s = stall_s
-        self.max_strikes = max_strikes
+        self.max_queue = max_queue
+        self.overflow = overflow
+        self.max_hedges = max_hedges
+        self.deadline_s = deadline_s
         self.queue: Deque[_SlotReq] = deque()
         self._live: Dict[int, _SlotReq] = {}
+        self.shed: List[Shed] = []
+        self.counters = SchedCounters()
         self._next_rid = 0
 
     def submit(self, prompt: np.ndarray, max_new: int = 32, *,
-               greedy: bool = True, seed: int = 0) -> int:
-        """Queue one request; returns its scheduler rid. `greedy=False`
-        samples on whichever replica hosts it (per-request PRNG streams
-        are keyed by the ENGINE-assigned rid, so a hedged copy on a
-        second replica may draw a different — equally valid — sample;
-        first completion still wins)."""
+               greedy: bool = True, seed: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue one request; returns its scheduler rid. `deadline_s`
+        (default: the scheduler-wide default) bounds submit->done wall
+        time — an expired request is cancelled and reported in `shed`.
+        When the queue is over `max_queue` the overflow policy applies:
+        degrade (halved max_new; shed past 2x the bound) or reject.
+        `greedy=False` samples on whichever replica hosts the request
+        (per-request PRNG streams key on the ENGINE-assigned rid, so a
+        hedged copy may draw a different — equally valid — sample; first
+        completion still wins)."""
         rid = self._next_rid
         self._next_rid += 1
-        req = _SlotReq(rid, np.asarray(prompt, np.int32), max_new,
-                       time.perf_counter(), greedy=greedy, seed=seed)
+        self.counters.submitted += 1
+        now = time.perf_counter()
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            if self.overflow == "degrade" \
+                    and len(self.queue) < 2 * self.max_queue:
+                max_new = max(1, max_new // 2)
+                self.counters.degraded += 1
+            else:
+                self.counters.shed_queue += 1
+                self.shed.append(Shed(rid, "queue_full", 0.0))
+                return rid
+        if deadline_s is None:
+            deadline_s = self.deadline_s
+        req = _SlotReq(rid, np.asarray(prompt, np.int32), max_new, now,
+                       None if deadline_s is None else now + deadline_s,
+                       greedy=greedy, seed=seed)
         self.queue.append(req)
         self._live[rid] = req
         return rid
 
     def _healthy(self) -> List[int]:
-        """Indices of replicas still accepting work."""
+        """Indices of replicas fully in service (probing excluded — they
+        carry only their canary until it completes)."""
         return [i for i, s in enumerate(self.state) if s.healthy]
 
-    def _strike(self, ridx: int) -> None:
-        """One failure strike; at max_strikes the replica is drained."""
-        self.state[ridx].strikes += 1
-        if self.state[ridx].strikes >= self.max_strikes:
-            self._drain(ridx)
+    def _cancel_placement(self, ridx: int, erid: int) -> None:
+        """Best-effort engine-side cancel: frees the slot on engines that
+        support it; a broken/legacy engine just keeps the stale rid
+        (whose events no longer match any placement and are dropped)."""
+        eng = self.engines[ridx]
+        if hasattr(eng, "cancel"):
+            try:
+                eng.cancel(erid)
+            except Exception:
+                pass
 
-    def _drain(self, ridx: int) -> None:
-        """Mark a replica unhealthy and re-queue its in-flight requests."""
-        self.state[ridx].healthy = False
+    def _requeue_placements(self, ridx: int) -> None:
+        """Pull every request placed on `ridx` back off it (cancelling
+        engine-side state best-effort); requests left with no placement
+        re-queue at the FRONT with a fresh hedging budget."""
         for req in list(self._live.values()):
-            if req.placements.pop(ridx, None) is not None \
-                    and not req.placements:
+            erid = req.placements.pop(ridx, None)
+            if erid is None:
+                continue
+            self._cancel_placement(ridx, erid)
+            if not req.placements:
+                req.hedges = 0
                 self.queue.appendleft(req)
+
+    def _strike(self, ridx: int) -> None:
+        """One failure strike through the HealthTracker; a drain (at
+        max_strikes, or any probe failure) re-queues in-flight work."""
+        self.counters.strikes += 1
+        h = self.state[ridx]
+        if h.tracker.record_failure():
+            self.counters.drains += 1
+            h.canary = None
+            self._requeue_placements(ridx)
+
+    def _expire(self, now: float) -> None:
+        """Shed every live request past its deadline: cancel its engine
+        placements (slots freed), drop it from queue/live, and record the
+        shed — expiry is a terminal state, never a silent loss."""
+        for req in list(self._live.values()):
+            if req.expires_s is None or now <= req.expires_s:
+                continue
+            for ridx, erid in req.placements.items():
+                self._cancel_placement(ridx, erid)
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                pass
+            del self._live[req.rid]
+            self.counters.shed_deadline += 1
+            self.shed.append(Shed(req.rid, "deadline",
+                                  now - req.submitted_s))
 
     def _place(self, req: _SlotReq, ridx: int) -> None:
         """Submit `req` to replica `ridx` and record the placement.
@@ -131,6 +275,36 @@ class SlotScheduler:
         req.placements[ridx] = erid
         req.last_progress_s = time.perf_counter()
 
+    def _probe(self) -> None:
+        """Drained-replica probation: a replica whose cooldown elapsed
+        gets ONE canary (the head of the queue) — completing it recovers
+        the replica to full service; failing it (step raise, or the
+        canary resolving elsewhere) backs the cooldown off."""
+        for ridx, h in enumerate(self.state):
+            t = h.tracker
+            if t.state == HealthTracker.PROBING:
+                if h.canary is not None and h.canary not in self._live:
+                    # canary completed on another replica or expired:
+                    # this probe proved nothing — drain again, back off
+                    t.record_failure()
+                    h.canary = None
+                    self._requeue_placements(ridx)
+                continue
+            if not self.queue or not t.probe_due():
+                continue
+            if self.engines[ridx].available_slots() <= 0:
+                continue
+            t.begin_probe()
+            self.counters.probes += 1
+            req = self.queue.popleft()
+            h.canary = req.rid
+            try:
+                self._place(req, ridx)
+            except Exception:
+                self._strike(ridx)            # probe failed at submit
+                req.hedges = 0
+                self.queue.appendleft(req)
+
     def _admit(self) -> None:
         """Queued requests go to the healthy replica with most free slots
         (admission happens slot-by-slot as engines free them on EOS)."""
@@ -138,8 +312,6 @@ class SlotScheduler:
             healthy = [i for i in self._healthy()
                        if self.engines[i].available_slots() > 0]
             if not healthy:
-                if not self._healthy():
-                    raise RuntimeError("all replicas unhealthy")
                 return
             ridx = max(healthy,
                        key=lambda i: self.engines[i].available_slots())
@@ -147,58 +319,101 @@ class SlotScheduler:
 
     def _hedge_stalled(self) -> None:
         """Re-place requests with no progress for `stall_s` on another
-        replica (first completion wins); the stalled replica is struck."""
+        replica (first completion wins); the stalled replicas are struck.
+        The budget re-arms after every hedge, so a request whose hedge
+        target ALSO stalls can hedge again, up to `max_hedges`."""
         now = time.perf_counter()
-        for req in self._live.values():
-            if not req.placements or req.hedged:
+        for req in list(self._live.values()):
+            if not req.placements or req.hedges >= self.max_hedges:
                 continue
-            if now - req.last_progress_s <= self.stall_s:
+            if now - max(req.last_progress_s, req.last_hedge_s) \
+                    <= self.stall_s:
                 continue
             targets = [i for i in self._healthy()
                        if i not in req.placements]
-            if targets:
-                stalled = list(req.placements)
-                ridx = max(targets,
-                           key=lambda i: self.engines[i].available_slots())
-                req.hedged = True
-                self._place(req, ridx)
-                for s in stalled:
-                    self._strike(s)
+            if not targets:
+                continue
+            stalled = list(req.placements)
+            ridx = max(targets,
+                       key=lambda i: self.engines[i].available_slots())
+            req.hedges += 1
+            req.ever_hedged = True
+            req.last_hedge_s = now
+            self.counters.hedges += 1
+            self._place(req, ridx)
+            for s in stalled:
+                self._strike(s)
+
+    def _on_done(self, ridx: int, req: _SlotReq, ev,
+                 done: List[Completion]) -> None:
+        """First completion wins: cancel the other placements (hedges),
+        retire the request, credit the replica (strike decay; probation
+        canaries recover their replica here)."""
+        for oidx, oerid in req.placements.items():
+            if oidx != ridx:
+                self._cancel_placement(oidx, oerid)
+        self._live.pop(req.rid, None)
+        h = self.state[ridx]
+        h.served += 1
+        self.counters.completed += 1
+        if h.tracker.record_success():
+            self.counters.recoveries += 1
+        if h.canary == req.rid:
+            h.canary = None
+        done.append(Completion(req.rid, list(ev.result.tokens), ridx,
+                               time.perf_counter() - req.submitted_s,
+                               req.ever_hedged))
+
+    def _idle(self) -> None:
+        """Nothing progressed this pass. Benign while prefill chunks are
+        mid-flight or a probe cooldown is pending; fatal when no replica
+        can ever serve again or a live request is unreachable."""
+        trackers = [h.tracker for h in self.state]
+        if all(t.state == HealthTracker.DRAINED for t in trackers):
+            if all(t.exhausted for t in trackers):
+                raise RuntimeError(
+                    "all replicas unhealthy (probe budget exhausted)")
+            time.sleep(0.002)                 # wait out a probe cooldown
+        elif self._live and not self.queue \
+                and not any(r.placements for r in self._live.values()):
+            raise RuntimeError("requests stuck with no placement")
 
     def run(self) -> List[Completion]:
-        """Drain the queue; returns completions in finish order."""
+        """Drain the queue; returns completions in finish order. Every
+        submitted request ends in exactly one terminal state: a
+        Completion here, or an entry in `self.shed` (deadline expiry /
+        queue overflow) — chaos may delay requests, never strand them."""
         done: List[Completion] = []
         while self._live:
+            self._expire(time.perf_counter())
+            if not self._live:
+                break
+            self._probe()
             self._admit()
             self._hedge_stalled()
             progressed = False
-            for ridx in self._healthy():
-                eng = self.engines[ridx]
+            for ridx, h in enumerate(self.state):
+                if h.tracker.state == HealthTracker.DRAINED:
+                    continue
                 try:
-                    events = eng.step()
+                    events = self.engines[ridx].step()
                 except Exception:
+                    # an exception mid-step leaves engine state unknown:
+                    # strike AND re-queue its placements either way
                     self._strike(ridx)
-                    self._drain(ridx)
+                    self._requeue_placements(ridx)
                     continue
                 for ev in events:
                     req = next((r for r in self._live.values()
                                 if r.placements.get(ridx) == ev.rid), None)
                     if req is None:
-                        continue
+                        continue          # stale/hedged rid: dropped
                     progressed = True
                     req.last_progress_s = time.perf_counter()
                     if ev.kind == "done":
-                        # first completion wins; other placements (hedges)
-                        # keep decoding and their events are dropped above
-                        self._live.pop(req.rid, None)
-                        self.state[ridx].served += 1
-                        done.append(Completion(
-                            req.rid, list(ev.result.tokens), ridx,
-                            time.perf_counter() - req.submitted_s,
-                            req.hedged))
-            if not progressed and not self.queue and self._live \
-                    and not any(r.placements for r in self._live.values()):
-                raise RuntimeError("requests stuck with no placement")
+                        self._on_done(ridx, req, ev, done)
+            if not progressed:
+                self._idle()
         return done
 
 
@@ -211,7 +426,9 @@ class Scheduler:
     def __init__(self, replicas: List[Callable], *, max_wave: int = 8,
                  deadline_s: float = 60.0, max_strikes: int = 2):
         """replicas: callables (prompts, max_new) -> list of token lists.
-        A replica that raises or exceeds the deadline gets a strike."""
+        A replica that raises or exceeds the deadline gets a strike —
+        except its FIRST successful dispatch, whose wall time includes
+        jit compilation and is exempt from the deadline check."""
         self.replicas = replicas
         self.state = [ReplicaState() for _ in replicas]
         self.max_wave = max_wave
@@ -250,23 +467,28 @@ class Scheduler:
     def _dispatch(self, wave: List[Request], ridx: int,
                   hedged: bool) -> Optional[List[Completion]]:
         """Run one wave on replica `ridx`; None (plus a strike) on
-        failure or deadline overrun — the caller re-dispatches."""
+        failure or deadline overrun — the caller re-dispatches. A cold
+        replica's first successful dispatch pays jit compile time, so
+        only WARMED replicas can overrun the deadline: strikes reflect
+        real overruns, not first-call compilation."""
         t0 = time.perf_counter()
+        st = self.state[ridx]
         try:
             outs = self.replicas[ridx]([r.prompt for r in wave],
                                        max(r.max_new for r in wave))
         except Exception:
-            self.state[ridx].strikes += 1
-            if self.state[ridx].strikes >= self.max_strikes:
-                self.state[ridx].healthy = False
+            st.strikes += 1
+            if st.strikes >= self.max_strikes:
+                st.healthy = False
             return None
         dt = time.perf_counter() - t0
-        if dt > self.deadline_s:
-            self.state[ridx].strikes += 1
-            if self.state[ridx].strikes >= self.max_strikes:
-                self.state[ridx].healthy = False
+        if dt > self.deadline_s and st.warmed:
+            st.strikes += 1
+            if st.strikes >= self.max_strikes:
+                st.healthy = False
             return None  # hedge: caller re-dispatches
-        self.state[ridx].served += len(wave)
+        st.warmed = True
+        st.served += len(wave)
         return [Completion(r.rid, list(o), ridx,
                            time.perf_counter() - r.submitted_s, hedged)
                 for r, o in zip(wave, outs)]

@@ -13,6 +13,17 @@ step — so retrieval/SCR for query N+1 runs while query N's slots are still
 decoding, instead of the whole batch blocking on the slowest member.
 `stream(queries)` wraps submit+step into a generator of `RagEvent`s;
 `run(queries)` drains to completed `RAGAnswer`s in submit order.
+
+Robustness (the serve-under-fire contract): requests may carry a
+`deadline_s` — an expired request is cancelled (its engine slot freed via
+`ContinuousEngine.cancel`) and emits a terminal "shed" event; admission
+can be bounded with `max_pending`, and under overload the session degrades
+gracefully — smaller retrieval chunks and clamped `max_new` — before it
+sheds; a retrieval/embedder exception inside a chunk is retried once
+per-query in isolation, and a request that still fails emits a terminal
+"failed" event instead of killing the stream. Every shed / degrade /
+failure increments a `SessionCounters` field, so every submitted request
+ends in exactly one terminal state: done, shed, or failed.
 """
 from __future__ import annotations
 
@@ -24,22 +35,27 @@ from collections import deque
 
 from repro.serving.engine import ContinuousEngine
 
-# request lifecycle states, in order
-STATES = ("submitted", "retrieved", "condensed", "decoding", "done")
+# request lifecycle states; "done" / "shed" / "failed" are terminal
+STATES = ("submitted", "retrieved", "condensed", "decoding",
+          "done", "shed", "failed")
 
 
 @dataclass
 class RagRequest:
     """One query's lifecycle record inside a RagSession (state machine
     over `STATES`; `answer` carries the RAGAnswer once condensed and is
-    completed in place when decode finishes)."""
+    completed in place when decode finishes). `expires_s` is the absolute
+    deadline (None = unbounded); `retried` marks the one isolated
+    retrieval retry a failing request is entitled to."""
     req_id: int
     query: str
     max_new: int
     state: str = "submitted"
     submitted_s: float = field(default_factory=time.perf_counter)
+    expires_s: Optional[float] = None
     done_s: Optional[float] = None
     answer: Optional[object] = None       # RAGAnswer once condensed
+    retried: bool = False
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -51,11 +67,25 @@ class RagRequest:
 class RagEvent:
     """One request-visible state change. kind: "submitted" | "retrieved"
     (payload: doc id list) | "condensed" (payload: prompt token count) |
-    "token" (payload: token id) | "done" (payload: completed RAGAnswer)."""
+    "token" (payload: token id) | "done" (payload: completed RAGAnswer) |
+    "shed" (payload: reason — deadline/overload; terminal) | "failed"
+    (payload: repr of the stage error; terminal)."""
     req_id: int
     kind: str
     payload: object = None
     t: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class SessionCounters:
+    """Every shed/degrade/failure decision the session takes."""
+    submitted: int = 0
+    completed: int = 0
+    shed_deadline: int = 0
+    shed_overload: int = 0
+    degraded: int = 0
+    retrieval_retries: int = 0
+    failed: int = 0
 
 
 class RagSession:
@@ -63,24 +93,32 @@ class RagSession:
 
     def __init__(self, pipe, *, max_new: int = 16, slots: int = 4,
                  retrieve_chunk: int = 4, greedy: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, max_pending: Optional[int] = None,
+                 deadline_s: Optional[float] = None):
         """`pipe`: a RAG pipeline with `_ensure_slm`/`answer_batch`.
         `greedy=False` samples every request from its own
         fold_in(PRNGKey(seed), engine-rid) stream (ContinuousEngine
         semantics: draws are independent of co-resident requests).
-        Raises ValueError when the pipeline's generation arch has no
-        slot-paged KV path (`model.supports_paged`)."""
+        `max_pending` bounds admission: past HALF the bound the session
+        degrades (halved retrieve_chunk and max_new); at the bound new
+        submissions are shed. `deadline_s` is the default per-request
+        deadline. Raises ValueError when the pipeline's generation arch
+        has no slot-paged KV path (`model.supports_paged`)."""
         self.pipe = pipe
         self.max_new = max_new
         self.retrieve_chunk = retrieve_chunk
         self.greedy = greedy
         self.seed = seed
+        self.max_pending = max_pending
+        self.deadline_s = deadline_s
+        self.counters = SessionCounters()
         slm = pipe._ensure_slm()
         self.engine: ContinuousEngine = slm.continuous(slots)  # may raise
         self._slm = slm
         self.requests: Dict[int, RagRequest] = {}
         self._queued: Deque[int] = deque()
         self._decoding: Dict[int, RagRequest] = {}   # engine rid -> request
+        self._events_out: List[RagEvent] = []        # submit-time events
         self._next_id = 0
         if not self.engine.pending:
             # compile the chunk-prefill/decode executables off the measured
@@ -89,33 +127,116 @@ class RagSession:
 
     # ------------------------------------------------------------- intake
 
-    def submit(self, query: str, max_new: Optional[int] = None) -> int:
+    @property
+    def overloaded(self) -> bool:
+        """Past half the admission bound: the degradation ladder engages
+        (smaller retrieval chunks, clamped max_new) BEFORE shedding."""
+        return (self.max_pending is not None
+                and self.pending >= max(1, self.max_pending // 2))
+
+    def submit(self, query: str, max_new: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one query; returns its request id. Retrieval/condense
-        happens in a later `step()` (chunked, so it overlaps decode)."""
+        happens in a later `step()` (chunked, so it overlaps decode).
+        At `max_pending` the request is shed immediately (terminal "shed"
+        event on the next step); above half the bound it is admitted
+        degraded (halved max_new)."""
         rid = self._next_id
         self._next_id += 1
-        req = RagRequest(rid, query, max_new or self.max_new)
+        self.counters.submitted += 1
+        max_new = max_new or self.max_new
+        if deadline_s is None:
+            deadline_s = self.deadline_s
+        now = time.perf_counter()
+        req = RagRequest(rid, query, max_new,
+                         expires_s=(None if deadline_s is None
+                                    else now + deadline_s))
         self.requests[rid] = req
+        if self.max_pending is not None and self.pending >= self.max_pending:
+            req.state = "shed"
+            self.counters.shed_overload += 1
+            self._events_out.append(RagEvent(rid, "shed", "overload"))
+            return rid
+        if self.overloaded:
+            req.max_new = max(1, max_new // 2)
+            self.counters.degraded += 1
         self._queued.append(rid)
         return rid
 
     @property
     def pending(self) -> int:
-        """Requests not yet done (queued for retrieval or decoding)."""
+        """Requests not yet terminal (queued for retrieval or decoding)."""
         return len(self._queued) + len(self._decoding)
 
     # ----------------------------------------------------------- stepping
 
+    def _shed(self, req: RagRequest, reason: str,
+              events: List[RagEvent]) -> None:
+        req.state = "shed"
+        req.done_s = time.perf_counter()
+        self.counters.shed_deadline += 1
+        events.append(RagEvent(req.req_id, "shed", reason))
+
+    def _expire_step(self, events: List[RagEvent]) -> None:
+        """Shed queued and decoding requests past their deadline; a
+        decoding request's engine slot is freed via `cancel` so the next
+        step can admit fresh work into it."""
+        now = time.perf_counter()
+        keep: Deque[int] = deque()
+        for rid in self._queued:
+            req = self.requests[rid]
+            if req.expires_s is not None and now > req.expires_s:
+                self._shed(req, "deadline", events)
+            else:
+                keep.append(rid)
+        self._queued = keep
+        for erid, req in list(self._decoding.items()):
+            if req.expires_s is not None and now > req.expires_s:
+                self.engine.cancel(erid)
+                del self._decoding[erid]
+                self._shed(req, "deadline", events)
+
+    def _condense(self, reqs: List[RagRequest]) -> List[Optional[object]]:
+        """One fused answer_batch over the chunk; on failure, each query
+        is retried ONCE in isolation so a single poisoned query (embedder
+        or index raising on it) cannot take the whole chunk down. Returns
+        one answer per request, None where the retry failed too (the
+        caller emits the terminal "failed" event)."""
+        try:
+            return self.pipe.answer_batch([r.query for r in reqs])
+        except Exception:
+            pass
+        answers: List[Optional[object]] = []
+        for r in reqs:
+            try:
+                r.retried = True
+                self.counters.retrieval_retries += 1
+                answers.append(self.pipe.answer_batch([r.query])[0])
+            except Exception as e:
+                answers.append(e)
+        return answers
+
     def _retrieve_step(self, events: List[RagEvent]) -> None:
         """Retrieve + condense the next chunk of queued queries (one fused
-        answer_batch call) and admit their prompts to the engine."""
+        answer_batch call) and admit their prompts to the engine. Under
+        overload the chunk shrinks (degradation before shedding); a
+        request whose retrieval fails twice emits "failed" and dies alone."""
+        chunk = self.retrieve_chunk
+        if self.overloaded:
+            chunk = max(1, chunk // 2)
         take = [self._queued.popleft()
-                for _ in range(min(self.retrieve_chunk, len(self._queued)))]
+                for _ in range(min(chunk, len(self._queued)))]
         if not take:
             return
         reqs = [self.requests[r] for r in take]
-        answers = self.pipe.answer_batch([r.query for r in reqs])
+        answers = self._condense(reqs)
         for req, ans in zip(reqs, answers):
+            if ans is None or isinstance(ans, Exception):
+                req.state = "failed"
+                req.done_s = time.perf_counter()
+                self.counters.failed += 1
+                events.append(RagEvent(req.req_id, "failed", repr(ans)))
+                continue
             req.answer = ans
             req.state = "condensed"
             events.append(RagEvent(req.req_id, "retrieved",
@@ -147,12 +268,16 @@ class RagSession:
                 ans.ttft_measured_s = ev.result.prefill_s
                 req.state = "done"
                 req.done_s = time.perf_counter()
+                self.counters.completed += 1
                 events.append(RagEvent(req.req_id, "done", ans))
 
     def step(self) -> List[RagEvent]:
-        """Advance the session: one retrieval/condense chunk + one engine
-        step. Returns the events produced (possibly empty when idle)."""
-        events: List[RagEvent] = []
+        """Advance the session: flush submit-time events, shed expired
+        requests, one retrieval/condense chunk, one engine step. Returns
+        the events produced (possibly empty when idle)."""
+        events: List[RagEvent] = self._events_out
+        self._events_out = []
+        self._expire_step(events)
         self._retrieve_step(events)
         self._engine_step(events)
         return events
@@ -165,12 +290,14 @@ class RagSession:
         loop — the generator keeps stepping while anything is pending."""
         for q in queries:
             yield RagEvent(self.submit(q), "submitted")
-        while self.pending:
+        while self.pending or self._events_out:
             yield from self.step()
 
     def run(self, queries: Iterable[str]) -> List[object]:
-        """Drain `queries` to completed RAGAnswers, in submit order."""
+        """Drain `queries` to completed RAGAnswers, in submit order (a
+        shed or failed request's slot in the list is None)."""
         rids = [self.submit(q) for q in queries]
-        while self.pending:
+        while self.pending or self._events_out:
             self.step()
-        return [self.requests[r].answer for r in rids]
+        return [self.requests[r].answer if self.requests[r].state == "done"
+                else None for r in rids]

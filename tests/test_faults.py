@@ -1,0 +1,537 @@
+"""Serving-under-fire tests: deadlines, backpressure, replica probation,
+degradation ladders, and the deterministic fault-injection harness.
+
+The chaos soak (`-k chaos`) is the acceptance gate: under a seeded
+FaultPlan mixing replica crashes, slot stalls and slow steps over 32
+requests on 3 real ContinuousEngine replicas, every request must end in
+exactly one terminal state (Completion or Shed — nothing stuck, nothing
+lost, nothing double-counted), and a drained replica must demonstrably
+return to service through the probation canary path.
+"""
+import time
+from collections import deque
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.dist.fault import HealthConfig, HealthTracker
+from repro.serving.faults import (ChaosEngine, ChaosPipeline, FaultPlan,
+                                  InjectedFault, wrap_replicas)
+from repro.serving.scheduler import Scheduler, SlotScheduler
+
+
+# --------------------------------------------------------------- fakes
+
+class FakeEngine:
+    """Engine-like (submit/step/available_slots/cancel) with scripted
+    behaviour: emits one token per request per step, `fail_steps` raise,
+    `stalled` returns no events, `step_delay` slows real time down so
+    wall-clock probation cooldowns can elapse mid-drain."""
+
+    def __init__(self, slots=2, step_delay=0.0):
+        self.slots_n = slots
+        self.step_delay = step_delay
+        self.fail_steps = set()
+        self.stalled = False
+        self.step_idx = 0
+        self.queue = deque()            # (rid, max_new)
+        self.running = {}               # rid -> [max_new, tokens]
+        self._next = 0
+
+    def submit(self, prompt, max_new=32, **kw):
+        rid = self._next
+        self._next += 1
+        self.queue.append((rid, max_new))
+        return rid
+
+    def available_slots(self):
+        return self.slots_n - len(self.running) - len(self.queue)
+
+    def cancel(self, rid):
+        if rid in self.running:
+            del self.running[rid]
+            return True
+        n = len(self.queue)
+        self.queue = deque(x for x in self.queue if x[0] != rid)
+        return len(self.queue) != n
+
+    def step(self):
+        i = self.step_idx
+        self.step_idx += 1
+        if self.step_delay:
+            time.sleep(self.step_delay)
+        if i in self.fail_steps:
+            raise RuntimeError(f"scripted step failure @ {i}")
+        if self.stalled:
+            return []
+        events = []
+        while self.queue and len(self.running) < self.slots_n:
+            rid, mx = self.queue.popleft()
+            self.running[rid] = [mx, []]
+        for rid in list(self.running):
+            mx, toks = self.running[rid]
+            toks.append(7)
+            if len(toks) >= mx:
+                del self.running[rid]
+                events.append(SimpleNamespace(
+                    rid=rid, kind="done",
+                    result=SimpleNamespace(tokens=list(toks))))
+            else:
+                events.append(SimpleNamespace(rid=rid, kind="token",
+                                              token=7))
+        return events
+
+
+# -------------------------------------------------------- HealthTracker
+
+def test_health_tracker_lifecycle():
+    clock = {"t": 0.0}
+    t = HealthTracker(HealthConfig(max_strikes=2, cooldown_s=1.0,
+                                   cooldown_backoff=2.0, max_probes=2),
+                      clock=lambda: clock["t"])
+    assert t.healthy and t.state == HealthTracker.HEALTHY
+    # strikes decay on success: a lone transient never drains
+    assert t.record_failure() is False and t.strikes == 1
+    assert t.record_success() is False and t.strikes == 0
+    # two consecutive failures drain
+    t.record_failure()
+    assert t.record_failure() is True
+    assert t.state == HealthTracker.DRAINED and t.drains == 1
+    # cooldown gates the probe
+    assert not t.probe_due()
+    clock["t"] = 1.0
+    assert t.probe_due()
+    t.begin_probe()
+    assert t.state == HealthTracker.PROBING and t.probes == 1
+    # a failed probe re-drains with exponential backoff
+    assert t.record_failure() is True
+    assert t.state == HealthTracker.DRAINED
+    clock["t"] = 2.9
+    assert not t.probe_due()            # next probe at 1.0 + 2.0
+    clock["t"] = 3.0
+    assert t.probe_due()
+    t.begin_probe()
+    # a successful probe recovers and resets strikes + probe budget
+    assert t.record_success() is True
+    assert t.healthy and t.strikes == 0 and t.recoveries == 1
+    assert t.probes == 0                # fresh budget after recovery
+
+
+def test_health_tracker_probe_budget_exhausts():
+    clock = {"t": 0.0}
+    t = HealthTracker(HealthConfig(max_strikes=1, cooldown_s=0.1,
+                                   max_probes=1),
+                      clock=lambda: clock["t"])
+    t.record_failure()
+    clock["t"] = 1.0
+    t.begin_probe()
+    t.record_failure()
+    assert t.exhausted and not t.probe_due()
+
+
+# ------------------------------------------------------------ FaultPlan
+
+def test_fault_plan_deterministic_and_independent():
+    rates = {"replica_crash": 0.1, "slot_stall": 0.1, "slow_step": 0.1,
+             "retrieval_error": 0.1}
+    a = FaultPlan(seed=7, horizon=300, rates=rates)
+    b = FaultPlan(seed=7, horizon=300, rates=rates)
+    # same (seed, replica) -> identical schedule, replayable
+    assert a.replica(2) == b.replica(2)
+    assert a.retrieval_errors() == b.retrieval_errors()
+    # replicas draw independent sub-schedules from the same seed
+    assert a.replica(0) != a.replica(1)
+    # a different seed reshuffles everything
+    assert FaultPlan(seed=8, horizon=300, rates=rates).replica(0) \
+        != a.replica(0)
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"bogus_kind": 1.0})
+
+
+def test_chaos_engine_injects_scheduled_faults():
+    plan = FaultPlan(seed=1, horizon=60,
+                     rates={"replica_crash": 0.15, "slot_stall": 0.1,
+                            "slow_step": 0.1},
+                     stall_steps=3, slow_s=0.0)
+    faults = plan.replica(0)
+    assert faults.crashes, "seed must schedule at least one crash"
+    first_crash = min(faults.crashes)
+    ce = ChaosEngine(FakeEngine(slots=2), plan, 0)
+    ce.submit(np.arange(4), max_new=100)
+    for _ in range(first_crash):
+        ce.step()                        # stalls return [], slows sleep
+    with pytest.raises(InjectedFault):
+        ce.step()
+    assert ce.injected["replica_crash"] == 1
+    # stall windows really suppress events
+    stall_start = min(faults.stalls - faults.crashes, default=None)
+    if stall_start is not None and stall_start < first_crash:
+        assert ce.injected["slot_stall"] >= 1
+
+
+def test_chaos_pipeline_raises_by_call_index():
+    plan = FaultPlan(seed=3, horizon=40, rates={"retrieval_error": 0.3})
+    inner = SimpleNamespace(answer_batch=lambda qs, **kw: list(qs),
+                            name="stub")
+    cp = ChaosPipeline(inner, plan)
+    errs = plan.retrieval_errors()
+    assert errs, "seed must schedule at least one retrieval error"
+    for i in range(40):
+        if i in errs:
+            with pytest.raises(InjectedFault):
+                cp.answer_batch(["q"])
+        else:
+            assert cp.answer_batch(["q"]) == ["q"]
+    assert cp.injected == len([e for e in errs if e < 40])
+    assert cp.name == "stub"            # everything else delegates
+
+
+# ------------------------------------------- SlotScheduler, fake engines
+
+def test_queue_bound_degrades_then_sheds():
+    s = SlotScheduler([FakeEngine(slots=1)], max_queue=2,
+                      overflow="degrade")
+    rids = [s.submit(np.arange(4), max_new=8) for _ in range(6)]
+    # 2 admitted whole, 2 degraded (halved budget), 2 shed past 2x bound
+    assert s.counters.degraded == 2 and s.counters.shed_queue == 2
+    assert [sh.reason for sh in s.shed] == ["queue_full"] * 2
+    done = s.run()
+    toks = {c.rid: c.tokens for c in done}
+    assert set(toks) == set(rids[:4])
+    assert len(toks[rids[0]]) == 8 and len(toks[rids[2]]) == 4
+    # terminal partition: completions + sheds cover every submitted rid
+    assert {c.rid for c in done} | {sh.rid for sh in s.shed} == set(rids)
+
+    r = SlotScheduler([FakeEngine(slots=1)], max_queue=1,
+                      overflow="reject")
+    for _ in range(3):
+        r.submit(np.arange(4), max_new=2)
+    assert r.counters.shed_queue == 2 and r.counters.degraded == 0
+
+
+def test_rehedge_after_repeated_stall():
+    """A request whose hedge target ALSO stalls hedges again: the stall
+    budget re-arms after every hedge (the latched-flag fix), and the
+    Completion still reports hedged=True."""
+    stall0, stall1 = FakeEngine(slots=4), FakeEngine(slots=3)
+    stall0.stalled = stall1.stalled = True
+    good = FakeEngine(slots=2)
+    s = SlotScheduler([stall0, stall1, good], stall_s=0.03, max_hedges=2,
+                      max_strikes=5)
+    rid = s.submit(np.arange(6), max_new=2)
+    done = s.run()
+    assert [c.rid for c in done] == [rid]
+    assert done[0].hedged and done[0].replica == 2
+    assert s.counters.hedges == 2       # stall0 -> stall1 -> good
+    assert s.counters.strikes >= 2      # both stalled replicas struck
+
+
+def test_drain_requeue_probation_recovery():
+    """Satellite (c): a replica that raises twice drains with its
+    in-flight work re-queued (and served elsewhere), then re-enters
+    service by completing one canary after the cooldown."""
+    flaky = FakeEngine(slots=2)
+    flaky.fail_steps = {0, 1}
+    good = FakeEngine(slots=1, step_delay=0.004)   # slow: backlog persists
+    s = SlotScheduler([flaky, good], max_strikes=2,
+                      probe_cooldown_s=0.03, stall_s=10.0)
+    rids = [s.submit(np.arange(5), max_new=3) for _ in range(8)]
+    done = s.run()
+    assert {c.rid for c in done} == set(rids) and not s.shed
+    h = s.state[0]
+    assert h.tracker.drains == 1 and s.counters.drains == 1
+    assert s.counters.probes >= 1
+    assert h.tracker.recoveries == 1 and s.counters.recoveries == 1
+    assert h.healthy                    # back in service
+    assert h.served >= 1                # canary (at least) ran on it
+    assert s.counters.strikes >= 2
+
+
+# ------------------------------------------- real-engine fixtures/tests
+
+@pytest.fixture(scope="module")
+def base_engine():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model
+    from repro.serving.engine import ContinuousEngine
+    cfg = get_reduced("qwen25_0_5b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=128)
+    ce.warmup()
+    return ce
+
+
+@pytest.fixture
+def engine(base_engine):
+    e = base_engine.clone()
+    e.warmup()
+    return e
+
+
+def test_engine_cancel_frees_slot(engine):
+    p = np.arange(4, 20, dtype=np.int32)
+    r1 = engine.submit(p, max_new=50)
+    r2 = engine.submit(p + 1, max_new=3)
+    r3 = engine.submit(p + 2, max_new=3)          # over capacity: queued
+    engine.step()                                  # admit r1, r2
+    assert engine.free_slots() == 0
+    assert engine.cancel(r1)
+    assert engine.free_slots() == 1                # slot freed immediately
+    assert not engine.cancel(r1)                   # already gone
+    assert engine.cancel(r3)                       # queued cancel works too
+    seen = set()
+    for _ in range(200):
+        if not engine.pending:
+            break
+        for ev in engine.step():
+            seen.add(ev.rid)
+            if ev.kind == "done":
+                assert ev.rid == r2
+    assert engine.pending == 0
+    assert r1 not in seen and r3 not in seen       # no events after cancel
+    assert engine.cancelled == 2
+
+
+def test_deadline_expiry_sheds_and_frees_slot(engine):
+    sched = SlotScheduler([engine])
+    p = np.arange(4, 24, dtype=np.int32)
+    r_dead = sched.submit(p, max_new=64, deadline_s=0.03)
+    r_ok = sched.submit(p + 1, max_new=3)
+    sched._admit()                       # both placed before expiry
+    assert engine.pending == 2
+    time.sleep(0.05)
+    done = sched.run()
+    assert [c.rid for c in done] == [r_ok]
+    assert [(sh.rid, sh.reason) for sh in sched.shed] \
+        == [(r_dead, "deadline")]
+    assert sched.counters.shed_deadline == 1
+    assert engine.pending == 0 and engine.free_slots() == engine.slots
+    assert engine.cancelled >= 1
+
+
+def test_chaos_soak_terminal_partition_and_recovery(base_engine):
+    """THE acceptance soak: seeded chaos over 32 requests on 3 replicas.
+    Every request ends in exactly one terminal state; drained replicas
+    come back through probation once the plan's horizon passes."""
+    engines = [base_engine.clone() for _ in range(3)]
+    for e in engines:
+        e.warmup()
+    plan = FaultPlan(seed=0, horizon=80,
+                     rates={"replica_crash": 0.06, "slot_stall": 0.03,
+                            "slow_step": 0.05},
+                     stall_steps=30, slow_s=0.002)
+    wrapped = wrap_replicas(engines, plan)
+    sched = SlotScheduler(wrapped, stall_s=0.5, probe_cooldown_s=0.05,
+                          max_strikes=2, max_hedges=3, max_probes=None,
+                          deadline_s=30.0)
+    rng = np.random.default_rng(1)
+    rids = []
+    for i in range(32):
+        prompt = rng.integers(4, 500,
+                              size=int(rng.integers(8, 40))).astype(np.int32)
+        tight = i % 8 == 7               # a few impossible deadlines
+        rids.append(sched.submit(prompt, int(rng.integers(2, 6)),
+                                 deadline_s=0.002 if tight else 30.0))
+    done = sched.run()
+
+    done_rids = [c.rid for c in done]
+    shed_rids = [sh.rid for sh in sched.shed]
+    # exactly one terminal state per request: no loss, no double-count
+    assert len(set(done_rids)) == len(done_rids)
+    assert len(set(shed_rids)) == len(shed_rids)
+    assert set(done_rids).isdisjoint(shed_rids)
+    assert set(done_rids) | set(shed_rids) == set(rids)
+    c = sched.counters
+    assert c.completed + c.shed_deadline + c.shed_queue == len(rids)
+    # the chaos actually fired, and it drained at least one replica
+    assert sum(w.injected["replica_crash"] for w in wrapped) >= 1
+    assert c.drains >= 1
+    # nothing stranded engine-side either
+    for w in wrapped:
+        assert w.inner.pending == 0
+
+    # calm tail: drive small batches until a drained replica recovers
+    # (past the horizon probes face no chaos, so this converges fast)
+    extra = []
+    for _ in range(20):
+        if sched.counters.recoveries >= 1:
+            break
+        batch = [sched.submit(
+            rng.integers(4, 500, size=12).astype(np.int32), 3)
+            for _ in range(4)]
+        extra.extend(batch)
+        done2 = sched.run()
+        assert {c2.rid for c2 in done2} == set(batch)
+        time.sleep(0.05)                 # let probe cooldowns elapse
+    assert sched.counters.recoveries >= 1
+    assert sched.counters.probes >= 1
+
+
+# ------------------------------------------------------ RagSession fire
+
+@pytest.fixture(scope="module")
+def corpus():
+    from repro.data.synthetic import make_qa_corpus
+    return make_qa_corpus("squad", n_docs=60, n_questions=24, seed=0)
+
+
+def _mobile(corpus, embed=None):
+    from repro.serving.embedder import HashEmbedder
+    from repro.serving.rag import MobileRAG
+    return MobileRAG(corpus.docs, embed or HashEmbedder(dim=96), top_k=3)
+
+
+class PoisonEmbedder:
+    """Raises on any text containing the poison marker — a scripted
+    embedder failure that hits exactly one query."""
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def __call__(self, texts):
+        if any("POISON" in t for t in texts):
+            raise RuntimeError("embedder down for this query")
+        return self.inner(texts)
+
+
+def test_session_embedder_failure_isolated(corpus):
+    """Satellite (f): one query's embedder failure emits a terminal
+    "failed" event for THAT rid; the rest of the chunk completes."""
+    from repro.serving.embedder import HashEmbedder
+    pipe = _mobile(corpus, PoisonEmbedder(HashEmbedder(dim=96)))
+    sess = pipe.session(max_new=4, slots=2, retrieve_chunk=4)
+    queries = [e.question for e in corpus.examples[:3]] + ["POISON query?"]
+    rids = [sess.submit(q) for q in queries]
+    events = []
+    while sess.pending or sess._events_out:
+        events.extend(sess.step())
+    failed = [ev for ev in events if ev.kind == "failed"]
+    assert [ev.req_id for ev in failed] == [rids[3]]
+    assert sess.requests[rids[3]].state == "failed"
+    for r in rids[:3]:
+        assert sess.requests[r].state == "done"
+        assert sess.requests[r].answer.gen_tokens
+    assert sess.counters.failed == 1 and sess.counters.completed == 3
+    assert sess.counters.retrieval_retries >= 1   # isolated retry ran
+
+
+def test_session_overload_degrades_then_sheds(corpus):
+    pipe = _mobile(corpus)
+    sess = pipe.session(max_new=4, slots=2, retrieve_chunk=2,
+                        max_pending=4)
+    queries = [e.question for e in corpus.examples[:6]]
+    rids = [sess.submit(q) for q in queries]
+    # 2 admitted whole, 2 degraded past half the bound, 2 shed at it
+    assert sess.counters.degraded == 2
+    assert sess.counters.shed_overload == 2
+    assert sess.requests[rids[2]].max_new == 2    # halved budget
+    events = []
+    while sess.pending or sess._events_out:
+        events.extend(sess.step())
+    shed = [ev for ev in events if ev.kind == "shed"]
+    assert {ev.req_id for ev in shed} == {rids[4], rids[5]}
+    assert all(ev.payload == "overload" for ev in shed)
+    for r in rids[:4]:
+        assert sess.requests[r].state == "done"
+    # terminal partition on the session too
+    states = [sess.requests[r].state for r in rids]
+    assert states.count("done") + states.count("shed") == 6
+
+
+def test_session_deadline_cancels_decoding(corpus):
+    pipe = _mobile(corpus)
+    sess = pipe.session(max_new=48, slots=2)
+    rid = sess.submit(corpus.examples[0].question, deadline_s=0.05)
+    sess.step()                          # retrieval + first engine step
+    assert sess.requests[rid].state == "decoding"
+    time.sleep(0.06)
+    events = sess.step()                 # expired mid-decode
+    assert any(ev.kind == "shed" and ev.req_id == rid and
+               ev.payload == "deadline" for ev in events)
+    assert sess.counters.shed_deadline == 1
+    assert sess.engine.pending == 0      # slot freed via cancel
+    # the freed slot serves the next request normally
+    out = sess.run([corpus.examples[1].question])
+    assert out[0] is not None and out[0].gen_tokens
+
+
+# ----------------------------------------------- pipeline degradation
+
+def test_mobilerag_scr_fallback(corpus, monkeypatch):
+    pipe = _mobile(corpus)
+    q = corpus.examples[0].question
+
+    def boom(*a, **kw):
+        raise RuntimeError("scr stage down")
+
+    monkeypatch.setattr("repro.serving.rag.apply_scr_batch", boom)
+    ans = pipe.answer(q)                 # single-query path
+    assert pipe.scr_fallbacks == 1
+    assert ans.scr is None and ans.prompt.startswith("Context:")
+    assert len(ans.doc_ids) == 3
+    outs = pipe.answer_batch([q, corpus.examples[1].question])
+    assert pipe.scr_fallbacks == 2       # batch path counts once
+    assert all(o.scr is None and o.prompt for o in outs)
+
+
+def test_retrieval_fallback_reuses_last_good(corpus, monkeypatch):
+    pipe = _mobile(corpus)
+    q = corpus.examples[0].question
+    good = pipe.answer(q)                # primes _last_good_ids
+    monkeypatch.setattr(pipe.index, "search",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            RuntimeError("index down")))
+    degraded = pipe.answer(q)
+    assert pipe.retrieval_fallbacks == 1
+    assert set(degraded.doc_ids) == set(good.doc_ids)
+
+    cold = _mobile(corpus)               # no prior retrieval at all
+    monkeypatch.setattr(cold.index, "search",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            RuntimeError("index down")))
+    ans = cold.answer(q)
+    assert cold.retrieval_fallbacks == 1
+    assert set(ans.doc_ids) <= set(range(cold.top_k))  # corpus head
+
+
+# -------------------------------------------------- legacy wave path
+
+def test_legacy_scheduler_cold_start_exempt_from_deadline():
+    """Satellite (b): a replica's FIRST successful dispatch pays jit
+    compile time and must not be struck for overrunning the deadline —
+    but a WARMED replica overrunning still is."""
+    calls = []
+
+    def cold_then_fast(prompts, max_new):
+        calls.append(len(prompts))
+        if len(calls) == 1:
+            time.sleep(0.08)             # "jit compile" on first dispatch
+        return [[1, 2] for _ in prompts]
+
+    s = Scheduler([cold_then_fast], max_wave=4, deadline_s=0.02)
+    for i in range(2):
+        s.submit(np.arange(5))
+    done = s.run()                       # one wave: slow but exempt
+    assert len(done) == 2 and not any(c.hedged for c in done)
+    assert s.state[0].strikes == 0 and s.state[0].healthy
+    assert s.state[0].warmed
+
+    def always_slow(prompts, max_new):
+        time.sleep(0.05)
+        return [[1] for _ in prompts]
+
+    def fast(prompts, max_new):
+        return [[1] for _ in prompts]
+
+    s2 = Scheduler([always_slow, fast], max_wave=4, deadline_s=0.02,
+                   max_strikes=1)
+    for n in (5, 6, 7):                  # distinct lengths: three waves
+        s2.submit(np.arange(n))
+    done2 = s2.run()
+    assert len(done2) == 3
+    # wave 1 warmed replica 0 (exempt); wave 3 hits it warm -> strike,
+    # drain at max_strikes=1, hedged re-dispatch to the fast replica
+    assert not s2.state[0].healthy and s2.state[0].strikes == 1
+    assert any(c.hedged and c.replica == 1 for c in done2)
