@@ -1,6 +1,11 @@
-"""Figure 10: insertion and deletion latency per algorithm."""
+"""Figure 10: insertion and deletion latency per algorithm, plus the
+durability tax: EcoVector generation save, cold load, and WAL-replay
+recovery time (DESIGN.md §12)."""
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -25,6 +30,36 @@ def _repack_cost(idx, new_vecs, base, full):
         idx.delete(base + i)
     idx.device_pack()                       # restore a clean pack
     return t_pack / len(new_vecs)
+
+
+def _persistence_cost(idx, new_vecs, base):
+    """Durability columns: full generation save (checksummed segments +
+    manifest + fsync), cold load from the committed snapshot, and
+    recovery load with a WAL of journaled mutations to replay."""
+    from repro.core.ecovector import EcoVector
+
+    root = tempfile.mkdtemp(prefix="bench_save_")
+    try:
+        t0 = time.perf_counter()
+        idx.save(root)
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        EcoVector.load(root)
+        t_load = time.perf_counter() - t0
+        for i, v in enumerate(new_vecs):    # journaled (WAL'd) mutations
+            idx.insert(base + i, v)
+        t0 = time.perf_counter()
+        ev = EcoVector.load(root)           # snapshot + WAL replay
+        t_recover = time.perf_counter() - t0
+        assert ev.stats.wal_replayed == len(new_vecs)
+        for i in range(len(new_vecs)):      # restore the index
+            idx.delete(base + i)
+        idx.save()                          # compact: drops the WAL
+        disk = sum(os.path.getsize(os.path.join(dp, f))
+                   for dp, _, fs in os.walk(root) for f in fs)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return t_save, t_load, t_recover, disk
 
 
 def run(mode="quick"):
@@ -58,6 +93,13 @@ def run(mode="quick"):
                      f"incremental_us={t_incr*1e6:.1f};"
                      f"full_us={t_full*1e6:.1f};"
                      f"speedup={t_full / max(t_incr, 1e-12):.1f}x")
+                t_save, t_load, t_rec, disk = _persistence_cost(
+                    idx, new_vecs[:8], base)
+                emit(f"update.{dset}.EcoVector.persist", t_save * 1e3,
+                     f"save_ms={t_save*1e3:.2f};"
+                     f"load_ms={t_load*1e3:.2f};"
+                     f"recover_ms={t_rec*1e3:.2f};"
+                     f"wal_replayed=8;disk_kb={disk/1024:.0f}")
 
 
 if __name__ == "__main__":

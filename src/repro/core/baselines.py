@@ -8,7 +8,6 @@ Common interface: build / search / insert / delete / ram_bytes, plus a
 from __future__ import annotations
 
 import os
-import pickle
 import tempfile
 import time
 from dataclasses import dataclass
@@ -16,6 +15,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import store
 from repro.core.hnsw import HNSW
 from repro.core.kmeans import kmeans
 from repro.core.pq import PQ
@@ -231,7 +231,16 @@ class HNSWPQ(HNSWIndex):
 
 
 class _DiskListMixin:
-    """Store inverted lists (vectors or codes) on real disk files."""
+    """Store inverted lists (vectors or codes) on real disk files.
+
+    Lists go through `core/store.py`: checksummed segments written with
+    the atomic tmp→fsync→rename protocol. The old in-place
+    ``pickle.dump`` destroyed the previous list if the process died
+    mid-write; now a crash leaves the prior file intact, and a
+    truncated/bit-flipped list raises `store.CorruptSegmentError`
+    instead of feeding garbage to pickle."""
+
+    LIST_KIND = "ivf.list"
 
     def _init_disk(self, tag):
         self.storage_dir = tempfile.mkdtemp(prefix=f"{tag}_")
@@ -241,16 +250,13 @@ class _DiskListMixin:
         return os.path.join(self.storage_dir, f"list_{c:05d}.bin")
 
     def _store_list(self, c, payload):
-        with open(self._lpath(c), "wb") as f:
-            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        store.dump_obj(self._lpath(c), payload, kind=self.LIST_KIND)
 
     def _load_list(self, c):
         t0 = time.perf_counter()
-        with open(self._lpath(c), "rb") as f:
-            data = f.read()
-        payload = pickle.loads(data)
+        payload = store.load_obj(self._lpath(c), kind=self.LIST_KIND)
         self.stats.disk_loads += 1
-        self.stats.disk_bytes += len(data)
+        self.stats.disk_bytes += os.path.getsize(self._lpath(c))
         self.stats.disk_time_s += time.perf_counter() - t0
         return payload
 

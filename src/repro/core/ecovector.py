@@ -17,10 +17,18 @@ into VMEM. The pack is maintained *incrementally*: insert/delete mark only
 the owning cluster dirty and `device_pack` rewrites just that cluster's
 block in place, growing CAP geometrically on overflow (DESIGN.md §3) —
 steady-state update cost is O(cluster), not O(N) disk reads.
+
+Durability (DESIGN.md §12): cluster spill files are checksummed segments
+written atomically (`core/store.py`); `save()` commits the whole index
+(centroids, centroid graph, id maps, spill files) as a generation-
+numbered snapshot, journaled `insert`/`delete` mutations hit a fsync'd
+write-ahead log before they apply, and `load()` = latest generation +
+WAL replay. A spill file that fails its checksum at query time is
+quarantined and counted; search skips it and widens the probe set, and
+`rebuild_cluster` restores it from salvage or caller-supplied vectors.
 """
 from __future__ import annotations
 
-import io
 import os
 import pickle
 import tempfile
@@ -31,9 +39,13 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.core import store
 from repro.core.hnsw import HNSW
 from repro.core.kmeans import kmeans
 from repro.kernels import ops
+
+_CLUSTER_KIND = "ecovector.cluster"
+_STATE_KIND = "ecovector.state"
 
 
 @dataclass
@@ -47,6 +59,11 @@ class EcoVectorStats:
     pack_cluster_repacks: int = 0   # single-cluster block rewrites in place
     pack_grows: int = 0             # geometric CAP growths on overflow
     truncated_vectors: int = 0      # rows CURRENTLY dropped by a forced cap
+    # durability accounting (DESIGN.md §12)
+    corrupt_reads: int = 0          # spill-file loads that failed checksums
+    quarantined: int = 0            # clusters CURRENTLY quarantined
+    rebuilt: int = 0                # clusters restored (rebuild/auto-heal)
+    wal_replayed: int = 0           # mutations replayed by load()
 
 
 class EcoVector:
@@ -69,6 +86,12 @@ class EcoVector:
         # default: the paper's EcoVector releases after each query)
         self.cache_clusters = cache_clusters
         self._cache: Dict[int, HNSW] = {}         # insertion order == LRU
+        # durability state (DESIGN.md §12)
+        self._quarantined: Set[int] = set()       # clusters failing checksums
+        self._salvage: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._journal: Optional[store.Journal] = None
+        self._persist_root: Optional[str] = None
+        self._replaying = False                   # WAL replay: don't re-log
         self._reset_pack_state()
 
     def _reset_pack_state(self):
@@ -117,30 +140,128 @@ class EcoVector:
         return os.path.join(self.storage_dir, f"cluster_{c:05d}.bin")
 
     def _store_cluster(self, c: int, g: HNSW):
-        buf = io.BytesIO()
-        pickle.dump(g, buf, protocol=pickle.HIGHEST_PROTOCOL)
-        with open(self._path(c), "wb") as f:
-            f.write(buf.getvalue())
+        # atomic + checksummed (tmp -> fsync -> rename): a crash mid-write
+        # leaves the previous spill file intact, never a torn pickle
+        store.dump_obj(self._path(c), g, kind=_CLUSTER_KIND)
         self._cache.pop(c, None)
 
     def _load_cluster(self, c: int) -> HNSW:
+        """Load one spill file, validating magic + length + per-record
+        CRC32 before any byte reaches pickle. Raises
+        `store.CorruptSegmentError` on truncation/bit-rot and for
+        already-quarantined clusters."""
+        if c in self._quarantined:
+            raise store.CorruptSegmentError(
+                f"cluster {c} is quarantined (failed checksums earlier); "
+                f"rebuild_cluster() restores it")
         if c in self._cache:
             # LRU promotion: move to the end (most recently used)
             g = self._cache.pop(c)
             self._cache[c] = g
             return g
         t0 = time.perf_counter()
-        with open(self._path(c), "rb") as f:
-            data = f.read()
-        g = pickle.loads(data)
+        g = store.load_obj(self._path(c), kind=_CLUSTER_KIND)
+        if not isinstance(g, HNSW):
+            raise store.CorruptSegmentError(
+                f"{self._path(c)}: decoded {type(g).__name__}, not HNSW")
         self.stats.disk_loads += 1
-        self.stats.disk_bytes += len(data)
+        self.stats.disk_bytes += os.path.getsize(self._path(c))
         self.stats.disk_time_s += time.perf_counter() - t0
         if self.cache_clusters:
             while len(self._cache) >= self.cache_clusters:
                 self._cache.pop(next(iter(self._cache)))  # evict LRU head
             self._cache[c] = g
         return g
+
+    def _load_cluster_checked(self, c: int) -> Optional[HNSW]:
+        """Corruption-tolerant load: a cluster failing its checksum is
+        auto-healed from an in-hand graph when possible, else quarantined
+        and reported as None so the caller can degrade (skip + widen)."""
+        if c in self._quarantined:
+            return None
+        try:
+            return self._load_cluster(c)
+        except (store.StoreError, OSError, pickle.UnpicklingError,
+                EOFError) as e:
+            self.stats.corrupt_reads += 1
+            pending = self._pending_graphs.get(c)
+            if pending is not None:
+                # the freshest graph is still in hand from the update
+                # path: rewrite the spill file instead of losing data
+                self._store_cluster(c, pending)
+                self.stats.rebuilt += 1
+                return pending
+            warnings.warn(f"cluster {c} failed validation ({e}); "
+                          f"quarantined — search degrades around it",
+                          stacklevel=3)
+            self._quarantine(c)
+            return None
+
+    def _quarantine(self, c: int):
+        """Take a corrupt cluster out of service: salvage what the device
+        pack still holds, drop its members from the bookkeeping (their
+        vectors are unreachable until rebuild), zero its pack block so
+        host and device search agree, and move the bad file aside."""
+        if c in self._quarantined:
+            return
+        self._quarantined.add(c)
+        self._cache.pop(c, None)
+        self._pending_graphs.pop(c, None)
+        if self._device_pack is not None:
+            data, lens, slot_ids, _ = self._device_pack
+            m = int(lens[c])
+            if m > 0 and c not in self._salvage:
+                # pack rows predate the corruption: keep them as the
+                # rebuild source (possibly stale if c was dirty)
+                self._salvage[c] = (slot_ids[c, :m].copy(),
+                                    data[c, :m].copy())
+            data[c] = 0.0
+            slot_ids[c, :] = -1
+            lens[c] = 0
+            self._mirror_dirty.add(c)
+            self._dirty.discard(c)
+        for vid in self.cluster_members[c]:
+            self.assign.pop(int(vid), None)
+        self.cluster_members[c] = []
+        self._trunc_by_cluster.pop(c, None)
+        if os.path.exists(self._path(c)):
+            store.quarantine_file(self._path(c))
+        self.stats.quarantined = len(self._quarantined)
+
+    def rebuild_cluster(self, c: int, ids: Optional[np.ndarray] = None,
+                        vectors: Optional[np.ndarray] = None) -> int:
+        """Restore a quarantined cluster from source vectors: either the
+        rows salvaged from the device pack at quarantine time, or
+        caller-supplied (ids, vectors) re-embedded upstream. Returns the
+        number of vectors restored."""
+        if ids is None or vectors is None:
+            if c not in self._salvage:
+                raise store.StoreError(
+                    f"cluster {c}: no salvage copy available — pass "
+                    f"(ids, vectors) re-derived from the source corpus")
+            ids, vectors = self._salvage[c]
+        ids = np.asarray(ids, np.int64)
+        vectors = np.asarray(vectors, np.float32)
+        g = HNSW(self.dim, M=self.M, ef_construction=self.efc,
+                 seed=self.seed + c, max_elements=max(len(ids), 4))
+        for vid, vec in zip(ids, vectors):
+            g.insert(int(vid), vec)
+        self._quarantined.discard(c)
+        self.stats.quarantined = len(self._quarantined)
+        self._store_cluster(c, g)
+        qfile = self._path(c) + ".quarantined"
+        if os.path.exists(qfile):
+            try:
+                os.remove(qfile)
+            except OSError:
+                pass
+        self.cluster_members[c] = list(map(int, ids))
+        for vid in ids:
+            self.assign[int(vid)] = c
+        self._salvage.pop(c, None)
+        self._mark_dirty(c, g)
+        self.stats.rebuilt += 1
+        return len(ids)
 
     def _release_cluster(self, c: int, g: HNSW, dirty: bool = False):
         if dirty:
@@ -149,19 +270,45 @@ class EcoVector:
 
     # ----------------------------------------------------------- search
 
+    def _route(self, q: np.ndarray, n: int) -> List[int]:
+        """Ranked centroid ids from the in-RAM graph (distance-op delta
+        accounted), quarantined clusters filtered out."""
+        n0 = self.centroid_graph.n_dist
+        cids, _ = self.centroid_graph.search(q, n, ef_search=max(2 * n, 16))
+        self.stats.distance_ops += self.centroid_graph.n_dist - n0
+        return [c for c in map(int, cids) if c not in self._quarantined]
+
     def search(self, q: np.ndarray, k: int = 10, n_probe: int = 4,
                ef_search: int = 32) -> Tuple[np.ndarray, np.ndarray]:
         """Faithful host search: centroid graph -> load clusters -> graph
-        search per cluster -> merge -> release."""
+        search per cluster -> merge -> release.
+
+        Corruption-tolerant: a cluster failing its checksum mid-query is
+        quarantined and SKIPPED, and the probe set widens to the next-
+        nearest healthy centroids so the query still scans `n_probe`
+        clusters whenever enough survive (DESIGN.md §12)."""
         q = np.asarray(q, np.float32)
-        n0 = self.centroid_graph.n_dist
-        cids, _ = self.centroid_graph.search(q, n_probe,
-                                             ef_search=max(n_probe * 2, 16))
-        self.stats.distance_ops += self.centroid_graph.n_dist - n0
+        want = min(n_probe, self.n_clusters)
+        # over-ask just enough to cover already-quarantined clusters; the
+        # healthy-index common case stays byte-identical to the old route
+        ask = min(self.n_clusters, want + len(self._quarantined))
+        ranked = self._route(q, ask)
         best_ids: List[int] = []
         best_d: List[float] = []
-        for c in map(int, cids):
-            g = self._load_cluster(c)
+        scanned, i = 0, 0
+        while i < len(ranked) and scanned < want:
+            c = ranked[i]
+            i += 1
+            g = self._load_cluster_checked(c)
+            if g is None:
+                # a fresh quarantine: widen once to the full healthy
+                # ranking so the probe budget is still met
+                if len(ranked) < self.n_clusters - len(self._quarantined):
+                    seen = set(ranked[:i]) | self._quarantined
+                    ranked = ranked[:i] + [
+                        c2 for c2 in self._route(q, self.n_clusters)
+                        if c2 not in seen]
+                continue
             n0 = g.n_dist
             ids, dists = g.search(q, k, ef_search=ef_search)
             # per-query delta only: the pickled graph's lifetime counter
@@ -170,6 +317,7 @@ class EcoVector:
             best_ids.extend(map(int, ids))
             best_d.extend(map(float, dists))
             self._release_cluster(c, g)
+            scanned += 1
         order = np.argsort(best_d)[:k]
         return (np.asarray([best_ids[i] for i in order], np.int64),
                 np.asarray([best_d[i] for i in order], np.float32))
@@ -219,7 +367,12 @@ class EcoVector:
         self._trunc_by_cluster = {}
         self._pending_graphs.clear()
         for c in range(nc):
-            g = self._load_cluster(c)
+            g = self._load_cluster_checked(c)
+            if g is None:
+                # quarantined (pre-existing or just detected): its block
+                # stays empty and search degrades around it
+                lens[c] = 0
+                continue
             ids, vecs = g.graph_arrays()
             m = len(ids)
             if m > cap:
@@ -271,7 +424,11 @@ class EcoVector:
             # is falsy via HNSW.__len__, so test against None)
             g = self._pending_graphs.pop(c, None)
             if g is None:
-                g = self._load_cluster(c)
+                g = self._load_cluster_checked(c)
+            if g is None:
+                # corrupt mid-repack: _quarantine already zeroed the
+                # block in place and pruned the bookkeeping
+                continue
             ids, vecs = g.graph_arrays()
             m = len(ids)
             self._trunc_by_cluster.pop(c, None)
@@ -386,14 +543,39 @@ class EcoVector:
                 while len(self._pending_graphs) > self.PENDING_GRAPHS_MAX:
                     self._pending_graphs.pop(next(iter(self._pending_graphs)))
 
+    def _wal_append(self, op: tuple):
+        """Journal a mutation BEFORE applying it: when this returns the
+        op is fsync'd and will survive kill -9 (load replays it). No-op
+        until the index has a persistence root (first `save()`)."""
+        if self._journal is not None and not self._replaying:
+            self._journal.append(
+                pickle.dumps(op, protocol=pickle.HIGHEST_PROTOCOL))
+
     def insert(self, vid: int, vec: np.ndarray):
         """§3.3.1: route to nearest centroid, Algorithm-1 insert into that
         cluster's graph only. The device pack is NOT invalidated: the
         owning cluster is marked dirty and repacked in place on the next
-        device query (DESIGN.md §3)."""
+        device query (DESIGN.md §3). With a persistence root attached the
+        op hits the WAL (fsync) before it applies."""
         vec = np.asarray(vec, np.float32)
+        self._wal_append(("insert", int(vid), vec.tobytes()))
         cids, _ = self.centroid_graph.search(vec, 1, ef_search=16)
         c = int(cids[0])
+        if c in self._quarantined:
+            # the owner's graph is lost: restart it from the salvage copy
+            # (when one exists) plus this vector, so updates keep working
+            # under quarantine instead of waiting on an operator rebuild
+            if c in self._salvage:
+                sids, svecs = self._salvage[c]
+                keep = sids != int(vid)
+                ids = np.concatenate([sids[keep],
+                                      np.asarray([int(vid)], np.int64)])
+                vecs = np.concatenate([svecs[keep], vec[None]])
+            else:
+                ids = np.asarray([int(vid)], np.int64)
+                vecs = vec[None]
+            self.rebuild_cluster(c, ids, vecs)
+            return
         g = self._load_cluster(c)
         g.insert(int(vid), vec)
         self.assign[int(vid)] = c
@@ -402,16 +584,144 @@ class EcoVector:
         self._mark_dirty(c, g)
 
     def delete(self, vid: int):
-        """§3.3.2: Algorithm-2 delete inside the owning cluster's graph."""
+        """§3.3.2: Algorithm-2 delete inside the owning cluster's graph
+        (WAL'd first, like insert)."""
+        self._wal_append(("delete", int(vid)))
         c = self.assign.pop(int(vid), None)
         if c is None:
             return
+        if c in self._quarantined:
+            return  # bookkeeping already pruned; data already lost
         g = self._load_cluster(c)
         g.delete(int(vid))
         if int(vid) in self.cluster_members[c]:
             self.cluster_members[c].remove(int(vid))
         self._release_cluster(c, g, dirty=True)
         self._mark_dirty(c, g)
+
+    # ------------------------------------------------------ persistence
+
+    def save(self, root: Optional[str] = None) -> int:
+        """Commit the full index (centroids, centroid graph, id maps,
+        every healthy spill file) as the next generation under `root`,
+        then rotate the WAL — this IS the compaction step: journaled
+        mutations are folded into the snapshot and their log dropped.
+        Subsequent `insert`/`delete` are journaled against the new
+        generation. Returns the generation number."""
+        root = root or self._persist_root
+        if root is None:
+            raise ValueError("save() needs a root directory (none given "
+                             "and no previous save to reuse)")
+        if self.centroids is None or self.centroid_graph is None:
+            raise store.StoreError("save() before build(): nothing to "
+                                   "persist yet")
+        if self._journal is None or self._journal.root != root:
+            self._journal = store.Journal(root)
+        tmp = self._journal.begin()
+        self._write_state(tmp)
+        g = self._journal.commit()
+        self._persist_root = root
+        return g
+
+    def _write_state(self, d: str):
+        # Spill files go first: verify-on-copy may quarantine a rotten
+        # cluster, and state.seg must record the post-verification
+        # quarantine set (else the snapshot would claim a cluster is
+        # healthy while omitting its file).
+        for c in range(self.n_clusters):
+            if c in self._quarantined:
+                continue
+            try:
+                # verify-on-copy: bit-rot in a spill file must not be
+                # laundered into a freshly-committed generation
+                blob = store.verify_segment(self._path(c),
+                                            kind=_CLUSTER_KIND)
+            except (store.StoreError, OSError) as e:
+                self.stats.corrupt_reads += 1
+                warnings.warn(f"cluster {c} failed validation during "
+                              f"save ({e}); quarantined and left out of "
+                              f"the snapshot", stacklevel=3)
+                self._quarantine(c)
+                continue
+            with open(os.path.join(d, f"cluster_{c:05d}.bin"), "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+        cent_bytes, cent_spec = store.array_record(
+            np.asarray(self.centroids, np.float32))
+        state = {
+            "dim": self.dim, "n_clusters": self.n_clusters, "M": self.M,
+            "ef_construction": self.efc, "seed": self.seed,
+            "cache_clusters": self.cache_clusters,
+            "assign": {int(k): int(v) for k, v in self.assign.items()},
+            "cluster_members": [list(map(int, m))
+                                for m in self.cluster_members],
+            "quarantined": sorted(self._quarantined),
+        }
+        store.write_segment(
+            os.path.join(d, "state.seg"),
+            [pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL),
+             cent_bytes,
+             pickle.dumps(self.centroid_graph,
+                          protocol=pickle.HIGHEST_PROTOCOL)],
+            {"centroids": cent_spec}, kind=_STATE_KIND)
+
+    @classmethod
+    def load(cls, root: str, storage_dir: Optional[str] = None,
+             replay_wal: bool = True) -> "EcoVector":
+        """Restore the latest committed generation + WAL replay. Spill
+        files are copied into a fresh working `storage_dir` (the
+        committed generation stays immutable); every acknowledged
+        mutation since the snapshot is re-applied from the journal."""
+        j = store.Journal(root)
+        g = j.latest()
+        if g is None:
+            raise FileNotFoundError(f"no committed generation under "
+                                    f"{root}")
+        meta, recs = store.decode_segment(
+            j.read_file(g, "state.seg"), os.path.join(j.gen_dir(g),
+                                                      "state.seg"))
+        if meta.get("kind") != _STATE_KIND or len(recs) != 3:
+            raise store.CorruptSegmentError(
+                f"{root}: generation {g} state segment malformed")
+        state = pickle.loads(recs[0])
+        self = cls(state["dim"], n_clusters=state["n_clusters"],
+                   M=state["M"], ef_construction=state["ef_construction"],
+                   storage_dir=storage_dir, seed=state["seed"],
+                   cache_clusters=state["cache_clusters"])
+        self.centroids = store.record_array(recs[1], meta["centroids"])
+        self.centroid_graph = pickle.loads(recs[2])
+        self.assign = {int(k): int(v) for k, v in state["assign"].items()}
+        self.cluster_members = [list(m) for m in state["cluster_members"]]
+        self._quarantined = set(state["quarantined"])
+        self.stats.quarantined = len(self._quarantined)
+        for name in j.manifest(g)["files"]:
+            if name.startswith("cluster_"):
+                with open(os.path.join(self.storage_dir, name), "wb") as f:
+                    f.write(j.read_file(g, name))
+        self._journal = j
+        self._persist_root = root
+        if replay_wal:
+            ops_raw, _torn = j.replay()  # torn tail == never acknowledged
+            self._replaying = True
+            try:
+                for raw in ops_raw:
+                    self._apply_wal(pickle.loads(raw))
+            finally:
+                self._replaying = False
+            self.stats.wal_replayed = len(ops_raw)
+        return self
+
+    def _apply_wal(self, op: tuple):
+        kind = op[0]
+        if kind == "insert":
+            _, vid, vec_bytes = op
+            self.insert(int(vid), np.frombuffer(vec_bytes, np.float32))
+        elif kind == "delete":
+            self.delete(int(op[1]))
+        else:
+            raise store.CorruptSegmentError(
+                f"unknown WAL op {kind!r} (journal from a newer version?)")
 
     # ------------------------------------------------------- accounting
 

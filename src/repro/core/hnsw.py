@@ -307,6 +307,30 @@ class HNSW:
         return (np.asarray([self._int2ext[c] for c in cand], np.int64),
                 self._dists(cand, vec) if cand else np.zeros((0,), np.float32))
 
+    # -------------------------------------------------------- persistence
+
+    SEGMENT_KIND = "hnsw.graph"
+
+    def save(self, path: str) -> None:
+        """Persist the full graph (vectors, levels, neighbors, id maps,
+        RNG state) as one checksummed segment, written atomically — the
+        durable form of the index that previously died with the
+        process."""
+        from repro.core import store
+        store.dump_obj(path, self, kind=self.SEGMENT_KIND)
+
+    @classmethod
+    def load(cls, path: str) -> "HNSW":
+        """Validated restore of `save()` output: magic/length/CRC are
+        checked before any byte reaches pickle; raises
+        `store.CorruptSegmentError` on truncation or bit-rot."""
+        from repro.core import store
+        g = store.load_obj(path, kind=cls.SEGMENT_KIND)
+        if not isinstance(g, cls):
+            raise store.CorruptSegmentError(
+                f"{path}: decoded {type(g).__name__}, not {cls.__name__}")
+        return g
+
     # --------------------------------------------------------- accounting
 
     def memory_bytes(self) -> int:

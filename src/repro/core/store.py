@@ -1,0 +1,588 @@
+"""Durable retrieval state: checksummed segments, atomic commits, WAL.
+
+On a phone, power loss mid-write and bit-rot are the common case, not the
+exception — the paper's "partition and partially load" thesis assumes the
+on-flash index is trustworthy, so this module makes it so (DESIGN.md §12):
+
+  * **Checksummed segment files** — every spilled blob (cluster graphs,
+    inverted lists, index state) is framed as magic + version + JSON meta
+    + per-record CRC32. `read_segment` refuses anything truncated,
+    bit-flipped, or foreign with `CorruptSegmentError`; raw `pickle.loads`
+    of untagged bytes no longer exists anywhere in the retrieval stack.
+  * **Atomic writes** — segments stage to `path + ".tmp"`, fsync, then
+    `os.replace`; a crash mid-write can only ever leave the previous file
+    (or nothing), never a torn one.
+  * **Generation-numbered snapshots** (`Journal`) — a full index save is
+    a `gen_XXXXXXXX/` directory with a `MANIFEST.json` of per-file CRCs,
+    committed with the same stage→rename protocol as
+    `dist/checkpoint.py`'s step dirs (whose commit/list primitives —
+    `atomic_replace_dir` / `numbered_dirs` — now live here and are reused
+    by the checkpointer). Readers only trust directories whose manifest
+    exists at the final path.
+  * **A write-ahead log** per generation (`wal_XXXXXXXX.log`) — an
+    incremental mutation is appended + fsync'd *before* it is applied, so
+    every acknowledged `insert`/`delete`/`add`/`update`/`remove` survives
+    kill -9; load replays the WAL on top of the generation, and the next
+    `save()` (compaction) folds it into a new generation and rotates the
+    log. A torn tail (crash mid-append) is discarded silently — by
+    construction it was never acknowledged.
+
+Crash points are observable: every durability-relevant filesystem step
+calls `_fs_event(name)`, which `core/store_faults.py` hooks to inject
+deterministic op-indexed crashes (in-process raise or hard `os._exit`,
+the latter armed by the ``REPRO_STORE_CRASH_AT`` env var for subprocess
+kill-9 tests). This module deliberately has no jax dependency.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import re
+import shutil
+import struct
+import zlib
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"RSG1"          # repro segment, format v1
+WAL_MAGIC = b"RWL1"      # repro write-ahead log, format v1
+VERSION = 1
+_HDR = struct.Struct("<4sHHII")    # magic, version, flags, meta_len, meta_crc
+_REC = struct.Struct("<QI")        # record length, record crc32
+_WAL_HDR = struct.Struct("<4sHHQ")  # magic, version, flags, generation
+_WAL_REC = struct.Struct("<II")    # frame length, frame crc32
+
+MANIFEST = "MANIFEST.json"
+GEN_PREFIX = "gen_"
+_GEN_RE = re.compile(r"^gen_(\d{8})$")
+
+
+class StoreError(Exception):
+    """Base class for durable-store failures."""
+
+
+class CorruptSegmentError(StoreError):
+    """A file failed magic/version/length/CRC validation (bit-rot,
+    truncation, or a foreign file where a segment was expected)."""
+
+
+# --------------------------------------------------------------- crash hooks
+
+_crash_hook: Optional[Callable[[str, int], None]] = None
+_fs_ops = 0
+
+
+def set_crash_hook(fn: Optional[Callable[[str, int], None]]) -> None:
+    """Install (or clear) the fault-injection hook. The hook receives
+    (event_name, op_index) before each durability-relevant fs step and
+    may raise or `os._exit` to simulate a crash at exactly that point."""
+    global _crash_hook
+    _crash_hook = fn
+
+
+def reset_fs_ops() -> None:
+    global _fs_ops
+    _fs_ops = 0
+
+
+def fs_ops() -> int:
+    return _fs_ops
+
+
+def _fs_event(name: str) -> None:
+    global _fs_ops
+    _fs_ops += 1
+    if _crash_hook is not None:
+        _crash_hook(name, _fs_ops)
+
+
+def _env_crash_hook() -> None:
+    """Arm a hard-exit crash hook from the environment — the subprocess
+    kill-9 harness sets REPRO_STORE_CRASH_AT=<n> (and optionally
+    REPRO_STORE_CRASH_EXIT=<code>) so the Nth fs op terminates the
+    process without cleanup, exactly like a power cut."""
+    at = int(os.environ.get("REPRO_STORE_CRASH_AT", "0") or 0)
+    if at <= 0:
+        return
+    code = int(os.environ.get("REPRO_STORE_CRASH_EXIT", "42"))
+
+    def hook(name: str, count: int) -> None:
+        if count >= at:
+            os._exit(code)
+
+    set_crash_hook(hook)
+
+
+_env_crash_hook()
+
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort directory fsync so a rename survives power loss."""
+    try:
+        fd = os.open(path or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+# ------------------------------------------------------------ segment format
+
+def _encode_segment(records: List[bytes], meta: Dict[str, Any]) -> bytes:
+    mb = json.dumps(meta, sort_keys=True).encode()
+    out = [_HDR.pack(MAGIC, VERSION, 0, len(mb), zlib.crc32(mb)), mb,
+           struct.pack("<I", len(records))]
+    for r in records:
+        out.append(_REC.pack(len(r), zlib.crc32(r)))
+        out.append(r)
+    return b"".join(out)
+
+
+def write_segment(path: str, records: List[bytes],
+                  meta: Optional[Dict[str, Any]] = None, *,
+                  kind: str = "blob") -> None:
+    """Atomically write a checksummed segment: stage to `.tmp`, fsync,
+    rename over `path`, fsync the directory. A crash at any point leaves
+    either the previous file or the new one — never a torn mix."""
+    meta = dict(meta or {})
+    meta.setdefault("kind", kind)
+    blob = _encode_segment(records, meta)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        _fs_event("segment.write")
+        f.flush()
+        os.fsync(f.fileno())
+    _fs_event("segment.fsync")
+    os.replace(tmp, path)
+    _fs_event("segment.rename")
+    _fsync_dir(os.path.dirname(path))
+
+
+def decode_segment(blob: bytes,
+                   path: str = "<bytes>") -> Tuple[Dict[str, Any],
+                                                   List[bytes]]:
+    """Validate and decode segment bytes (magic, version, meta CRC, every
+    record CRC, exact length). Raises CorruptSegmentError on anything
+    short of a byte-perfect segment."""
+    def bad(reason: str) -> CorruptSegmentError:
+        return CorruptSegmentError(f"{path}: {reason}")
+
+    if len(blob) < _HDR.size:
+        raise bad(f"truncated header ({len(blob)} bytes)")
+    magic, ver, flags, mlen, mcrc = _HDR.unpack_from(blob, 0)
+    if magic != MAGIC:
+        raise bad(f"bad magic {magic!r} (expected {MAGIC!r})")
+    if ver != VERSION:
+        raise bad(f"unsupported segment version {ver}")
+    if flags != 0:
+        # no flags are defined in v1; a nonzero value is either a newer
+        # writer or a bit-flip in the (un-CRC'd) header — refuse both
+        raise bad(f"unsupported flags 0x{flags:04x}")
+    off = _HDR.size
+    if len(blob) < off + mlen + 4:
+        raise bad("truncated metadata")
+    mb = blob[off:off + mlen]
+    if zlib.crc32(mb) != mcrc:
+        raise bad("metadata CRC mismatch")
+    try:
+        meta = json.loads(mb.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise bad(f"metadata undecodable: {e}") from None
+    off += mlen
+    (nrec,) = struct.unpack_from("<I", blob, off)
+    off += 4
+    records: List[bytes] = []
+    for i in range(nrec):
+        if len(blob) < off + _REC.size:
+            raise bad(f"truncated at record {i} header")
+        rlen, rcrc = _REC.unpack_from(blob, off)
+        off += _REC.size
+        if len(blob) < off + rlen:
+            raise bad(f"truncated at record {i} payload "
+                      f"({len(blob) - off} of {rlen} bytes)")
+        payload = blob[off:off + rlen]
+        if zlib.crc32(payload) != rcrc:
+            raise bad(f"record {i} CRC mismatch")
+        records.append(payload)
+        off += rlen
+    if off != len(blob):
+        raise bad(f"{len(blob) - off} trailing bytes after last record")
+    return meta, records
+
+
+def read_segment(path: str,
+                 kind: Optional[str] = None) -> Tuple[Dict[str, Any],
+                                                      List[bytes]]:
+    """Read + fully validate a segment file. `kind` (when given) must
+    match the writer's, so a cluster file can't be fed where an index
+    manifest was expected."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    meta, records = decode_segment(blob, path)
+    if kind is not None and meta.get("kind") != kind:
+        raise CorruptSegmentError(
+            f"{path}: kind {meta.get('kind')!r} where {kind!r} expected")
+    return meta, records
+
+
+def verify_segment(path: str, kind: Optional[str] = None) -> bytes:
+    """Validate a segment file and return its raw bytes (used when
+    copying spill files into a generation snapshot: the copy is refused
+    if the source no longer checks out)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    meta, _ = decode_segment(blob, path)
+    if kind is not None and meta.get("kind") != kind:
+        raise CorruptSegmentError(
+            f"{path}: kind {meta.get('kind')!r} where {kind!r} expected")
+    return blob
+
+
+def dump_obj(path: str, obj: Any, *, kind: str = "pickle") -> None:
+    """Atomic, checksummed replacement for a bare ``pickle.dump`` to a
+    path (single-record segment)."""
+    write_segment(path,
+                  [pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)],
+                  kind=kind)
+
+
+def load_obj(path: str, *, kind: Optional[str] = None) -> Any:
+    """Validated replacement for a bare ``pickle.loads`` of a file:
+    magic + length + CRC are checked before any byte reaches pickle."""
+    _, records = read_segment(path, kind=kind)
+    if len(records) != 1:
+        raise CorruptSegmentError(
+            f"{path}: expected 1 record, found {len(records)}")
+    return pickle.loads(records[0])
+
+
+def array_record(a: np.ndarray) -> Tuple[bytes, Dict[str, Any]]:
+    """(payload bytes, spec) for storing a numpy array as one record."""
+    a = np.ascontiguousarray(a)
+    return a.tobytes(), {"dtype": str(a.dtype), "shape": list(a.shape)}
+
+
+def record_array(payload: bytes, spec: Dict[str, Any]) -> np.ndarray:
+    a = np.frombuffer(payload, dtype=np.dtype(spec["dtype"]))
+    expect = int(np.prod(spec["shape"])) if spec["shape"] else 1
+    if a.size != expect:
+        raise CorruptSegmentError(
+            f"array record: {a.size} elements where shape "
+            f"{spec['shape']} implies {expect}")
+    return a.reshape(spec["shape"]).copy()
+
+
+# ------------------------------------------------- atomic dir commit helpers
+
+def atomic_replace_dir(tmp: str, final: str) -> None:
+    """Commit a fully-staged directory over `final` with one rename
+    (removing a previous `final` first — re-commit of the same number).
+    Shared by Journal generations and dist/checkpoint step dirs."""
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    _fs_event("dir.replace")
+    os.replace(tmp, final)
+    _fs_event("dir.replaced")
+    _fsync_dir(os.path.dirname(final))
+
+
+def numbered_dirs(root: str, prefix: str, gate_file: str) -> List[int]:
+    """Committed `<prefix>NNNNNNNN` directories under `root`, ascending.
+    Only directories containing `gate_file` count — a crash mid-commit
+    leaves at worst a `.tmp` (or a gate-less dir) that is ignored."""
+    if not os.path.isdir(root):
+        return []
+    pat = re.compile(r"^" + re.escape(prefix) + r"(\d{8})$")
+    out = []
+    for name in os.listdir(root):
+        m = pat.match(name)
+        if not m:
+            continue
+        if not os.path.isfile(os.path.join(root, name, gate_file)):
+            continue
+        out.append(int(m.group(1)))
+    return sorted(out)
+
+
+# ------------------------------------------------------------ write-ahead log
+
+class WriteAheadLog:
+    """Append-only, CRC-framed mutation log. `append` is durable when it
+    returns (frame written + flushed + fsync'd); `replay` yields every
+    intact frame and silently discards a torn tail — a torn record was
+    by definition never acknowledged."""
+
+    def __init__(self, path: str, generation: int = 0):
+        self.path = path
+        self.generation = generation
+        self._f = None
+
+    def append(self, payload: bytes) -> None:
+        if self._f is None:
+            fresh = (not os.path.exists(self.path)
+                     or os.path.getsize(self.path) == 0)
+            self._f = open(self.path, "ab")
+            if fresh:
+                self._f.write(_WAL_HDR.pack(WAL_MAGIC, VERSION, 0,
+                                            self.generation))
+        frame = _WAL_REC.pack(len(payload), zlib.crc32(payload)) + payload
+        self._f.write(frame)
+        _fs_event("wal.write")
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        _fs_event("wal.fsync")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    @staticmethod
+    def replay(path: str) -> Tuple[List[bytes], bool]:
+        """(intact frames, torn_tail). A missing/empty/torn-header log
+        replays as no ops: nothing in it was ever acknowledged."""
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            return [], False
+        if len(blob) < _WAL_HDR.size:
+            return [], len(blob) > 0
+        magic, ver, _flags, _gen = _WAL_HDR.unpack_from(blob, 0)
+        if magic != WAL_MAGIC or ver != VERSION:
+            return [], True
+        off = _WAL_HDR.size
+        ops: List[bytes] = []
+        while off < len(blob):
+            if len(blob) < off + _WAL_REC.size:
+                return ops, True
+            rlen, rcrc = _WAL_REC.unpack_from(blob, off)
+            off += _WAL_REC.size
+            if len(blob) < off + rlen:
+                return ops, True
+            payload = blob[off:off + rlen]
+            if zlib.crc32(payload) != rcrc:
+                # nothing after a corrupt frame can be trusted
+                return ops, True
+            ops.append(payload)
+            off += rlen
+        return ops, False
+
+
+# ------------------------------------------------------- generation journal
+
+class Journal:
+    """Generation-numbered snapshot directory + per-generation WAL.
+
+    Layout under `root`::
+
+        gen_00000000/           committed snapshot (MANIFEST.json gate)
+        gen_00000001.tmp/       crashed partial commit (ignored)
+        wal_00000001.log        mutations since gen 1 was committed
+
+    `begin()` stages a tmp dir the caller fills with files; `commit()`
+    writes a manifest of per-file CRC32s, renames the dir into place and
+    rotates the WAL (mutations folded into the new generation are
+    dropped). `append()`/`replay()` journal mutations against the
+    current generation."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._staged: Optional[Tuple[int, str]] = None
+        self._wal: Optional[WriteAheadLog] = None
+        self._gen: Optional[int] = self.latest()
+
+    # ------------------------------------------------------------ naming
+
+    def gen_dir(self, g: int) -> str:
+        return os.path.join(self.root, f"{GEN_PREFIX}{g:08d}")
+
+    def wal_path(self, g: int) -> str:
+        return os.path.join(self.root, f"wal_{g:08d}.log")
+
+    def generations(self) -> List[int]:
+        return numbered_dirs(self.root, GEN_PREFIX, MANIFEST)
+
+    def latest(self) -> Optional[int]:
+        gens = self.generations()
+        return gens[-1] if gens else None
+
+    @property
+    def generation(self) -> Optional[int]:
+        return self._gen
+
+    # ----------------------------------------------------------- snapshot
+
+    def begin(self) -> str:
+        """Stage the next generation; returns the tmp dir to fill. A
+        stale tmp from a crashed previous commit is discarded."""
+        g = (self.latest() if self.latest() is not None else -1) + 1
+        tmp = self.gen_dir(g) + ".tmp"
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        self._staged = (g, tmp)
+        return tmp
+
+    def commit(self) -> int:
+        """Manifest + atomic rename + WAL rotation. Crash before the
+        rename: loader keeps the previous generation + its full WAL (no
+        acknowledged op lost). Crash after: the new generation already
+        contains every folded op, the stale WAL is ignored by name and
+        cleaned up on the next commit."""
+        if self._staged is None:
+            raise StoreError("commit() without begin()")
+        g, tmp = self._staged
+        files = {}
+        for name in sorted(os.listdir(tmp)):
+            p = os.path.join(tmp, name)
+            with open(p, "rb") as f:
+                blob = f.read()
+            files[name] = {"size": len(blob), "crc32": zlib.crc32(blob)}
+        man = {"generation": g, "files": files}
+        mp = os.path.join(tmp, MANIFEST)
+        with open(mp, "w") as f:
+            json.dump(man, f, indent=1, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        _fs_event("gen.manifest")
+        atomic_replace_dir(tmp, self.gen_dir(g))
+        _fs_event("gen.commit")
+        self._staged = None
+        # rotate: the committed snapshot subsumes every logged mutation
+        if self._wal is not None:
+            self._wal.close()
+        self._gen = g
+        self._wal = None
+        for name in os.listdir(self.root):
+            if name.startswith("wal_") and name != f"wal_{g:08d}.log":
+                try:
+                    os.remove(os.path.join(self.root, name))
+                except OSError:
+                    pass
+        _fs_event("wal.rotate")
+        return g
+
+    def manifest(self, g: int) -> Dict[str, Any]:
+        with open(os.path.join(self.gen_dir(g), MANIFEST)) as f:
+            return json.load(f)
+
+    def read_file(self, g: int, name: str, verify: bool = True) -> bytes:
+        """A generation file's bytes, checked against the manifest CRC."""
+        path = os.path.join(self.gen_dir(g), name)
+        with open(path, "rb") as f:
+            blob = f.read()
+        if verify:
+            ent = self.manifest(g)["files"].get(name)
+            if ent is None:
+                raise CorruptSegmentError(f"{path}: not in manifest")
+            if len(blob) != ent["size"] or zlib.crc32(blob) != ent["crc32"]:
+                raise CorruptSegmentError(
+                    f"{path}: manifest CRC/size mismatch (bit-rot inside "
+                    f"a committed generation)")
+        return blob
+
+    # ---------------------------------------------------------------- WAL
+
+    def append(self, payload: bytes) -> None:
+        if self._gen is None:
+            raise StoreError(
+                "WAL append before any committed generation: call save() "
+                "once to establish the base snapshot")
+        if self._wal is None:
+            self._wal = WriteAheadLog(self.wal_path(self._gen), self._gen)
+        self._wal.append(payload)
+
+    def replay(self) -> Tuple[List[bytes], bool]:
+        if self._gen is None:
+            return [], False
+        return WriteAheadLog.replay(self.wal_path(self._gen))
+
+    def wal_records(self) -> int:
+        return len(self.replay()[0])
+
+    def close(self) -> None:
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+
+    # -------------------------------------------------------------- scrub
+
+    def scrub(self, deep: bool = True) -> List[Dict[str, Any]]:
+        """Verify every committed generation (manifest CRCs, and with
+        `deep` every segment's internal record CRCs) and the active WAL.
+        Returns one report dict per checked item; `ok=False` entries are
+        corruption."""
+        out: List[Dict[str, Any]] = []
+        for g in self.generations():
+            try:
+                man = self.manifest(g)
+            except (OSError, json.JSONDecodeError) as e:
+                out.append({"item": self.gen_dir(g), "ok": False,
+                            "error": f"unreadable manifest: {e}"})
+                continue
+            for name in man["files"]:
+                path = os.path.join(self.gen_dir(g), name)
+                rep = {"item": path, "ok": True}
+                try:
+                    blob = self.read_file(g, name)
+                    if deep and name.endswith((".seg", ".bin")):
+                        decode_segment(blob, path)
+                except (OSError, StoreError) as e:
+                    rep = {"item": path, "ok": False, "error": str(e)}
+                out.append(rep)
+        if self._gen is not None:
+            wp = self.wal_path(self._gen)
+            if os.path.exists(wp):
+                ops, torn = WriteAheadLog.replay(wp)
+                out.append({"item": wp, "ok": not torn, "records": len(ops),
+                            **({"error": "torn/corrupt tail"} if torn
+                               else {})})
+        return out
+
+
+def scrub_path(path: str, deep: bool = True) -> List[Dict[str, Any]]:
+    """Scrub either a Journal root (has gen_* dirs / wal_* logs) or a
+    plain spill directory of segment files."""
+    if not os.path.isdir(path):
+        meta_ok: Dict[str, Any] = {"item": path, "ok": True}
+        try:
+            read_segment(path)
+        except (OSError, StoreError) as e:
+            meta_ok = {"item": path, "ok": False, "error": str(e)}
+        return [meta_ok]
+    names = os.listdir(path)
+    if any(_GEN_RE.match(n) for n in names) or any(
+            n.startswith("wal_") for n in names):
+        return Journal(path).scrub(deep=deep)
+    out = []
+    for name in sorted(names):
+        p = os.path.join(path, name)
+        if not os.path.isfile(p) or name.endswith(
+                (".tmp", ".quarantined")):
+            continue
+        try:
+            read_segment(p)
+            out.append({"item": p, "ok": True})
+        except (OSError, StoreError) as e:
+            out.append({"item": p, "ok": False, "error": str(e)})
+    return out
+
+
+def quarantine_file(path: str) -> Optional[str]:
+    """Move a corrupt file aside (``path + ".quarantined"``) so readers
+    stop tripping on it but the bytes stay for forensics/rebuild."""
+    dst = path + ".quarantined"
+    try:
+        os.replace(path, dst)
+        return dst
+    except OSError:
+        return None

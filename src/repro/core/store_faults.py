@@ -1,0 +1,164 @@
+"""Deterministic crash + corruption injection for the storage layer.
+
+Same philosophy as `serving/faults.py`: faults are indexed by a
+deterministic COUNTER — here the filesystem-op index that
+`store._fs_event` advances — never by wall clock, so the same plan
+crashes at the same byte boundary on any host speed.
+
+Two crash modes:
+
+  * `CrashPlan(at=k)` — in-process: the k-th fs op raises
+    `InjectedCrash`. The test abandons the live object and re-loads from
+    disk, which exercises exactly the on-disk states a kill -9 between
+    two syscalls can produce (writes are only considered durable after
+    the fsync events this module can land between).
+  * `REPRO_STORE_CRASH_AT=<k>` env var — hard: the k-th fs op calls
+    `os._exit`, no flush, no atexit. Used by the subprocess kill-9 tests
+    and `python -m repro.core.store_faults` below, which is the driver
+    those tests (and `tools/soak_store.py`) spawn.
+
+Corruption fuzzing is byte-level: `flip_byte` / `truncate_file` mutate a
+committed file in place, modeling bit-rot and torn flash pages.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import store
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by in-process crash plans so tests can tell scripted
+    crashes apart from real bugs."""
+
+
+class CrashPlan:
+    """Context manager: crash at the `at`-th filesystem op (1-based)
+    counted from entry. `fired` records whether the plan triggered."""
+
+    def __init__(self, at: int, exit_code: Optional[int] = None):
+        self.at = at
+        self.exit_code = exit_code
+        self.fired = False
+
+    def _hook(self, name: str, count: int) -> None:
+        if count == self.at:
+            self.fired = True
+            if self.exit_code is not None:
+                os._exit(self.exit_code)
+            raise InjectedCrash(f"injected crash at fs op {count} ({name})")
+
+    def __enter__(self) -> "CrashPlan":
+        store.reset_fs_ops()
+        store.set_crash_hook(self._hook)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        store.set_crash_hook(None)
+
+
+def count_fs_ops(fn: Callable[[], None]) -> int:
+    """Run `fn` with a counting (non-crashing) hook; return how many fs
+    ops it performed — the sweep bound for a CrashPlan series."""
+    store.reset_fs_ops()
+    store.set_crash_hook(None)
+    try:
+        fn()
+    finally:
+        n = store.fs_ops()
+    return n
+
+
+# ----------------------------------------------------------- byte fuzzing
+
+def flip_byte(path: str, offset: int, xor: int = 0xFF) -> None:
+    """XOR one byte in place (bit-rot model). Offset is clamped into the
+    file so seeded sweeps never miss."""
+    size = os.path.getsize(path)
+    if size == 0:
+        return
+    offset = int(offset) % size
+    with open(path, "r+b") as f:
+        f.seek(offset)
+        b = f.read(1)
+        f.seek(offset)
+        f.write(bytes([b[0] ^ (xor & 0xFF)]))
+
+
+def truncate_file(path: str, keep_bytes: int) -> None:
+    """Truncate to `keep_bytes` (torn-page / partial-write model)."""
+    with open(path, "r+b") as f:
+        f.truncate(max(0, int(keep_bytes)))
+
+
+# ----------------------------------------------- subprocess kill-9 driver
+
+def _driver_workload(root: str, stage: str, seed: int = 0,
+                     n: int = 96, dim: int = 16, wal_ops: int = 12) -> None:
+    """Deterministic EcoVector workload for the kill-9 harness.
+
+    Stages (each includes the previous ones' on-disk effects):
+      build_save : build + first generation save
+      wal        : + `wal_ops` journaled insert/delete mutations, each
+                   acknowledged into ``<root>/acked.txt`` AFTER the
+                   store-level op returns (the parent's ground truth for
+                   "zero acknowledged writes lost")
+      compact    : + a second save() folding the WAL into gen 1
+
+    The ack file is written with raw os-level appends + fsync on a side
+    channel so it never perturbs the injected fs-op count.
+    """
+    from repro.core.ecovector import EcoVector
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, dim)).astype(np.float32)
+    ev = EcoVector(dim, n_clusters=8, M=8, ef_construction=32,
+                   storage_dir=os.path.join(root, "live"), seed=seed)
+    ev.build(X)
+    ev.save(os.path.join(root, "journal"))
+    if stage == "build_save":
+        return
+    ack_fd = os.open(os.path.join(root, "acked.txt"),
+                     os.O_WRONLY | os.O_CREAT | os.O_APPEND)
+
+    def ack(line: str) -> None:
+        os.write(ack_fd, (line + "\n").encode())
+        os.fsync(ack_fd)
+
+    base = 10 ** 6
+    for i in range(wal_ops):
+        if i % 3 == 2:
+            vid = base + i - 1
+            ev.delete(vid)
+            ack(f"delete {vid}")
+        else:
+            vec = rng.normal(size=(dim,)).astype(np.float32)
+            ev.insert(base + i, vec)
+            ack(f"insert {base + i}")
+    if stage == "wal":
+        return
+    ev.save()
+    ack("compacted")
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--root", required=True)
+    p.add_argument("--stage", default="wal",
+                   choices=["build_save", "wal", "compact"])
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--wal-ops", type=int, default=12)
+    args = p.parse_args(argv)
+    # REPRO_STORE_CRASH_AT in the environment arms the hard-exit hook at
+    # store import time; an uninjected run completes and exits 0.
+    _driver_workload(args.root, args.stage, seed=args.seed,
+                     wal_ops=args.wal_ops)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,15 +17,26 @@ dirty; the next `pack()` re-embeds just the dirty documents (one batched
 embed call for all of them) and rewrites their blocks in place, growing
 CAPW (and the block table) geometrically on overflow. The jnp device
 mirror refreshes per dirty block, not wholesale.
+
+Durability (DESIGN.md §12): `save()` commits texts + the embedded block
+pack as a checksummed generation snapshot (so a restart re-embeds
+NOTHING), journaled `add`/`update`/`remove` ops hit a fsync'd WAL before
+they apply, and `load()` replays the journal — replayed docs simply mark
+their blocks dirty, so the next `pack()` re-embeds only them.
 """
 from __future__ import annotations
 
+import os
+import pickle
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core import store
 from repro.core.scr import SCRConfig, sliding_windows, split_sentences
+
+_STATE_KIND = "window_index.state"
 
 
 @dataclass
@@ -35,6 +46,7 @@ class WindowIndexStats:
     grows: int = 0               # geometric CAPW / row-table growths
     embed_calls: int = 0         # batched embed invocations
     windows_embedded: int = 0    # total window texts embedded
+    wal_replayed: int = 0        # mutations replayed by load()
 
 
 class WindowIndex:
@@ -58,6 +70,10 @@ class WindowIndex:
         self._dirty: Set[int] = set()
         self._mirror = None                        # jnp (data, lens)
         self._mirror_dirty: Set[int] = set()
+        # durability state (DESIGN.md §12)
+        self._journal: Optional[store.Journal] = None
+        self._persist_root: Optional[str] = None
+        self._replaying = False
 
     # ------------------------------------------------------------- build
 
@@ -124,9 +140,17 @@ class WindowIndex:
 
     # ----------------------------------------------------------- updates
 
+    def _wal_append(self, op: tuple):
+        """Journal a mutation before applying it (fsync'd — survives
+        kill -9). No-op until the index has been `save()`d once."""
+        if self._journal is not None and not self._replaying:
+            self._journal.append(
+                pickle.dumps(op, protocol=pickle.HIGHEST_PROTOCOL))
+
     def add(self, text: str) -> int:
         """Append a document; only its block is (lazily) embedded and
         packed. Returns the new doc id."""
+        self._wal_append(("add", text))
         di = len(self.texts)
         self.texts.append("")
         self.sents.append([])
@@ -138,12 +162,14 @@ class WindowIndex:
 
     def update(self, di: int, text: str):
         """Replace a document's text; marks only its block dirty."""
+        self._wal_append(("update", di, text))
         self._set_doc(di, text)
         self._mark_dirty(di)
 
     def remove(self, di: int):
         """Drop a document's windows (its block empties; the slot stays,
         mirroring how retrieval indexes tombstone ids)."""
+        self._wal_append(("remove", di))
         self._set_doc(di, "")
         self._mark_dirty(di)
 
@@ -224,6 +250,95 @@ class WindowIndex:
             self._mirror = (mdata, jnp.array(lens))
             self._mirror_dirty.clear()
         return self._mirror
+
+    # ------------------------------------------------------- persistence
+
+    def save(self, root: Optional[str] = None) -> int:
+        """Commit texts + the embedded block pack as the next generation
+        under `root` (flushing dirty blocks first, so the snapshot never
+        needs re-embedding at load), then rotate the WAL — the compaction
+        step. Returns the generation number."""
+        root = root or self._persist_root
+        if root is None:
+            raise ValueError("save() needs a root directory (none given "
+                             "and no previous save to reuse)")
+        data, lens = self.pack()   # fold dirty blocks into the snapshot
+        if self._journal is None or self._journal.root != root:
+            self._journal = store.Journal(root)
+        tmp = self._journal.begin()
+        data_bytes, data_spec = store.array_record(data)
+        lens_bytes, lens_spec = store.array_record(lens)
+        state = {"texts": list(self.texts), "cfg": self.cfg,
+                 "dim": self._dim}
+        store.write_segment(
+            os.path.join(tmp, "windows.seg"),
+            [pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL),
+             data_bytes, lens_bytes],
+            {"data": data_spec, "lens": lens_spec}, kind=_STATE_KIND)
+        g = self._journal.commit()
+        self._persist_root = root
+        return g
+
+    @classmethod
+    def load(cls, embed: Callable, root: str,
+             replay_wal: bool = True) -> "WindowIndex":
+        """Restore the latest generation + WAL replay. Sentences/spans
+        are recomputed from the saved texts (deterministic given the
+        config); the embedded pack is restored bit-identically, so no
+        embed call happens unless the WAL replays mutations — those only
+        mark blocks dirty for the next `pack()`."""
+        j = store.Journal(root)
+        g = j.latest()
+        if g is None:
+            raise FileNotFoundError(f"no committed generation under "
+                                    f"{root}")
+        path = os.path.join(j.gen_dir(g), "windows.seg")
+        meta, recs = store.decode_segment(j.read_file(g, "windows.seg"),
+                                          path)
+        if meta.get("kind") != _STATE_KIND or len(recs) != 3:
+            raise store.CorruptSegmentError(
+                f"{path}: window-index state segment malformed")
+        state = pickle.loads(recs[0])
+        self = cls(embed, cfg=state["cfg"], dim=state["dim"])
+        texts = state["texts"]
+        n = len(texts)
+        self.texts = [""] * n
+        self.sents = [[] for _ in range(n)]
+        self.spans = [[] for _ in range(n)]
+        self.ntok = [0] * n
+        for di, text in enumerate(texts):
+            self._set_doc(di, text)
+        self._data = store.record_array(recs[1], meta["data"])
+        self._lens = store.record_array(recs[2], meta["lens"])
+        for di in range(n):
+            # defensive: a span count disagreeing with the saved pack
+            # (config drift) re-embeds just that block on the next pack()
+            if int(self._lens[di]) != len(self.spans[di]):
+                self._dirty.add(di)
+        self._journal = j
+        self._persist_root = root
+        if replay_wal:
+            ops_raw, _torn = j.replay()
+            self._replaying = True
+            try:
+                for raw in ops_raw:
+                    self._apply_wal(pickle.loads(raw))
+            finally:
+                self._replaying = False
+            self.stats.wal_replayed = len(ops_raw)
+        return self
+
+    def _apply_wal(self, op: tuple):
+        kind = op[0]
+        if kind == "add":
+            self.add(op[1])
+        elif kind == "update":
+            self.update(int(op[1]), op[2])
+        elif kind == "remove":
+            self.remove(int(op[1]))
+        else:
+            raise store.CorruptSegmentError(
+                f"unknown WAL op {kind!r} (journal from a newer version?)")
 
     # -------------------------------------------------------- accounting
 

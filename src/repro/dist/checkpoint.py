@@ -8,7 +8,10 @@ Layout (one directory per step):
 Writers stage everything under ``step_XXXXXXXX.tmp`` and commit with one
 ``os.replace`` — readers (`latest_step`) only trust directories whose
 manifest exists at the final path, so a crash mid-write leaves at worst a
-stale ``.tmp`` that the next save of the same step overwrites. Leaf bytes
+stale ``.tmp`` that the next save of the same step overwrites. The
+stage→rename commit and gated numbered-dir listing are the shared
+primitives in `core/store.py` (`atomic_replace_dir` / `numbered_dirs`),
+which the retrieval indexes' generation snapshots use too. Leaf bytes
 are stored raw (not .npy) because bfloat16/int8 moment leaves use
 ml_dtypes dtypes that predate numpy's format support; the manifest carries
 the dtype names and `restore` rebuilds arrays with `np.frombuffer`.
@@ -21,14 +24,14 @@ from __future__ import annotations
 
 import json
 import os
-import re
 import threading
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-_STEP_RE = re.compile(r"^step_(\d{8})$")
+from repro.core.store import atomic_replace_dir, numbered_dirs
+
 _MANIFEST = "manifest.json"
 
 
@@ -91,10 +94,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *,
                                        "dtype": str(a.dtype)})
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
-        if os.path.isdir(final):  # re-save of the same step
-            import shutil
-            shutil.rmtree(final)
-        os.replace(tmp, final)
+        atomic_replace_dir(tmp, final)  # re-save of the same step is ok
 
     if blocking:
         write()
@@ -133,18 +133,10 @@ def restore(ckpt_dir: str, step: int, like: Any) -> Any:
 
 
 def available_steps(ckpt_dir: str) -> list:
-    """Committed checkpoint steps, ascending (partial writes ignored)."""
-    if not os.path.isdir(ckpt_dir):
-        return []
-    steps = []
-    for name in os.listdir(ckpt_dir):
-        m = _STEP_RE.match(name)
-        if not m:
-            continue
-        if not os.path.isfile(os.path.join(ckpt_dir, name, _MANIFEST)):
-            continue  # crashed before the manifest/rename commit
-        steps.append(int(m.group(1)))
-    return sorted(steps)
+    """Committed checkpoint steps, ascending (partial writes — dirs
+    without a manifest — are ignored, exactly like uncommitted index
+    generations)."""
+    return numbered_dirs(ckpt_dir, "step_", _MANIFEST)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:

@@ -11,6 +11,7 @@ so Table-5-style comparisons run offline without a phone.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -70,7 +71,8 @@ class RAGBase:
                  top_k: int = 3, slm: str = "qwen25_0_5b", index=None,
                  generator: Optional[Callable] = None,
                  device_retrieval: Optional[bool] = None,
-                 gen_arch: str = "qwen25_0_5b"):
+                 gen_arch: str = "qwen25_0_5b",
+                 _skip_corpus_embed: bool = False):
         self.docs = list(docs)
         self.embed = embed
         self.top_k = top_k
@@ -91,7 +93,10 @@ class RAGBase:
         if hasattr(embed, "fit") and not getattr(embed, "fitted", True):
             embed.fit(self.docs)
         t0 = time.perf_counter()
-        self.doc_vecs = np.asarray(embed(self.docs), np.float32)
+        # a pipeline restored from a durable snapshot skips the corpus
+        # embed entirely — the whole point of persisting retrieval state
+        self.doc_vecs = (None if (_skip_corpus_embed and index is not None)
+                         else np.asarray(embed(self.docs), np.float32))
         self.index = index or self._build_index()
         self.build_s = time.perf_counter() - t0
 
@@ -357,17 +362,75 @@ class MobileRAG(RAGBase):
     name = "MobileRAG"
     device_retrieval = None          # auto: fused device path on TPU
 
-    def __init__(self, *args, scr: SCRConfig = SCRConfig(),
-                 use_window_index: bool = True, **kw):
-        super().__init__(*args, **kw)
+    def __init__(self, docs: Sequence[str], embed: Callable, *,
+                 scr: SCRConfig = SCRConfig(),
+                 use_window_index: bool = True,
+                 retrieval_state: Optional[str] = None, **kw):
+        """`retrieval_state` points at a durable snapshot directory
+        (DESIGN.md §12): when it holds a committed generation, EcoVector
+        and the window index are restored from disk (WAL replayed, zero
+        re-embedding); otherwise the pipeline builds normally and commits
+        its first generation there. Subsequent index mutations are
+        journaled; `save_retrieval()` compacts them into a new
+        generation."""
+        self.retrieval_state = retrieval_state
+        loaded_index = None
+        loaded_wi = None
+        if retrieval_state is not None:
+            loaded_index = self._load_state_part(
+                EcoVector.load, os.path.join(retrieval_state, "ecovector"))
+            if use_window_index:
+                loaded_wi = self._load_state_part(
+                    lambda root: WindowIndex.load(embed, root),
+                    os.path.join(retrieval_state, "windows"))
+        if loaded_index is not None:
+            super().__init__(docs, embed, index=loaded_index,
+                             _skip_corpus_embed=True, **kw)
+        else:
+            super().__init__(docs, embed, **kw)
         self.scr_cfg = scr
-        self.window_index = None
+        self.window_index = loaded_wi
         self.scr_build_s = 0.0
         self.scr_fallbacks = 0       # SCR stage raised -> full-doc prompt
-        if use_window_index:
+        if use_window_index and self.window_index is None:
             t0 = time.perf_counter()
             self.window_index = WindowIndex(self.embed, scr).build(self.docs)
             self.scr_build_s = time.perf_counter() - t0
+        if self.window_index is not None:
+            self._sync_window_index()   # docs beyond the snapshot
+        if retrieval_state is not None and (loaded_index is None
+                                            or loaded_wi is None):
+            self.save_retrieval()       # establish / complete the snapshot
+
+    @staticmethod
+    def _load_state_part(loader, root: str):
+        """One component's restore: absent state means build-from-scratch
+        (first run); corrupt state is a loud warning, then rebuild — a
+        rotten snapshot must never brick pipeline construction."""
+        from repro.core import store as _store
+        try:
+            return loader(root)
+        except FileNotFoundError:
+            return None
+        except (_store.StoreError, OSError) as e:
+            import warnings
+            warnings.warn(f"retrieval state under {root} failed "
+                          f"validation ({e}); rebuilding from source",
+                          stacklevel=3)
+            return None
+
+    def save_retrieval(self, root: Optional[str] = None) -> None:
+        """Commit the current retrieval state (EcoVector generation +
+        window-index generation) under `root`/`retrieval_state`, folding
+        any journaled mutations into the new snapshots."""
+        root = root or self.retrieval_state
+        if root is None:
+            raise ValueError("no retrieval_state directory configured")
+        self.retrieval_state = root
+        if hasattr(self.index, "save"):
+            self.index.save(os.path.join(root, "ecovector"))
+        if self.window_index is not None:
+            self.window_index.save(os.path.join(root, "windows"))
 
     def _sync_window_index(self):
         """Pick up documents appended to `self.docs` since the index was

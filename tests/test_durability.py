@@ -1,0 +1,515 @@
+"""End-to-end durability: index save/load bit-identity under churn,
+WAL replay, crash sweeps (in-process and kill -9 subprocess), byte-flip
+quarantine with degraded search, and pipeline-level snapshot restore."""
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import store, store_faults
+from repro.core.baselines import IVFDisk
+from repro.core.ecovector import EcoVector
+from repro.core.hnsw import HNSW
+from repro.core.scr import SCRConfig
+from repro.core.window_index import WindowIndex
+from repro.serving.embedder import HashEmbedder
+
+DIM = 16
+
+
+@pytest.fixture(autouse=True)
+def _clean_hooks():
+    store.set_crash_hook(None)
+    store.reset_fs_ops()
+    yield
+    store.set_crash_hook(None)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    centers = rng.normal(scale=4.0, size=(8, DIM))
+    X = (centers.repeat(40, axis=0)
+         + rng.normal(size=(320, DIM))).astype(np.float32)
+    Q = X[rng.choice(len(X), 16)] + 0.05 * rng.normal(
+        size=(16, DIM)).astype(np.float32)
+    return X, Q.astype(np.float32)
+
+
+def _ev(X, **kw):
+    kw.setdefault("n_clusters", 8)
+    kw.setdefault("M", 8)
+    kw.setdefault("ef_construction", 32)
+    return EcoVector(DIM, **kw).build(X)
+
+
+def _same_search(a, b, Q, k=10, n_probe=8):
+    for q in Q:
+        ia, da = a.search(q, k, n_probe=n_probe)
+        ib, db = b.search(q, k, n_probe=n_probe)
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(da, db)
+
+
+# --------------------------------------------------- save/load roundtrip
+
+def test_ecovector_save_load_bit_identical(tmp_path, data):
+    X, Q = data
+    ev = _ev(X)
+    g = ev.save(str(tmp_path / "j"))
+    assert g == 0
+    ev2 = EcoVector.load(str(tmp_path / "j"))
+    assert ev2.assign == ev.assign
+    _same_search(ev, ev2, Q)
+    # the fused device path agrees too (interpret-mode kernel off-TPU)
+    ia, _ = ev.search_device_batched(Q[:4], k=5, n_probe=8,
+                                     use_pallas=False)
+    ib, _ = ev2.search_device_batched(Q[:4], k=5, n_probe=8,
+                                      use_pallas=False)
+    np.testing.assert_array_equal(ia, ib)
+
+
+def test_ecovector_churn_cycles(tmp_path, data):
+    """build -> save -> load stays bit-identical across repeated
+    insert/update/remove cycles with a compaction each round."""
+    X, Q = data
+    rng = np.random.default_rng(3)
+    ev = _ev(X)
+    root = str(tmp_path / "j")
+    ev.save(root)
+    base = 10 ** 6
+    for cycle in range(3):
+        for i in range(6):
+            vid = base + 6 * cycle + i
+            ev.insert(vid, rng.normal(size=DIM).astype(np.float32))
+        ev.delete(base + 6 * cycle)                      # remove
+        upd = base + 6 * cycle + 1                       # update = del+ins
+        ev.delete(upd)
+        ev.insert(upd, rng.normal(size=DIM).astype(np.float32))
+        g = ev.save()                                    # compact
+        assert g == cycle + 1
+        ev2 = EcoVector.load(root)
+        assert ev2.assign == ev.assign
+        assert ev2.stats.wal_replayed == 0               # all folded
+        _same_search(ev, ev2, Q)
+
+
+def test_ecovector_wal_replay(tmp_path, data):
+    X, Q = data
+    rng = np.random.default_rng(4)
+    ev = _ev(X)
+    root = str(tmp_path / "j")
+    ev.save(root)
+    for i in range(5):
+        ev.insert(10 ** 6 + i, rng.normal(size=DIM).astype(np.float32))
+    ev.delete(10 ** 6 + 2)
+    ev2 = EcoVector.load(root)                           # no second save
+    assert ev2.stats.wal_replayed == 6
+    assert ev2.assign == ev.assign
+    _same_search(ev, ev2, Q)
+
+
+# ------------------------------------------------------- crash injection
+
+def test_ecovector_save_crash_sweep(tmp_path, data):
+    """kill at EVERY fs op during save(): the journal always reloads to
+    a complete index (previous generation) or reports none committed."""
+    X, Q = data
+    ev = _ev(X)
+    total = store_faults.count_fs_ops(
+        lambda: ev.save(str(tmp_path / "probe")))
+    assert total >= 5
+    for at in range(1, total + 1):
+        root = str(tmp_path / f"r{at}")
+        ev._journal = None                   # fresh journal per sweep
+        with store_faults.CrashPlan(at) as plan:
+            try:
+                ev.save(root)
+            except store_faults.InjectedCrash:
+                pass
+        try:
+            ev2 = EcoVector.load(root)
+        except FileNotFoundError:
+            assert plan.fired                # nothing committed yet
+            continue
+        assert ev2.assign == ev.assign
+        ids, _ = ev2.search(Q[0], 5, n_probe=8)
+        assert len(ids) == 5
+    ev._journal = None
+
+
+def test_wal_crash_never_loses_acknowledged_ops(tmp_path, data):
+    """Crash at every fs op inside a journaled mutation burst: every op
+    that RETURNED before the crash is present after reload."""
+    X, Q = data
+    rng = np.random.default_rng(5)
+    base_root = str(tmp_path / "base")
+    ev0 = _ev(X)
+    ev0.save(base_root)
+    vecs = rng.normal(size=(6, DIM)).astype(np.float32)
+
+    ops = [("delete", 10 ** 6 + 1) if i == 4 else ("insert", 10 ** 6 + i)
+           for i in range(len(vecs))]
+
+    def burst(ev, acked):
+        for i, (op, vid) in enumerate(ops):
+            if op == "delete":
+                ev.delete(vid)
+            else:
+                ev.insert(vid, vecs[i])
+            acked.append((op, vid))
+
+    total = store_faults.count_fs_ops(lambda: burst(ev0, []))
+    for at in range(1, total + 1, 2):
+        root = str(tmp_path / f"r{at}")
+        shutil.copytree(base_root, root)
+        ev = EcoVector.load(root)
+        acked = []
+        with store_faults.CrashPlan(at):
+            try:
+                burst(ev, acked)
+            except store_faults.InjectedCrash:
+                pass
+        ev2 = EcoVector.load(root)
+        # expected membership from ACKED ops; the single in-flight op
+        # (crash mid-append) was never acknowledged — it may or may not
+        # have reached the WAL, so its vid is exempt either way
+        expect = {}
+        for op, vid in acked:
+            expect[vid] = (op == "insert")
+        inflight = ops[len(acked)][1] if len(acked) < len(ops) else None
+        for vid, present in expect.items():
+            if vid == inflight:
+                continue
+            assert (vid in ev2.assign) == present, (at, vid, present)
+
+
+def _run_driver(root, stage, crash_at=None, timeout=300):
+    env = dict(os.environ, PYTHONPATH="src")
+    if crash_at is not None:
+        env["REPRO_STORE_CRASH_AT"] = str(crash_at)
+    cmd = [sys.executable, "-m", "repro.core.store_faults",
+           "--root", str(root), "--stage", stage]
+    return subprocess.run(cmd, env=env, cwd=".", capture_output=True,
+                          text=True, timeout=timeout)
+
+
+def _driver_ops(wal_ops=12, base=10 ** 6):
+    """The driver's deterministic mutation sequence (mirror of
+    store_faults._driver_workload)."""
+    return [("delete", base + i - 1) if i % 3 == 2 else
+            ("insert", base + i) for i in range(wal_ops)]
+
+
+def _check_acked_survive(root):
+    """Replay the parent-visible ack log against the reloaded index:
+    ground truth for 'zero acknowledged writes lost'. The one op in
+    flight at the kill (durable in the WAL but never acknowledged) is
+    exempt — surviving unacked ops are allowed, losing acked ones is
+    not."""
+    ack_path = os.path.join(root, "acked.txt")
+    acked = []
+    compacted = False
+    if os.path.exists(ack_path):
+        with open(ack_path) as f:
+            for line in f.read().splitlines():
+                parts = line.split()
+                if parts[0] in ("insert", "delete"):
+                    acked.append((parts[0], int(parts[1])))
+                elif parts[0] == "compacted":
+                    compacted = True
+    ops = _driver_ops()
+    assert acked == ops[:len(acked)]
+    inflight = ops[len(acked)][1] if len(acked) < len(ops) else None
+    live = {}
+    for op, vid in acked:
+        live[vid] = (op == "insert")
+    try:
+        ev = EcoVector.load(os.path.join(root, "journal"))
+    except FileNotFoundError:
+        # killed before the first generation committed: legal only if
+        # nothing was ever acknowledged
+        assert not acked and not compacted
+        return
+    for vid, present in live.items():
+        if vid == inflight:
+            continue
+        assert (vid in ev.assign) == present, (vid, present)
+    if compacted:
+        assert store.Journal(os.path.join(root, "journal")).latest() >= 1
+    ids, _ = ev.search(np.zeros(DIM, np.float32), 5, n_probe=8)
+    assert len(ids) == 5
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("stage,crash_at", [
+    # driver fs-op phases: 1-27 build spills + state, 28-32 first
+    # generation commit, 33-92 WAL'd mutations (5 ops each), 93-100
+    # compaction commit
+    ("wal", 10), ("wal", 28), ("wal", 34), ("wal", 52), ("wal", 91),
+    ("compact", 94), ("compact", 97), ("compact", 99),
+])
+def test_kill9_subprocess_recovery(tmp_path, stage, crash_at):
+    """Real os._exit at the crash_at-th fs op of the driver workload
+    (mid-save, mid-WAL-append, or mid-compaction): the parent reloads
+    the journal and finds every acknowledged mutation."""
+    p = _run_driver(tmp_path, stage, crash_at=crash_at)
+    assert p.returncode in (42, 0), p.stdout + p.stderr
+    _check_acked_survive(str(tmp_path))
+
+
+@pytest.mark.slow
+def test_kill9_uninjected_run_completes(tmp_path):
+    p = _run_driver(tmp_path, "compact")
+    assert p.returncode == 0, p.stdout + p.stderr
+    _check_acked_survive(str(tmp_path))
+    assert store.Journal(str(tmp_path / "journal")).latest() == 1
+
+
+# --------------------------------------------------- corruption at query
+
+def test_byte_flip_quarantine_search_degrades(data):
+    """A bit-flipped cluster file is detected on first touch, the
+    cluster quarantined, and every query still returns k results."""
+    X, Q = data
+    ev = _ev(X)
+    ev.device_pack()                          # salvage source
+    victim = 2
+    store_faults.flip_byte(ev._path(victim), 100)
+    with pytest.warns(UserWarning, match="quarantin"):
+        for q in Q:
+            ids, _ = ev.search(q, 10, n_probe=8)
+            assert len(ids) == 10
+    assert ev.stats.corrupt_reads == 1        # detected exactly once
+    assert ev.stats.quarantined == 1
+    assert victim in ev._quarantined
+    assert os.path.exists(ev._path(victim) + ".quarantined")
+    # host and device agree on the degraded state
+    ia, _ = ev.search_device_batched(Q[:4], k=5, n_probe=8,
+                                     use_pallas=False)
+    for r, q in zip(ia, Q[:4]):
+        ib, _ = ev.search(q, 5, n_probe=8)
+        np.testing.assert_array_equal(np.asarray(r), ib)
+    # rebuild from the salvaged pack block restores the cluster
+    n = ev.rebuild_cluster(victim)
+    assert n > 0
+    assert ev.stats.rebuilt == 1 and ev.stats.quarantined == 0
+    assert not os.path.exists(ev._path(victim) + ".quarantined")
+    ids, _ = ev.search(Q[0], 10, n_probe=8)
+    assert len(ids) == 10
+
+
+def test_truncated_spill_file_is_clear_error(data):
+    """Satellite: _load_cluster on a truncated spill file raises the
+    dedicated corruption error, never a pickle internals blowup."""
+    X, _ = data
+    ev = _ev(X)
+    p = ev._path(0)
+    store_faults.truncate_file(p, os.path.getsize(p) // 2)
+    with pytest.raises(store.CorruptSegmentError, match="truncated"):
+        ev._load_cluster(0)
+
+
+def test_mutations_on_quarantined_cluster(data):
+    """insert routed to a quarantined cluster triggers rebuild-from-
+    salvage; delete of a vanished id is a no-op, not a crash."""
+    X, _ = data
+    ev = _ev(X)
+    ev.device_pack()
+    victim = int(ev.assign[0])
+    store_faults.flip_byte(ev._path(victim), 120)
+    with pytest.warns(UserWarning):
+        assert ev._load_cluster_checked(victim) is None
+    members = [vid for vid, c in list(ev.assign.items())]
+    assert 0 not in ev.assign                 # pruned with its cluster
+    ev.delete(0)                              # tolerated
+    ev.insert(0, X[0])                        # routes back -> rebuild
+    assert 0 in ev.assign
+    assert ev.stats.rebuilt == 1 and ev.stats.quarantined == 0
+    ids, _ = ev.search(X[0], 5, n_probe=8)
+    assert 0 in ids
+
+
+def test_save_refuses_to_launder_corruption(tmp_path, data):
+    """A cluster that rots BEFORE save is quarantined during the
+    verify-on-copy pass — the committed generation only contains files
+    that check out, and it loads cleanly."""
+    X, Q = data
+    ev = _ev(X)
+    ev.device_pack()
+    store_faults.flip_byte(ev._path(3), 90)
+    with pytest.warns(UserWarning):
+        ev.save(str(tmp_path / "j"))
+    reps = store.scrub_path(str(tmp_path / "j"))
+    assert all(r["ok"] for r in reps)
+    ev2 = EcoVector.load(str(tmp_path / "j"))
+    assert 3 in ev2._quarantined
+    for q in Q:
+        assert len(ev2.search(q, 10, n_probe=8)[0]) == 10
+
+
+# ------------------------------------------------- other index families
+
+def test_hnsw_save_load(tmp_path, data):
+    X, Q = data
+    g = HNSW(DIM, M=8, ef_construction=40, seed=0)
+    for i, v in enumerate(X[:120]):
+        g.insert(int(i), v)
+    p = str(tmp_path / "g.bin")
+    g.save(p)
+    g2 = HNSW.load(p)
+    for q in Q:
+        np.testing.assert_array_equal(g.search(q, 10, ef_search=64)[0],
+                                      g2.search(q, 10, ef_search=64)[0])
+    store_faults.flip_byte(p, 64)
+    with pytest.raises(store.CorruptSegmentError):
+        HNSW.load(p)
+
+
+def test_ivfdisk_store_is_atomic_and_validated(data):
+    X, Q = data
+    idx = IVFDisk(DIM, n_clusters=8).build(X)
+    before = idx.search(Q[0], 10, n_probe=8)[0]
+    # crash mid-overwrite of a list: the previous list survives intact
+    c = 0
+    payload = idx._load_list(c)
+    total = store_faults.count_fs_ops(lambda: idx._store_list(c, payload))
+    with store_faults.CrashPlan(1):
+        try:
+            idx._store_list(c, (payload[0][:1], payload[1][:1]))
+        except store_faults.InjectedCrash:
+            pass
+    assert total >= 3
+    np.testing.assert_array_equal(idx._load_list(c)[0], payload[0])
+    np.testing.assert_array_equal(idx.search(Q[0], 10, n_probe=8)[0],
+                                  before)
+    # bit-rot is detected, not unpickled
+    store_faults.flip_byte(idx._lpath(c), 80)
+    with pytest.raises(store.CorruptSegmentError):
+        idx._load_list(c)
+
+
+# ------------------------------------------------------- window index
+
+class _CountingEmbed:
+    def __init__(self, inner):
+        self.inner = inner
+        self.calls = 0
+        self.texts = 0
+
+    def __call__(self, texts):
+        self.calls += 1
+        self.texts += len(texts)
+        return self.inner(texts)
+
+
+DOCS = [
+    ("Volcanoes are studied by geologists. "
+     "Their eruptions follow magma pressure. "
+     "Monitoring stations track seismic activity."),
+    ("The Tiramisu dessert originated in Italy. "
+     "Recipe of the Tiramisu includes cheese and coffee. "
+     "Many cafes now offer Tiramisu for pick-up."),
+    "One single sentence about astronomy.",
+    "",
+    ("Quantum computers use qubits. "
+     "Error correction is the central challenge."),
+]
+
+
+@pytest.fixture(scope="module")
+def embed():
+    return HashEmbedder(dim=64).fit([d for d in DOCS if d])
+
+
+def test_window_index_save_load_no_reembed(tmp_path, embed):
+    wi = WindowIndex(embed, SCRConfig(3, 2, 1)).build(DOCS)
+    data0, lens0 = wi.pack()
+    root = str(tmp_path / "w")
+    wi.save(root)
+    counter = _CountingEmbed(embed)
+    wi2 = WindowIndex.load(counter, root)
+    assert counter.calls == 0                 # restore embeds nothing
+    data2, lens2 = wi2.pack()
+    assert counter.calls == 0                 # pack is clean too
+    np.testing.assert_array_equal(data0, data2)
+    np.testing.assert_array_equal(lens0, lens2)
+    assert wi2.texts == wi.texts
+    assert wi2.spans == wi.spans
+
+
+def test_window_index_wal_and_compaction(tmp_path, embed):
+    wi = WindowIndex(embed, SCRConfig(3, 2, 1)).build(DOCS)
+    root = str(tmp_path / "w")
+    wi.save(root)
+    di = wi.add("Fresh document about deep sea vents. They host life.")
+    wi.update(2, "Astronomy text, now revised with telescopes.")
+    wi.remove(4)
+    wi2 = WindowIndex.load(embed, root)       # replays the three ops
+    assert wi2.stats.wal_replayed == 3
+    assert wi2.texts == wi.texts
+    d1, l1 = wi.pack()
+    d2, l2 = wi2.pack()
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_allclose(d1, d2, rtol=0, atol=0)
+    g = wi.save()                             # compact
+    assert g == 1
+    wi3 = WindowIndex.load(embed, root)
+    assert wi3.stats.wal_replayed == 0
+    assert wi3.texts == wi.texts
+    assert int(wi3.pack()[1][4]) == 0         # removed doc stays empty
+    assert di == len(DOCS)
+
+
+# --------------------------------------------------- pipeline snapshot
+
+def test_mobilerag_retrieval_state_roundtrip(tmp_path):
+    from repro.data.synthetic import make_qa_corpus
+    from repro.serving.rag import MobileRAG
+    corpus = make_qa_corpus("squad", n_docs=40, n_questions=4, seed=0)
+    emb = HashEmbedder(dim=64).fit(corpus.docs)
+    state = str(tmp_path / "state")
+    c1 = _CountingEmbed(emb)
+    pipe = MobileRAG(corpus.docs, c1, top_k=3, retrieval_state=state)
+    build_texts = c1.texts
+    assert build_texts > 0
+    c2 = _CountingEmbed(emb)
+    warm = MobileRAG(corpus.docs, c2, top_k=3, retrieval_state=state)
+    assert c2.texts == 0                      # construction embeds nothing
+    assert warm.doc_vecs is None
+    qs = [e.question for e in corpus.examples[:4]]
+    for q in qs:
+        a, b = pipe.answer(q), warm.answer(q)
+        assert a.doc_ids == b.doc_ids
+        assert a.prompt == b.prompt
+    # per-query work on the warm pipeline is query embeds only
+    assert c2.texts == len(qs)
+
+
+def test_mobilerag_corrupt_state_rebuilds(tmp_path):
+    from repro.data.synthetic import make_qa_corpus
+    from repro.serving.rag import MobileRAG
+    corpus = make_qa_corpus("squad", n_docs=30, n_questions=2, seed=1)
+    emb = HashEmbedder(dim=64).fit(corpus.docs)
+    state = str(tmp_path / "state")
+    MobileRAG(corpus.docs, emb, top_k=3, retrieval_state=state)
+    # rot the committed EcoVector state file
+    j = store.Journal(os.path.join(state, "ecovector"))
+    g = j.latest()
+    store_faults.flip_byte(
+        os.path.join(j.gen_dir(g), "state.seg"), 200)
+    with pytest.warns(UserWarning, match="rebuilding"):
+        pipe = MobileRAG(corpus.docs, emb, top_k=3, retrieval_state=state)
+    a = pipe.answer(corpus.examples[0].question)
+    assert len(a.doc_ids) > 0
+    # the rebuild committed a fresh generation: a third construction
+    # restores cleanly (no rebuild warning, no corpus embed)
+    import warnings as _w
+    c3 = _CountingEmbed(emb)
+    with _w.catch_warnings():
+        _w.filterwarnings("error", message=".*rebuilding.*")
+        warm = MobileRAG(corpus.docs, c3, top_k=3, retrieval_state=state)
+    assert c3.texts == 0 and warm.doc_vecs is None

@@ -1,0 +1,298 @@
+"""Durable store unit tests: segment framing, tamper detection, WAL
+replay semantics, generation journal atomicity, and crash/corruption
+sweeps driven by the deterministic fs-op fault hooks."""
+import json
+import os
+import pickle
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import store, store_faults
+from repro.core.store import (CorruptSegmentError, Journal, StoreError,
+                              WriteAheadLog)
+
+
+@pytest.fixture(autouse=True)
+def _clean_hooks():
+    """Every test starts and ends with no crash hook armed."""
+    store.set_crash_hook(None)
+    store.reset_fs_ops()
+    yield
+    store.set_crash_hook(None)
+
+
+# ------------------------------------------------------------- segments
+
+def test_segment_roundtrip(tmp_path):
+    p = str(tmp_path / "a.seg")
+    recs = [b"hello", b"", b"\x00" * 1024]
+    store.write_segment(p, recs, {"x": 1}, kind="t")
+    meta, out = store.read_segment(p, kind="t")
+    assert out == recs
+    assert meta["x"] == 1 and meta["kind"] == "t"
+    assert not os.path.exists(p + ".tmp")
+
+
+def test_segment_kind_mismatch(tmp_path):
+    p = str(tmp_path / "a.seg")
+    store.write_segment(p, [b"x"], kind="cluster")
+    with pytest.raises(CorruptSegmentError, match="kind"):
+        store.read_segment(p, kind="manifest")
+
+
+def test_obj_roundtrip(tmp_path):
+    p = str(tmp_path / "o.bin")
+    obj = {"a": np.arange(3).tolist(), "b": "text"}
+    store.dump_obj(p, obj, kind="k")
+    assert store.load_obj(p, kind="k") == obj
+
+
+def test_foreign_file_rejected(tmp_path):
+    """A raw pickle (the pre-durability format) is refused, not fed to
+    pickle.loads."""
+    p = str(tmp_path / "legacy.bin")
+    with open(p, "wb") as f:
+        pickle.dump({"oops": 1}, f)
+    with pytest.raises(CorruptSegmentError, match="magic"):
+        store.load_obj(p)
+
+
+def test_every_byte_flip_detected(tmp_path):
+    """Bit-rot anywhere in the file — header, meta, record framing or
+    payload — fails validation."""
+    p = str(tmp_path / "a.seg")
+    store.write_segment(p, [b"payload-one", b"payload-two"], {"m": 2})
+    size = os.path.getsize(p)
+    with open(p, "rb") as f:
+        good = f.read()
+    step = max(1, size // 64)
+    for off in range(0, size, step):
+        with open(p, "wb") as f:
+            f.write(good)
+        store_faults.flip_byte(p, off)
+        with pytest.raises(CorruptSegmentError):
+            store.read_segment(p)
+
+
+def test_every_truncation_detected(tmp_path):
+    p = str(tmp_path / "a.seg")
+    store.write_segment(p, [b"some-payload" * 8], {"m": 1})
+    with open(p, "rb") as f:
+        good = f.read()
+    for keep in range(0, len(good), max(1, len(good) // 32)):
+        with open(p, "wb") as f:
+            f.write(good[:keep])
+        with pytest.raises(CorruptSegmentError):
+            store.read_segment(p)
+
+
+def test_trailing_garbage_detected(tmp_path):
+    p = str(tmp_path / "a.seg")
+    store.write_segment(p, [b"x"], {})
+    with open(p, "ab") as f:
+        f.write(b"\x00" * 7)
+    with pytest.raises(CorruptSegmentError, match="trailing"):
+        store.read_segment(p)
+
+
+def test_array_record_roundtrip():
+    a = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    payload, spec = store.array_record(a)
+    b = store.record_array(payload, spec)
+    assert b.dtype == a.dtype and b.shape == a.shape
+    np.testing.assert_array_equal(a, b)
+    with pytest.raises(CorruptSegmentError):
+        store.record_array(payload[:-4], spec)
+
+
+def test_atomic_write_crash_leaves_old_or_nothing(tmp_path):
+    """CrashPlan swept over every fs op of a segment overwrite: the file
+    on disk is always either the old version or the new one, intact."""
+    p = str(tmp_path / "a.seg")
+    store.write_segment(p, [b"old"], kind="t")
+    total = store_faults.count_fs_ops(
+        lambda: store.write_segment(p, [b"new"], kind="t"))
+    assert total >= 3
+    for at in range(1, total + 1):
+        store.write_segment(p, [b"old"], kind="t")
+        with store_faults.CrashPlan(at) as plan:
+            try:
+                store.write_segment(p, [b"new"], kind="t")
+            except store_faults.InjectedCrash:
+                pass
+        assert plan.fired
+        _, recs = store.read_segment(p, kind="t")
+        assert recs in ([b"old"], [b"new"])
+
+
+# ------------------------------------------------------------------ WAL
+
+def test_wal_append_replay(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = WriteAheadLog(p, generation=3)
+    frames = [b"one", b"", b"three" * 100]
+    for fr in frames:
+        w.append(fr)
+    w.close()
+    ops, torn = WriteAheadLog.replay(p)
+    assert ops == frames and not torn
+
+
+def test_wal_missing_and_empty(tmp_path):
+    assert WriteAheadLog.replay(str(tmp_path / "nope.log")) == ([], False)
+    p = str(tmp_path / "empty.log")
+    open(p, "wb").close()
+    assert WriteAheadLog.replay(p) == ([], False)
+
+
+def test_wal_torn_tail_discarded(tmp_path):
+    """Truncating anywhere keeps a prefix of intact frames and flags the
+    tail; no partial frame is ever replayed."""
+    p = str(tmp_path / "w.log")
+    w = WriteAheadLog(p)
+    frames = [f"op-{i}".encode() * (i + 1) for i in range(6)]
+    for fr in frames:
+        w.append(fr)
+    w.close()
+    size = os.path.getsize(p)
+    with open(p, "rb") as f:
+        good = f.read()
+    for keep in range(size - 1, 0, -max(1, size // 40)):
+        with open(p, "wb") as f:
+            f.write(good[:keep])
+        ops, torn = WriteAheadLog.replay(p)
+        assert ops == frames[:len(ops)]       # strict prefix, in order
+        if len(ops) < len(frames):
+            assert torn
+
+
+def test_wal_corrupt_frame_stops_replay(tmp_path):
+    p = str(tmp_path / "w.log")
+    w = WriteAheadLog(p)
+    for i in range(4):
+        w.append(f"frame-{i}".encode())
+    w.close()
+    # flip a byte inside frame 2's payload: frames 0-1 survive, 2+ drop
+    hdr = struct.calcsize("<4sHHQ")
+    frame = struct.calcsize("<II") + len(b"frame-0")
+    store_faults.flip_byte(p, hdr + 2 * frame + struct.calcsize("<II") + 3)
+    ops, torn = WriteAheadLog.replay(p)
+    assert ops == [b"frame-0", b"frame-1"] and torn
+
+
+# -------------------------------------------------------------- journal
+
+def _commit_gen(j: Journal, payload: bytes) -> int:
+    tmp = j.begin()
+    store.write_segment(os.path.join(tmp, "state.seg"), [payload], kind="t")
+    return j.commit()
+
+
+def test_journal_generations_and_read(tmp_path):
+    j = Journal(str(tmp_path))
+    assert j.latest() is None and j.replay() == ([], False)
+    g0 = _commit_gen(j, b"gen-zero")
+    g1 = _commit_gen(j, b"gen-one")
+    assert (g0, g1) == (0, 1)
+    assert j.generations() == [0, 1]
+    blob = j.read_file(1, "state.seg")
+    _, recs = store.decode_segment(blob)
+    assert recs == [b"gen-one"]
+
+
+def test_journal_wal_rotation(tmp_path):
+    j = Journal(str(tmp_path))
+    with pytest.raises(StoreError):
+        j.append(b"no base generation yet")
+    _commit_gen(j, b"base")
+    j.append(b"m1")
+    j.append(b"m2")
+    assert j.wal_records() == 2
+    _commit_gen(j, b"compacted")
+    assert j.wal_records() == 0               # rotated away
+    assert [n for n in os.listdir(tmp_path) if n.startswith("wal_")] == []
+
+
+def test_journal_manifest_detects_bitrot(tmp_path):
+    j = Journal(str(tmp_path))
+    _commit_gen(j, b"data" * 100)
+    store_faults.flip_byte(os.path.join(j.gen_dir(0), "state.seg"), 50)
+    with pytest.raises(CorruptSegmentError, match="manifest"):
+        j.read_file(0, "state.seg")
+
+
+def test_journal_crash_sweep_never_half_commits(tmp_path):
+    """Crash at every fs op during a second commit: the journal's latest
+    generation is always fully readable (either gen 0 or gen 1), and WAL
+    ops are only dropped once the commit that folds them is visible."""
+    probe = Journal(str(tmp_path / "probe"))
+    _commit_gen(probe, b"a")
+    probe.append(b"op")
+    total = store_faults.count_fs_ops(lambda: _commit_gen(probe, b"b"))
+    for at in range(1, total + 1):
+        root = str(tmp_path / f"r{at}")
+        j = Journal(root)
+        _commit_gen(j, b"a")
+        j.append(b"op")
+        with store_faults.CrashPlan(at):
+            try:
+                _commit_gen(j, b"b")
+            except store_faults.InjectedCrash:
+                pass
+        j.close()
+        j2 = Journal(root)                    # recovery: fresh reader
+        g = j2.latest()
+        assert g in (0, 1)
+        _, recs = store.decode_segment(j2.read_file(g, "state.seg"))
+        assert recs == [b"a" if g == 0 else b"b"]
+        if g == 0:                            # not folded yet -> WAL kept
+            assert j2.replay() == ([b"op"], False)
+
+
+def test_stale_tmp_and_gateless_dirs_ignored(tmp_path):
+    j = Journal(str(tmp_path))
+    _commit_gen(j, b"real")
+    os.makedirs(tmp_path / "gen_00000005.tmp")
+    os.makedirs(tmp_path / "gen_00000007")    # no MANIFEST.json
+    assert Journal(str(tmp_path)).latest() == 0
+
+
+# ---------------------------------------------------------------- scrub
+
+def test_scrub_clean_and_corrupt(tmp_path):
+    j = Journal(str(tmp_path))
+    tmp = j.begin()
+    store.write_segment(os.path.join(tmp, "state.seg"), [b"x" * 500],
+                        kind="t")
+    j.commit()
+    j.append(b"mutation")
+    j.close()
+    reps = store.scrub_path(str(tmp_path))
+    assert reps and all(r["ok"] for r in reps)
+    store_faults.flip_byte(os.path.join(j.gen_dir(0), "state.seg"), 200)
+    reps = store.scrub_path(str(tmp_path))
+    assert any(not r["ok"] for r in reps)
+
+
+def test_scrub_plain_spill_dir(tmp_path):
+    d = tmp_path / "spill"
+    d.mkdir()
+    store.write_segment(str(d / "c0.bin"), [b"ok"], kind="c")
+    store.write_segment(str(d / "c1.bin"), [b"ok"], kind="c")
+    store_faults.truncate_file(str(d / "c1.bin"), 10)
+    reps = {os.path.basename(r["item"]): r["ok"]
+            for r in store.scrub_path(str(d))}
+    assert reps == {"c0.bin": True, "c1.bin": False}
+
+
+def test_quarantine_file(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(b"junk")
+    dst = store.quarantine_file(p)
+    assert dst == p + ".quarantined"
+    assert not os.path.exists(p) and os.path.exists(dst)
+    assert store.quarantine_file(str(tmp_path / "gone.bin")) is None

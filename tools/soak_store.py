@@ -1,0 +1,217 @@
+#!/usr/bin/env python3
+"""Crash-safety soak for the durable store (CI's storage chaos step).
+
+Three sweeps, all deterministic (faults keyed on the fs-op index, the
+same philosophy as `serving/faults.py` — see DESIGN.md §11/§12):
+
+  1. **Crash sweep** — an in-process `CrashPlan` kills the EcoVector
+     save / WAL-append / compaction workload at EVERY fs op in turn;
+     after each crash the journal must reload to a complete index (or
+     report no committed generation) with every acknowledged mutation
+     present.
+  2. **Kill -9 sweep** — the same workload in a subprocess with
+     `REPRO_STORE_CRASH_AT` arming a hard `os._exit` at a sample of op
+     indices: no atexit, no flush, exactly a power cut.
+  3. **Fuzz sweep** — byte-flips and truncations at seeded offsets in
+     committed generation files and live spill files; every mutation
+     must be detected by the scrubber and tolerated by search
+     (quarantine + degrade, never garbage results or a crash).
+
+Exit 0 = all invariants held. Any violation prints the failing sweep
+point and exits 1.
+
+Usage: PYTHONPATH=src python tools/soak_store.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+import warnings
+
+import numpy as np
+
+
+def _fail(msg: str) -> None:
+    print(f"SOAK FAIL: {msg}")
+    sys.exit(1)
+
+
+def crash_sweep(step: int) -> int:
+    from repro.core import store_faults
+    from repro.core.ecovector import EcoVector
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(160, 12)).astype(np.float32)
+    vecs = rng.normal(size=(8, 12)).astype(np.float32)
+
+    def workload(root: str, acked: list) -> None:
+        # `acked` grows as each op RETURNS — after a crash it holds
+        # exactly the acknowledged prefix, the recovery ground truth
+        ev = EcoVector(12, n_clusters=6, M=8, ef_construction=32).build(X)
+        ev.save(root)
+        for i, v in enumerate(vecs):
+            if i % 4 == 3:
+                ev.delete(10 ** 6 + i - 1)
+                acked.append(("delete", 10 ** 6 + i - 1))
+            else:
+                ev.insert(10 ** 6 + i, v)
+                acked.append(("insert", 10 ** 6 + i))
+        ev.save()
+        acked.append(("compacted", -1))
+
+    ops = [("delete", 10 ** 6 + i - 1) if i % 4 == 3 else
+           ("insert", 10 ** 6 + i) for i in range(len(vecs))]
+    with tempfile.TemporaryDirectory() as tmp:
+        total = store_faults.count_fs_ops(
+            lambda: workload(os.path.join(tmp, "probe"), []))
+    checked = 0
+    for at in range(1, total + 1, step):
+        with tempfile.TemporaryDirectory() as tmp:
+            root = os.path.join(tmp, "j")
+            acked: list = []
+            with store_faults.CrashPlan(at):
+                try:
+                    workload(root, acked)
+                except store_faults.InjectedCrash:
+                    pass
+            # exempt the one in-flight op (durable-but-unacked allowed)
+            n_mut = len([a for a in acked if a[0] != "compacted"])
+            inflight = ops[n_mut][1] if n_mut < len(ops) else None
+            _verify(root, [a for a in acked if a[1] != inflight], at)
+            checked += 1
+    return checked
+
+
+def _verify(root: str, acked: list, at: int, dim: int = 12) -> None:
+    """Post-crash invariants: loadable (or nothing committed + nothing
+    acked), zero acknowledged writes lost, search still answers."""
+    from repro.core.ecovector import EcoVector
+
+    try:
+        ev = EcoVector.load(root)
+    except FileNotFoundError:
+        if acked:
+            _fail(f"at={at}: journal empty but ops were acknowledged: "
+                  f"{acked}")
+        return
+    expect = {}
+    for op, vid in acked:
+        if op != "compacted":
+            expect[vid] = (op == "insert")
+    for vid, present in expect.items():
+        if (vid in ev.assign) != present:
+            _fail(f"at={at}: acknowledged {'insert' if present else 'delete'}"
+                  f" of {vid} lost after reload")
+    rng = np.random.default_rng(1)
+    for q in rng.normal(size=(4, dim)).astype(np.float32):
+        ids, _ = ev.search(q, 5, n_probe=6)
+        if len(ids) != 5:
+            _fail(f"at={at}: degraded search returned {len(ids)}/5")
+
+
+def kill9_sweep(points) -> int:
+    checked = 0
+    for at in points:
+        with tempfile.TemporaryDirectory() as tmp:
+            env = dict(os.environ, PYTHONPATH="src",
+                       REPRO_STORE_CRASH_AT=str(at))
+            p = subprocess.run(
+                [sys.executable, "-m", "repro.core.store_faults",
+                 "--root", tmp, "--stage", "compact"],
+                env=env, capture_output=True, text=True, timeout=300)
+            if p.returncode not in (0, 42):
+                _fail(f"kill9 at={at}: driver rc={p.returncode}\n"
+                      f"{p.stdout}{p.stderr}")
+            acked = []
+            ack_path = os.path.join(tmp, "acked.txt")
+            if os.path.exists(ack_path):
+                with open(ack_path) as f:
+                    for line in f.read().splitlines():
+                        parts = line.split()
+                        acked.append((parts[0], int(parts[1])
+                                      if len(parts) > 1 else -1))
+            # exempt the single in-flight (never-acked) op
+            ops = [("delete", 10 ** 6 + i - 1) if i % 3 == 2 else
+                   ("insert", 10 ** 6 + i) for i in range(12)]
+            n_mut = len([a for a in acked if a[0] != "compacted"])
+            inflight = ops[n_mut][1] if n_mut < len(ops) else None
+            acked = [a for a in acked if a[1] != inflight]
+            _verify(os.path.join(tmp, "journal"),
+                    [(op, vid) for op, vid in acked], at, dim=16)
+            checked += 1
+    return checked
+
+
+def fuzz_sweep(n_mutations: int) -> int:
+    from repro.core import store, store_faults
+    from repro.core.ecovector import EcoVector
+
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(160, 12)).astype(np.float32)
+    Q = X[rng.choice(len(X), 8)]
+    checked = 0
+    for trial in range(n_mutations):
+        with tempfile.TemporaryDirectory() as tmp:
+            root = os.path.join(tmp, "j")
+            ev = EcoVector(12, n_clusters=6, M=8,
+                           ef_construction=32).build(X)
+            ev.device_pack()
+            ev.save(root)
+            # rot one live spill file at a seeded offset
+            victim = int(rng.integers(ev.n_clusters))
+            path = ev._path(victim)
+            if rng.integers(2):
+                store_faults.flip_byte(path, int(rng.integers(1 << 20)))
+            else:
+                store_faults.truncate_file(
+                    path, int(rng.integers(os.path.getsize(path))))
+            if all(r["ok"] for r in store.scrub_path(
+                    os.path.dirname(path))):
+                _fail(f"fuzz trial {trial}: scrub missed the mutation "
+                      f"in {path}")
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                for q in Q:
+                    ids, _ = ev.search(q, 5, n_probe=6)
+                    if len(ids) != 5:
+                        _fail(f"fuzz trial {trial}: search returned "
+                              f"{len(ids)}/5 after corruption")
+            if ev.stats.corrupt_reads:
+                ev.rebuild_cluster(victim)
+                if ev.stats.quarantined:
+                    _fail(f"fuzz trial {trial}: rebuild left quarantine")
+            # committed generation unaffected by live-file rot
+            ev2 = EcoVector.load(root)
+            for q in Q:
+                if len(ev2.search(q, 5, n_probe=6)[0]) != 5:
+                    _fail(f"fuzz trial {trial}: committed snapshot "
+                          f"damaged by live-file mutation")
+            checked += 1
+    return checked
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="storage crash-safety soak")
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized sweeps (sampled crash points)")
+    args = p.parse_args(argv)
+    step = 3 if args.quick else 1
+    kill_points = ((10, 30, 52, 95) if args.quick
+                   else tuple(range(5, 101, 5)))
+    fuzz_trials = 6 if args.quick else 24
+
+    n = crash_sweep(step)
+    print(f"crash sweep: {n} injection points ok")
+    n = kill9_sweep(kill_points)
+    print(f"kill -9 sweep: {n} subprocess crashes recovered")
+    n = fuzz_sweep(fuzz_trials)
+    print(f"fuzz sweep: {n} corruption trials detected + tolerated")
+    print("storage soak: all invariants held")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
