@@ -22,7 +22,13 @@ continuous-only rows for a sliding-window (ring-page) config, an int8-KV
 config, an MoE config and a sampled (non-greedy, per-slot PRNG streams)
 run — quick mode keeps one swa + one sampled row for the CI smoke.
 
-A third section measures GOODPUT UNDER CHAOS: 3 SlotScheduler replicas
+A third section sweeps SHARED-PREFIX RATIO (0/50/90% of the prompt in
+common across requests; quick mode keeps the 0/90 endpoints) and reports
+p50 TTFT per share: the block-table pager maps cached prefix pages
+instead of recomputing them, so TTFT must drop as the share rises —
+`--prefix` runs just this sweep (the CI prefix smoke).
+
+A fourth section measures GOODPUT UNDER CHAOS: 3 SlotScheduler replicas
 wrapped in a seeded FaultPlan (replica crashes, slot stalls, slow steps —
 serving/faults.py), per-request deadlines, and a
 completed-within-deadline / submitted column beside the latency
@@ -151,6 +157,59 @@ def _run_variants(mode: str, prompts, gens):
              f"slot_util={ce.utilisation():.2f};n={len(prompts)}")
 
 
+def run_prefix(mode="quick", seed=0):
+    """TTFT vs shared-prefix ratio (the PR-8 block-table pager).
+
+    For each share in the sweep, every measured prompt starts with
+    `share * L` tokens of a common prefix followed by a random suffix. A
+    fresh engine per share is seeded with one unmeasured prompt (warming
+    the prefix trie and the COW-copy executable), then each measured
+    prompt's TTFT (GenResult.prefill_s: chunked prefill + any COW copy)
+    is recorded. Shared full pages are mapped instead of recomputed and
+    the resumed chunk grid skips the reused span, so p50 TTFT must DROP
+    as the share rises — asserted for the 90% vs 0% pair."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model
+    from repro.serving.engine import ContinuousEngine
+
+    shares = (0.0, 0.9) if mode == "quick" else (0.0, 0.5, 0.9)
+    n = 8 if mode == "quick" else 16
+    plen = 96
+    rng = np.random.default_rng(seed)
+    common = rng.integers(4, 500, plen).astype(np.int32)
+    cfg = get_reduced("qwen25_0_5b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+
+    def prompt_at(share):
+        k = int(share * plen)
+        tail = rng.integers(4, 500, plen - k).astype(np.int32)
+        return np.concatenate([common[:k], tail]) if k else tail
+
+    p50s = {}
+    for share in shares:
+        ce = ContinuousEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
+        ce.warmup()
+        prompts = [prompt_at(share) for _ in range(n)]
+        # seed pass: registers the common prefix and compiles the COW
+        # copy off the measured path (two probes so the second COW-forks)
+        ce.generate([prompt_at(share)], max_new=2)
+        ce.generate([prompt_at(share)], max_new=2)
+        hits0, reused0 = ce.prefix_hits, ce.prefix_tokens_reused
+        ttfts = []
+        for p in prompts:
+            ttfts.append(ce.generate([p], max_new=2)[0].prefill_s)
+        p50s[share] = float(np.percentile(ttfts, 50))
+        emit(f"serving.prefix_ttft_share{int(share * 100):02d}",
+             p50s[share] * 1e6,
+             f"hits={ce.prefix_hits - hits0};"
+             f"tokens_reused={ce.prefix_tokens_reused - reused0};"
+             f"n={n};plen={plen}")
+    assert p50s[0.9] < p50s[0.0], (
+        f"prefix sharing did not cut TTFT: "
+        f"p50@90%={p50s[0.9]:.4f}s >= p50@0%={p50s[0.0]:.4f}s")
+
+
 def run_chaos(mode="quick", seed=0):
     """Goodput under a seeded FaultPlan: every request either completes
     within its deadline or is explicitly shed — the emitted row asserts
@@ -245,6 +304,7 @@ def run(mode="quick"):
          f"continuous_beats_wave={bool(p95c < p95w)}")
 
     _run_variants(mode, prompts, gens)
+    run_prefix(mode)
     run_chaos(mode)
 
 
@@ -254,9 +314,13 @@ if __name__ == "__main__":
     ap.add_argument("--mode", default="quick", choices=["quick", "full"])
     ap.add_argument("--chaos", action="store_true",
                     help="goodput-under-chaos section only")
+    ap.add_argument("--prefix", action="store_true",
+                    help="shared-prefix TTFT sweep only")
     ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
     if a.chaos:
         run_chaos(a.mode, a.seed)
+    elif a.prefix:
+        run_prefix(a.mode, a.seed)
     else:
         run(a.mode)

@@ -50,6 +50,97 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(len_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, acc_ref, *, ps: int, nsteps: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0]                                   # [Hg, dh]
+    k = k_ref[0, :, 0, :]                             # [ps, dh]
+    v = v_ref[0, :, 0, :]
+    kv_len = len_ref[b]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # logical position of lane j inside this page: pages are mapped in
+    # table order, so page w covers positions [w*ps, (w+1)*ps)
+    pos = s_idx * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < kv_len, s, NEG)               # [Hg, ps]
+    m_prev, l_prev = m_ref[...], l_ref[...]           # [Hg, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == nsteps - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_attention_paged(q, k, v, kv_len, table,
+                           interpret: bool | None = None):
+    """Block-table flash decode: K/V live in a global page pool and each
+    batch row reads its pages through a scalar-prefetched table.
+
+    q: [B, H, dh]; k, v: [P, ps, G, dh] page pools (H % G == 0);
+    kv_len: [B] per-row logical lengths (ring callers pre-clamp to the
+    ring modulus); table: [B, W] int32 page ids — entry w backs logical
+    positions [w*ps, (w+1)*ps). Unmapped tail entries may point anywhere
+    valid (callers use page 0): every lane past kv_len is masked. The
+    table is the second scalar-prefetch operand, so each (b, g, w) grid
+    step DMAs exactly the one page `table[b, w]` — the pool itself never
+    streams through in slot order. Returns [B, H, dh]."""
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+        interpret = default_interpret()
+    B, H, dh = q.shape
+    P, ps, G = k.shape[0], k.shape[1], k.shape[2]
+    W = table.shape[1]
+    Hg = H // G
+    qg = q.reshape(B, G, Hg, dh)
+    scale = 1.0 / (dh ** 0.5)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (B,))
+    tbl = jnp.asarray(table, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # lens, table
+        grid=(B, G, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, dh),
+                         lambda b, g, w, ln, tb: (b, g, 0, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, g, w, ln, tb: (tb[b, w], 0, g, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, g, w, ln, tb: (tb[b, w], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, dh),
+                               lambda b, g, w, ln, tb: (b, g, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((Hg, 1), jnp.float32),
+                        pltpu.VMEM((Hg, 1), jnp.float32),
+                        pltpu.VMEM((Hg, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, ps=ps, nsteps=W, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, dh), q.dtype),
+        interpret=interpret,
+    )(lens, tbl, qg, k, v)
+    return out.reshape(B, H, dh)
+
+
 @functools.partial(jax.jit, static_argnames=("ts", "interpret", "ring"))
 def decode_attention(q, k, v, kv_len, ts: int = 512,
                      interpret: bool | None = None, ring: bool = False):

@@ -14,6 +14,8 @@ from repro.kernels.scr_score import scr_score as _scr_score
 from repro.kernels.scr_select import scr_select as _scr_select
 from repro.kernels.pq_adc import pq_adc as _pq_adc
 from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.decode_attention import (
+    decode_attention_paged as _decode_attn_paged)
 from repro.kernels.flash_prefill import flash_prefill as _flash_prefill
 
 
@@ -132,6 +134,17 @@ def decode_attention(q, k, v, kv_len, use_pallas=True, ring=False):
         return _decode_attn(q, k, v, kv_len, interpret=default_interpret(),
                             ring=ring)
     return ref.decode_attention(q, k, v, kv_len, ring=ring)
+
+
+def decode_attention_paged(q, k, v, kv_len, table, use_pallas=True):
+    """Block-table flash decode: K/V page pools [P, ps, G, dh] gathered
+    through a per-row page table [B, W] (scalar-prefetched on TPU so each
+    grid step DMAs exactly one mapped page). `kv_len` [B] masks unmapped
+    tail entries; ring callers pre-clamp it to the ring modulus."""
+    if use_pallas:
+        return _decode_attn_paged(q, k, v, kv_len, table,
+                                  interpret=default_interpret())
+    return ref.decode_attention_paged(q, k, v, kv_len, table)
 
 
 def flash_prefill(q, k, v, causal=True, window=None, use_pallas=True):

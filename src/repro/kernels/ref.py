@@ -116,6 +116,21 @@ def decode_attention(q, k, v, kv_len, ring: bool = False):
     return o.reshape(B, H, dh)
 
 
+def decode_attention_paged(q, k, v, kv_len, table):
+    """Block-table decode reference. q: [B, H, dh]; k, v: [P, ps, G, dh]
+    page pools; kv_len: [B]; table: [B, W] int32 page ids (entry w backs
+    logical positions [w*ps, (w+1)*ps); unmapped tail entries are masked
+    by kv_len). Gathers each row's logical [W*ps] K/V through its table
+    and defers to the contiguous oracle."""
+    P, ps, G, dh = k.shape
+    W = table.shape[1]
+    j = jnp.arange(W * ps)
+    idx = table[:, j // ps] * ps + (j % ps)            # [B, W*ps]
+    kg = jnp.take(k.reshape(P * ps, G, dh), idx, axis=0)
+    vg = jnp.take(v.reshape(P * ps, G, dh), idx, axis=0)
+    return decode_attention(q, kg, vg, kv_len)
+
+
 def flash_prefill(q, k, v, *, causal=True, window=None):
     """q,k,v: [B, H, S, dh] (kv pre-expanded to H heads)."""
     B, H, S, dh = q.shape

@@ -96,7 +96,10 @@ def run_stream(pipe, corpus, args) -> None:
           f"in {wall:.2f}s | latency p50={p50:.3f}s p95={p95:.3f}s | "
           f"slot util={eng.utilisation():.2f} "
           f"({eng.steps} decode steps x {eng.slots} slots) | "
-          f"done={c.completed} shed={c.shed_deadline + c.shed_overload} "
+          f"prefix hits={eng.prefix_hits} "
+          f"tokens reused={eng.prefix_tokens_reused} | "
+          f"done={c.completed} "
+          f"shed={c.shed_deadline + c.shed_overload + c.shed_oversize} "
           f"degraded={c.degraded} failed={c.failed}")
     for t, rid, kind in trace[: 3 * 3]:
         print(f"  t={t:6.3f}s req={rid} {kind}")
@@ -172,12 +175,20 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="wrap each replica in a seeded FaultPlan "
                          "(crashes/stalls/slow steps) — --replicas path")
+    ap.add_argument("--page-size", type=int, default=32,
+                    help="KV pool page granularity (positions per page); "
+                         "smaller pages share longer prompt prefixes, "
+                         "larger ones cut table/gather overhead")
     args = ap.parse_args()
 
     corpus = make_qa_corpus("squad", n_docs=args.docs,
                             n_questions=args.questions, seed=args.seed)
     emb = HashEmbedder(dim=128)
     pipe = PIPELINES[args.pipeline](corpus.docs, emb, top_k=3)
+    if hasattr(pipe, "_ensure_slm"):
+        # the Engine is built lazily on first use, so the pool page
+        # granularity can still be set here
+        pipe._ensure_slm().page_size = args.page_size
     print(f"[serve] pipeline={pipe.name} docs={len(corpus.docs)} "
           f"index_build={pipe.build_s:.2f}s")
 

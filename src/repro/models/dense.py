@@ -189,102 +189,143 @@ def _cache_layer(c: dict, name: str, idx):
     return jax.lax.dynamic_index_in_dim(c[name], idx, 0, keepdims=False)
 
 
-def paged_attn_decode(cfg: ModelConfig, lp, y, pos, slot, bidx, c, idx):
-    """One layer of slot-paged decode attention, shared by the dense and
-    moe families (moe.decode_step_paged reuses it verbatim; only the FFN
-    differs between the two paged decode bodies).
+def _pool_gather(pool, table, ps: int):
+    """Gather a logical K/V buffer out of a page pool through a table.
 
-    y [B,1,d] (already normed); pos [B] absolute per-slot positions; slot
-    [B] per-slot WRITE CURSORS (`pos % sc` for sliding-window ring pages,
-    `pos` otherwise; the out-of-bounds sentinel `sc` for inactive slots —
-    their scatters drop); c: dict of full stacked cache arrays
-    [L, slots, sc, G, dh] (+ [L, slots, sc, G] scales when `kv_quant`).
-    Returns (ctx [B,1,Hp,dh], updated c). int8 configs quantize this
-    step's k/v with per-slot per-head scales and attend through
-    `decode_attention_q8`; ring caches mask all filled slots valid
-    (`min(kv_len, sc)` — position order inside the ring is irrelevant to
-    decode because RoPE is already baked into the stored keys."""
+    pool [P, ps, ...] (one layer of the pool); table [..., W] int32 page
+    ids — entry w backs logical positions [w*ps, (w+1)*ps). Returns the
+    logically contiguous [..., W*ps, ...] buffer: flat element j comes
+    from pool page table[j // ps] at in-page offset j % ps. Unmapped
+    tail entries (callers fill them with page 0) produce junk the caller
+    masks via kv_len — the gathered VALID prefix is element-for-element
+    identical to what a slot-contiguous cache would hold, which is what
+    keeps paged decode bit-exact against the wave path."""
+    P = pool.shape[0]
+    flat = pool.reshape((P * ps,) + pool.shape[2:])
+    W = table.shape[-1]
+    j = jnp.arange(W * ps)
+    idx = table[..., j // ps] * ps + (j % ps)
+    return jnp.take(flat, idx, axis=0)
+
+
+def paged_attn_decode(cfg: ModelConfig, lp, y, pos, table, active, c, idx,
+                      *, page_size: int, ring_len: int):
+    """One layer of block-table paged decode attention, shared by the
+    dense and moe families (moe.decode_step_paged reuses it verbatim;
+    only the FFN differs between the two paged decode bodies).
+
+    y [B,1,d] (already normed); pos [B] absolute per-slot positions;
+    table [B, W] int32 page ids (this slot's mapped pages, in logical
+    order; unmapped tail entries hold page 0 and are masked by kv_len);
+    active [B] bool; c: page-pool cache dict [L, P, ps, G, dh]
+    (+ [L, P, ps, G] scales when `kv_quant`). `ring_len` > 0 marks a
+    sliding-window ring: logical position p lives at ring cursor
+    p % ring_len, and the per-row mask length is min(pos+1, ring_len)
+    (every filled ring slot is valid — position order inside the ring is
+    irrelevant because RoPE is baked into the stored keys). The new k/v
+    scatter resolves (page, offset) through the table; inactive slots
+    scatter to the out-of-bounds page sentinel and drop. Shared
+    (refcounted) prefix pages are never written here: all decode writes
+    land at positions >= the request's prompt length, which by the
+    pager's COW contract sit in slot-private pages."""
+    ps = page_size
     q, k, v = _qkv(cfg, lp, y, pos[:, None])
-    ring = cfg.sliding_window is not None
+    npages = c["k"].shape[1]
+    lw = pos % ring_len if ring_len else pos
+    pg = jnp.take_along_axis(table, (lw // ps)[:, None], axis=1)[:, 0]
+    pg = jnp.where(active, pg, npages)           # OOB sentinel -> drop
+    off = lw % ps
+    lens = jnp.minimum(pos + 1, ring_len) if ring_len else pos + 1
     if cfg.kv_quant:
         kq, ks = L.quantize_kv(k)
         vq, vs = L.quantize_kv(v)
-        c["k"] = c["k"].at[idx, bidx, slot].set(kq[:, 0], mode="drop")
-        c["k_s"] = c["k_s"].at[idx, bidx, slot].set(ks[:, 0], mode="drop")
-        c["v"] = c["v"].at[idx, bidx, slot].set(vq[:, 0], mode="drop")
-        c["v_s"] = c["v_s"].at[idx, bidx, slot].set(vs[:, 0], mode="drop")
+        c["k"] = c["k"].at[idx, pg, off].set(kq[:, 0], mode="drop")
+        c["k_s"] = c["k_s"].at[idx, pg, off].set(ks[:, 0], mode="drop")
+        c["v"] = c["v"].at[idx, pg, off].set(vq[:, 0], mode="drop")
+        c["v_s"] = c["v_s"].at[idx, pg, off].set(vs[:, 0], mode="drop")
         ctx = L.decode_attention_q8(
-            q, _cache_layer(c, "k", idx), _cache_layer(c, "k_s", idx),
-            _cache_layer(c, "v", idx), _cache_layer(c, "v_s", idx),
-            pos + 1, ring=ring)
+            q, _pool_gather(_cache_layer(c, "k", idx), table, ps),
+            _pool_gather(_cache_layer(c, "k_s", idx), table, ps),
+            _pool_gather(_cache_layer(c, "v", idx), table, ps),
+            _pool_gather(_cache_layer(c, "v_s", idx), table, ps), lens)
     else:
-        c["k"] = c["k"].at[idx, bidx, slot].set(
+        c["k"] = c["k"].at[idx, pg, off].set(
             k[:, 0].astype(c["k"].dtype), mode="drop")
-        c["v"] = c["v"].at[idx, bidx, slot].set(
+        c["v"] = c["v"].at[idx, pg, off].set(
             v[:, 0].astype(c["v"].dtype), mode="drop")
         ctx = L.decode_attention(
-            q, _cache_layer(c, "k", idx).astype(k.dtype),
-            _cache_layer(c, "v", idx).astype(v.dtype), pos + 1, ring=ring)
+            q, _pool_gather(_cache_layer(c, "k", idx), table,
+                            ps).astype(k.dtype),
+            _pool_gather(_cache_layer(c, "v", idx), table,
+                         ps).astype(v.dtype), lens)
     return ctx, c
 
 
-def paged_attn_chunk(cfg: ModelConfig, lp, y, positions, slot, offset,
-                     limit, c, idx, page_len: int):
-    """One layer of chunked paged prefill attention (dense + moe shared).
+def paged_attn_chunk(cfg: ModelConfig, lp, y, positions, row, offset,
+                     limit, c, idx, *, page_size: int, ring_len: int,
+                     abs_len: int):
+    """One layer of chunked block-table prefill attention (dense + moe
+    shared).
 
-    y [1,C,d] (already normed); slot/offset/limit traced scalars (`limit`
-    = offset + the chunk's REAL token count, pre-padding). Non-ring pages:
-    write the chunk at [offset, offset+C) and attend the slot's page
-    prefix (dequantized from int8 when `kv_quant`). Ring pages
-    (sliding-window with sc < page_len): the slot's ring is first
-    re-materialized into ABSOLUTE position order (ring slot j holds
-    position `offset-1-((offset-1-j) % sc)`), the chunk is appended at
-    its absolute offset, and attention runs over that [page_len] buffer
-    with the same causal/window masks the wave prefill uses — identical
-    index placement is what keeps greedy parity bit-exact. Only the real
-    tokens are then scattered into the ring at cursors `p % sc`: the
-    padded tail of a final ragged chunk must NOT evict positions still
-    inside other queries' windows. Returns (ctx [1,C,Hp,dh], c)."""
+    y [1,C,d] (already normed); row [W] int32 — the admitting slot's
+    page-table row; offset/limit traced scalars (`limit` = offset + the
+    chunk's REAL token count, pre-padding; `offset` can start past 0
+    when the pager matched a cached prefix and skipped its chunks).
+    Non-ring: scatter the chunk at logical [offset, offset+C) through
+    the table and attend the gathered [W*ps] logical buffer (dequantized
+    from int8 when `kv_quant`) with the same q_offset/kv_len masks the
+    slot-contiguous path used — positions past the valid prefix are
+    masked to exact-zero probability, so the longer gathered buffer
+    changes nothing bitwise. Ring (sliding-window, ring_len > 0): the
+    ring is re-materialized into ABSOLUTE position order (ring cursor j
+    holds position `offset-1-((offset-1-j) % ring_len)`) in an [abs_len]
+    buffer, the chunk is appended at its absolute offset, attention runs
+    with the wave prefill's causal/window masks, and only the REAL
+    tokens scatter back at ring cursors `p % ring_len` — the padded tail
+    of a final ragged chunk must NOT evict positions still inside other
+    queries' windows. Shared prefix pages are never written: every store
+    lands at logical position >= offset >= the pager's matched length,
+    which sits in slot-private (fresh or COW) pages. Returns
+    (ctx [1,C,Hp,dh], c)."""
+    ps = page_size
     csz = y.shape[1]
     q, k, v = _qkv(cfg, lp, y, positions)
-    sc = c["k"].shape[2]
-    ring = cfg.sliding_window is not None and sc < page_len
+    npages = c["k"].shape[1]
+    W = row.shape[0]
     zero = jnp.int32(0)
     if cfg.kv_quant:
         kq, ks = L.quantize_kv(k)
         vq, vs = L.quantize_kv(v)
-    if ring:
+    p_new = offset + jnp.arange(csz)
+    if ring_len:
+        lw = p_new % ring_len
+        dst_pg = jnp.where(p_new < limit, row[lw // ps], npages)
+        dst_off = lw % ps
         # 1. history (pre-chunk ring contents) in absolute position order
-        j = jnp.arange(sc)
-        p_hist = offset - 1 - ((offset - 1 - j) % sc)
-        hist_dst = jnp.where(p_hist >= 0, p_hist, page_len)  # <0 -> drop
+        j = jnp.arange(ring_len)
+        p_hist = offset - 1 - ((offset - 1 - j) % ring_len)
+        hist_dst = jnp.where(p_hist >= 0, p_hist, abs_len)   # <0 -> drop
         if cfg.kv_quant:
             kslot = L.dequantize_kv(
-                jax.lax.dynamic_index_in_dim(
-                    _cache_layer(c, "k", idx), slot, 0, keepdims=False),
-                jax.lax.dynamic_index_in_dim(
-                    _cache_layer(c, "k_s", idx), slot, 0, keepdims=False),
-                k.dtype)
+                _pool_gather(_cache_layer(c, "k", idx), row, ps)[:ring_len],
+                _pool_gather(_cache_layer(c, "k_s", idx), row,
+                             ps)[:ring_len], k.dtype)
             vslot = L.dequantize_kv(
-                jax.lax.dynamic_index_in_dim(
-                    _cache_layer(c, "v", idx), slot, 0, keepdims=False),
-                jax.lax.dynamic_index_in_dim(
-                    _cache_layer(c, "v_s", idx), slot, 0, keepdims=False),
-                v.dtype)
+                _pool_gather(_cache_layer(c, "v", idx), row, ps)[:ring_len],
+                _pool_gather(_cache_layer(c, "v_s", idx), row,
+                             ps)[:ring_len], v.dtype)
             k_new = L.dequantize_kv(kq, ks, k.dtype)[0]
             v_new = L.dequantize_kv(vq, vs, v.dtype)[0]
         else:
-            kslot = jax.lax.dynamic_index_in_dim(
-                _cache_layer(c, "k", idx), slot, 0,
-                keepdims=False).astype(k.dtype)
-            vslot = jax.lax.dynamic_index_in_dim(
-                _cache_layer(c, "v", idx), slot, 0,
-                keepdims=False).astype(v.dtype)
+            kslot = _pool_gather(_cache_layer(c, "k", idx), row,
+                                 ps)[:ring_len].astype(k.dtype)
+            vslot = _pool_gather(_cache_layer(c, "v", idx), row,
+                                 ps)[:ring_len].astype(v.dtype)
             k_new, v_new = k[0], v[0]
         g, dh = kslot.shape[1], kslot.shape[2]
-        kfull = jnp.zeros((page_len, g, dh), k_new.dtype
+        kfull = jnp.zeros((abs_len, g, dh), k_new.dtype
                           ).at[hist_dst].set(kslot, mode="drop")
-        vfull = jnp.zeros((page_len, g, dh), v_new.dtype
+        vfull = jnp.zeros((abs_len, g, dh), v_new.dtype
                           ).at[hist_dst].set(vslot, mode="drop")
         # 2. append the chunk at its absolute positions and attend
         kfull = jax.lax.dynamic_update_slice(kfull, k_new, (offset, zero,
@@ -295,88 +336,78 @@ def paged_attn_chunk(cfg: ModelConfig, lp, y, positions, slot, offset,
                           window=cfg.sliding_window, q_offset=offset,
                           kv_len=offset + csz)
         # 3. ring-write only the REAL tokens at their per-position cursors
-        p_new = offset + jnp.arange(csz)
-        dst = jnp.where(p_new < limit, p_new % sc, sc)   # pad tail -> drop
         if cfg.kv_quant:
-            c["k"] = c["k"].at[idx, slot, dst].set(kq[0], mode="drop")
-            c["k_s"] = c["k_s"].at[idx, slot, dst].set(ks[0], mode="drop")
-            c["v"] = c["v"].at[idx, slot, dst].set(vq[0], mode="drop")
-            c["v_s"] = c["v_s"].at[idx, slot, dst].set(vs[0], mode="drop")
+            c["k"] = c["k"].at[idx, dst_pg, dst_off].set(kq[0], mode="drop")
+            c["k_s"] = c["k_s"].at[idx, dst_pg, dst_off].set(ks[0],
+                                                             mode="drop")
+            c["v"] = c["v"].at[idx, dst_pg, dst_off].set(vq[0], mode="drop")
+            c["v_s"] = c["v_s"].at[idx, dst_pg, dst_off].set(vs[0],
+                                                             mode="drop")
         else:
-            c["k"] = c["k"].at[idx, slot, dst].set(
+            c["k"] = c["k"].at[idx, dst_pg, dst_off].set(
                 k[0].astype(c["k"].dtype), mode="drop")
-            c["v"] = c["v"].at[idx, slot, dst].set(
+            c["v"] = c["v"].at[idx, dst_pg, dst_off].set(
                 v[0].astype(c["v"].dtype), mode="drop")
         return ctx, c
+    # non-ring: positions past the mapped width scatter to the sentinel
+    # (a final ragged chunk's pad tail can cross the last mapped page)
+    dst_pg = jnp.where(p_new // ps < W,
+                       row[jnp.minimum(p_new // ps, W - 1)], npages)
+    dst_off = p_new % ps
     if cfg.kv_quant:
-        c["k"] = jax.lax.dynamic_update_slice(
-            c["k"], kq[None], (idx, slot, offset, zero, zero))
-        c["k_s"] = jax.lax.dynamic_update_slice(
-            c["k_s"], ks[None], (idx, slot, offset, zero))
-        c["v"] = jax.lax.dynamic_update_slice(
-            c["v"], vq[None], (idx, slot, offset, zero, zero))
-        c["v_s"] = jax.lax.dynamic_update_slice(
-            c["v_s"], vs[None], (idx, slot, offset, zero))
+        c["k"] = c["k"].at[idx, dst_pg, dst_off].set(kq[0], mode="drop")
+        c["k_s"] = c["k_s"].at[idx, dst_pg, dst_off].set(ks[0], mode="drop")
+        c["v"] = c["v"].at[idx, dst_pg, dst_off].set(vq[0], mode="drop")
+        c["v_s"] = c["v_s"].at[idx, dst_pg, dst_off].set(vs[0], mode="drop")
         kslot = L.dequantize_kv(
-            jax.lax.dynamic_slice_in_dim(
-                _cache_layer(c, "k", idx), slot, 1, axis=0),
-            jax.lax.dynamic_slice_in_dim(
-                _cache_layer(c, "k_s", idx), slot, 1, axis=0), k.dtype)
+            _pool_gather(_cache_layer(c, "k", idx), row, ps),
+            _pool_gather(_cache_layer(c, "k_s", idx), row, ps),
+            k.dtype)[None]
         vslot = L.dequantize_kv(
-            jax.lax.dynamic_slice_in_dim(
-                _cache_layer(c, "v", idx), slot, 1, axis=0),
-            jax.lax.dynamic_slice_in_dim(
-                _cache_layer(c, "v_s", idx), slot, 1, axis=0), v.dtype)
+            _pool_gather(_cache_layer(c, "v", idx), row, ps),
+            _pool_gather(_cache_layer(c, "v_s", idx), row, ps),
+            v.dtype)[None]
     else:
-        c["k"] = jax.lax.dynamic_update_slice(
-            c["k"], k[None].astype(c["k"].dtype),
-            (idx, slot, offset, zero, zero))
-        c["v"] = jax.lax.dynamic_update_slice(
-            c["v"], v[None].astype(c["v"].dtype),
-            (idx, slot, offset, zero, zero))
-        kslot = jax.lax.dynamic_slice_in_dim(
-            _cache_layer(c, "k", idx), slot, 1, axis=0).astype(k.dtype)
-        vslot = jax.lax.dynamic_slice_in_dim(
-            _cache_layer(c, "v", idx), slot, 1, axis=0).astype(v.dtype)
+        c["k"] = c["k"].at[idx, dst_pg, dst_off].set(
+            k[0].astype(c["k"].dtype), mode="drop")
+        c["v"] = c["v"].at[idx, dst_pg, dst_off].set(
+            v[0].astype(c["v"].dtype), mode="drop")
+        kslot = _pool_gather(_cache_layer(c, "k", idx), row,
+                             ps)[None].astype(k.dtype)
+        vslot = _pool_gather(_cache_layer(c, "v", idx), row,
+                             ps)[None].astype(v.dtype)
     ctx = L.attention(q, kslot, vslot, causal=True,
                       window=cfg.sliding_window, q_offset=offset,
                       kv_len=offset + csz)
     return ctx, c
 
 
-def paged_cursor(cfg: ModelConfig, sc: int, pos, active):
-    """Per-slot write cursor for one paged decode step: `pos % sc` on a
-    sliding-window ring page (position p lives in ring slot p % sc —
-    the invariant prefill rolls, chunk-prefill scatters and decode all
-    share), plain `pos` otherwise; the OOB sentinel `sc` for inactive
-    slots so their scatters drop instead of clobbering a page a
-    co-resident is still filling."""
-    cursor = pos % sc if cfg.sliding_window is not None else pos
-    return jnp.where(active, cursor, sc)
-
-
-def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
-    """One decode step over a slot-paged cache (continuous batching).
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active,
+                      table, *, page_size: int, ring_len: int = 0):
+    """One decode step over a block-table paged cache (continuous
+    batching).
 
     token [B,1] int32; pos [B] int32 — the per-slot write position (== the
-    slot's current kv length); active [B] bool. Every slot advances one
-    position at ITS OWN cursor (see `paged_cursor`): k/v land at
-    cache[:, b, cursor[b]] via a scatter, attention masks each row to its
-    own kv_len = pos[b]+1 (clamped to the ring size for sliding-window
-    pages, where every filled slot is valid). Inactive slots (free, or
-    mid-prefill-admission) scatter out of bounds with mode="drop" so they
-    cannot clobber a page another request is filling; their logits rows
-    are garbage the engine discards. Covers plain, sliding-window (ring)
-    and int8-KV dense configs.
+    slot's current kv length); active [B] bool; table [B, W] int32 page
+    ids (each slot's mapped pages in logical order; unmapped tail entries
+    hold page 0 and are masked). Every slot advances one position at ITS
+    OWN cursor: k/v land at pool page table[b, cursor//ps] offset
+    cursor%ps via a scatter, attention gathers the slot's logical buffer
+    through its table and masks each row to its own kv_len = pos[b]+1
+    (clamped to `ring_len` for sliding-window rings, where every filled
+    cursor is valid). Inactive slots (free, or mid-prefill-admission)
+    scatter to the out-of-bounds page sentinel with mode="drop" so they
+    cannot clobber a page another request is filling — or a SHARED prefix
+    page mapped read-only into several slots; their logits rows are
+    garbage the engine discards. Covers plain, sliding-window (ring) and
+    int8-KV dense configs.
     """
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
     b = token.shape[0]
-    sc = cache["k"].shape[2]
     pos = jnp.asarray(pos, jnp.int32)
-    slot = paged_cursor(cfg, sc, pos, active)
-    bidx = jnp.arange(b)
+    table = jnp.asarray(table, jnp.int32)
 
     def body(carry, inp):
         xc, cd = carry
@@ -384,7 +415,9 @@ def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        ctx, cd = paged_attn_decode(cfg, lp, y, pos, slot, bidx, cd, idx)
+        ctx, cd = paged_attn_decode(cfg, lp, y, pos, table, active, cd,
+                                    idx, page_size=page_size,
+                                    ring_len=ring_len)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
         res = xc
@@ -400,26 +433,29 @@ def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
     return logits, cache
 
 
-def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
-                        offset, limit=None, *, page_len: int = 0):
-    """One prefill chunk of an admitted prompt, written into one slot of
-    the paged cache while the other slots keep decoding between chunks.
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, row,
+                        offset, limit=None, *, page_size: int,
+                        ring_len: int = 0, abs_len: int = 0):
+    """One prefill chunk of an admitted prompt, written through one
+    slot's page-table row while the other slots keep decoding between
+    chunks.
 
-    tokens [1, C] int32; slot / offset / limit: traced scalars (`limit` =
-    offset + the chunk's real token count; defaults to offset + C).
-    `page_len`: the engine's static page length (0 -> the cache's own
-    seq dim; ring reconstruction needs the true page size because a
-    sliding-window cache is allocated at only `window` positions). The
-    chunk's k/v land at cache[:, slot, offset:offset+C] (ring cursors
-    `p % sc` for sliding-window configs, int8+scales for `kv_quant`
-    configs); its queries attend the page prefix [0, offset+C) causally
-    (L.attention's q_offset/kv_len path), so a prompt longer than C is
-    prefilled in several calls that all compile to the same [1, C] shape.
-    On non-ring pages, rows past the prompt's true end (final ragged
-    chunk padded up to C) write junk that is either overwritten by the
-    next write at that position or masked by kv_len before anything
-    attends it; ring pages drop those writes via `limit` (see
-    `paged_attn_chunk`). Returns (chunk logits [1, C, V], cache).
+    tokens [1, C] int32; row [W] int32 (the slot's mapped pages); offset /
+    limit: traced scalars (`limit` = offset + the chunk's real token
+    count; defaults to offset + C; `offset` starts at the pager's matched
+    prefix length when shared pages were mapped — their chunks are
+    skipped entirely). `abs_len`: static length of the absolute-order
+    scratch buffer ring re-materialization builds (sliding-window only).
+    The chunk's k/v scatter to logical [offset, offset+C) through the
+    row; its queries attend the gathered logical buffer [0, offset+C)
+    causally (L.attention's q_offset/kv_len path), so a prompt longer
+    than C is prefilled in several calls that all compile to the same
+    [1, C] shape. On non-ring rows, positions past the prompt's true end
+    (final ragged chunk padded up to C) write junk into slot-PRIVATE
+    pages that is either overwritten by the next write at that position
+    or masked by kv_len before anything attends it; ring rows drop those
+    writes via `limit` (see `paged_attn_chunk`). Returns
+    (chunk logits [1, C, V], cache).
     """
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
@@ -427,7 +463,7 @@ def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
     c = tokens.shape[1]
     positions = offset + jnp.arange(c)[None, :]
     limit = offset + c if limit is None else limit
-    plen = page_len or cache["k"].shape[2]
+    row = jnp.asarray(row, jnp.int32)
 
     def body(carry, inp):
         xc, cd = carry
@@ -435,8 +471,9 @@ def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        ctx, cd = paged_attn_chunk(cfg, lp, y, positions, slot, offset,
-                                   limit, cd, idx, plen)
+        ctx, cd = paged_attn_chunk(cfg, lp, y, positions, row, offset,
+                                   limit, cd, idx, page_size=page_size,
+                                   ring_len=ring_len, abs_len=abs_len)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(1, c, -1) @ lp["wo"]
         res = xc
@@ -528,6 +565,23 @@ def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):
     g, hd = kv_expanded_heads(cfg), cfg.resolved_head_dim
     sc = cache_len(cfg, seq_len)
     shape = (cfg.num_layers, b, sc, g, hd)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                   dtype=jnp.bfloat16):
+    """Global block-table KV pool: [L, num_pages, page_size, G, dh] per
+    tensor (+ [L, num_pages, page_size, G] f32 scales for `kv_quant`).
+    Pages are the pager's allocation unit — a slot maps an ordered list
+    of them through its [W] table row, and refcounted prefix pages can
+    back several slots at once (serving/pager.py)."""
+    g, hd = kv_expanded_heads(cfg), cfg.resolved_head_dim
+    shape = (cfg.num_layers, num_pages, page_size, g, hd)
     if cfg.kv_quant:
         return {"k": jnp.zeros(shape, jnp.int8),
                 "v": jnp.zeros(shape, jnp.int8),

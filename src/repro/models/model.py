@@ -128,27 +128,42 @@ def supports_paged(cfg: ModelConfig) -> bool:
             and cfg.sliding_window is None)
 
 
-def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
-    """Per-slot-position decode step. token [B,1]; pos [B] (each slot's
-    write position / current kv_len — the ring cursor `pos % window` is
-    derived inside for sliding-window configs); active [B] bool (inactive
-    slots' cache writes are dropped)."""
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active,
+                      table, *, page_size: int, ring_len: int = 0):
+    """Per-slot-position decode step over a block-table page pool. token
+    [B,1]; pos [B] (each slot's write position / current kv_len — the
+    ring cursor `pos % ring_len` is derived inside for sliding-window
+    configs); active [B] bool (inactive slots' cache writes are dropped);
+    table [B, W] int32 per-slot page ids (`page_size` positions per
+    page)."""
     assert supports_paged(cfg), cfg.name
     return family(cfg).decode_step_paged(
         cfg, cast_params(params, compute_dtype(cfg)), cache, token, pos,
-        active)
+        active, table, page_size=page_size, ring_len=ring_len)
 
 
-def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
-                        offset, limit=None, *, page_len: int = 0):
-    """One [1, C] prefill chunk written into `slot` at `offset` of a paged
-    cache; `limit` = offset + the chunk's real (pre-padding) length,
-    `page_len` the engine's static page size (needed by sliding-window
-    ring reconstruction). Returns (chunk logits [1, C, V], cache)."""
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, row,
+                        offset, limit=None, *, page_size: int,
+                        ring_len: int = 0, abs_len: int = 0):
+    """One [1, C] prefill chunk scattered through page-table row `row`
+    ([W] int32) at logical `offset` of a block-table page pool; `limit` =
+    offset + the chunk's real (pre-padding) length, `abs_len` the static
+    absolute-order scratch length sliding-window ring reconstruction
+    uses. Returns (chunk logits [1, C, V], cache)."""
     assert supports_paged(cfg), cfg.name
     return family(cfg).prefill_chunk_paged(
-        cfg, cast_params(params, compute_dtype(cfg)), cache, tokens, slot,
-        offset, limit, page_len=page_len)
+        cfg, cast_params(params, compute_dtype(cfg)), cache, tokens, row,
+        offset, limit, page_size=page_size, ring_len=ring_len,
+        abs_len=abs_len)
+
+
+def init_page_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+                   dtype=jnp.bfloat16):
+    """Block-table KV page pool [L, num_pages, page_size, G, dh]
+    (+ scale planes for `kv_quant`) — the allocation the slot-paged
+    serving engine maps per-request page tables into."""
+    assert supports_paged(cfg), cfg.name
+    return family(cfg).init_page_pool(cfg, num_pages, page_size, dtype)
 
 
 def init_cache(cfg: ModelConfig, b: int, seq_len: int, dtype=jnp.bfloat16):

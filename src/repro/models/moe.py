@@ -274,6 +274,7 @@ def forward_logits(cfg: ModelConfig, params, batch, *, seq_sp: bool = False):
 # ----------------------------------------------------------- serving
 
 init_cache = dense.init_cache
+init_page_pool = dense.init_page_pool
 cache_specs = dense.cache_specs
 
 
@@ -344,21 +345,21 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
 # ------------------------------------------------- slot-paged serving
 
 
-def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active,
+                      table, *, page_size: int, ring_len: int = 0):
     """MoE mirror of `dense.decode_step_paged`: the attention/cache layer
-    is the shared `dense.paged_attn_decode` (per-slot cursors, OOB-drop
-    for inactive slots, ring/int8 variants); only the FFN differs.
-    Expert routing is per token, so the slot dimension threads straight
-    through dispatch/combine — with `drop=False` capacity a slot's
-    expert outputs depend only on its own row, never on co-residents."""
+    is the shared `dense.paged_attn_decode` (block-table scatter/gather,
+    OOB-drop for inactive slots, ring/int8 variants); only the FFN
+    differs. Expert routing is per token, so the slot dimension threads
+    straight through dispatch/combine — with `drop=False` capacity a
+    slot's expert outputs depend only on its own row, never on
+    co-residents."""
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], token, axis=0) * emb_scale
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
     b = token.shape[0]
-    sc = cache["k"].shape[2]
     pos = jnp.asarray(pos, jnp.int32)
-    slot = dense.paged_cursor(cfg, sc, pos, active)
-    bidx = jnp.arange(b)
+    table = jnp.asarray(table, jnp.int32)
 
     def body(carry, inp):
         xc, cd = carry
@@ -366,8 +367,9 @@ def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        ctx, cd = dense.paged_attn_decode(cfg, lp, y, pos, slot, bidx, cd,
-                                          idx)
+        ctx, cd = dense.paged_attn_decode(cfg, lp, y, pos, table, active,
+                                          cd, idx, page_size=page_size,
+                                          ring_len=ring_len)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(b, 1, -1) @ lp["wo"]
         res = xc
@@ -388,17 +390,18 @@ def decode_step_paged(cfg: ModelConfig, params, cache, token, pos, active):
     return logits, cache
 
 
-def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
-                        offset, limit=None, *, page_len: int = 0):
+def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, row,
+                        offset, limit=None, *, page_size: int,
+                        ring_len: int = 0, abs_len: int = 0):
     """MoE mirror of `dense.prefill_chunk_paged` (shared
-    `dense.paged_attn_chunk` attention, drop-free MoE FFN)."""
+    `dense.paged_attn_chunk` block-table attention, drop-free MoE FFN)."""
     emb_scale = cfg.d_model ** 0.5 if cfg.tie_embeddings else 1.0
     x = jnp.take(params["tok_embed"], tokens, axis=0) * emb_scale
     x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
     c = tokens.shape[1]
     positions = offset + jnp.arange(c)[None, :]
     limit = offset + c if limit is None else limit
-    plen = page_len or cache["k"].shape[2]
+    row = jnp.asarray(row, jnp.int32)
 
     def body(carry, inp):
         xc, cd = carry
@@ -406,8 +409,11 @@ def prefill_chunk_paged(cfg: ModelConfig, params, cache, tokens, slot,
         h = cfg.num_heads
         res = xc
         y = L.rmsnorm(xc, lp["attn_norm"], cfg.norm_eps)
-        ctx, cd = dense.paged_attn_chunk(cfg, lp, y, positions, slot,
-                                         offset, limit, cd, idx, plen)
+        ctx, cd = dense.paged_attn_chunk(cfg, lp, y, positions, row,
+                                         offset, limit, cd, idx,
+                                         page_size=page_size,
+                                         ring_len=ring_len,
+                                         abs_len=abs_len)
         ctx = ctx[:, :, :h, :]
         xc = res + ctx.reshape(1, c, -1) @ lp["wo"]
         res = xc

@@ -1,16 +1,22 @@
 """Generation engines.
 
-`ContinuousEngine` is the request-centric serving core: a slot-paged KV
-cache (fixed [slots, max_len] pages — [slots, window] rings for
-sliding-window configs, int8 values + per-slot scales for `kv_quant`
-configs — with per-slot position/kv_len vectors fed to decode_attention),
+`ContinuousEngine` is the request-centric serving core: one global
+block-table KV page pool ([L, num_pages, page_size, G, dh] — int8 values
++ per-page scale planes for `kv_quant` configs) with a per-slot int32
+page-table row mapping each slot's logical positions onto pool pages,
 `submit()`/`step()` lifecycle, admission of a queued prompt into any slot
 the step after its occupant hits EOS, and prefill of admitted prompts
 chunked into the running decode loop so a long prompt never stalls other
-slots for more than one chunk. Both greedy and sampled requests run here:
-each sampled request draws from its own PRNG stream
-`fold_in(PRNGKey(seed), request_id)` advanced by a per-request draw
-counter, so its tokens are bit-identical regardless of co-residents
+slots for more than one chunk. Pages are refcounted (serving/pager.py):
+a prompt whose prefix is already cached maps the shared pages READ-ONLY
+into its table row and skips their prefill chunks entirely; a partially
+matching page is COPY-ON-WRITE forked (one page copy) and prefill
+resumes at the first divergent token. At prefix share 0 the gathered
+logical buffer is element-identical to the old slot-contiguous cache, so
+paged output stays bit-identical to the wave path. Both greedy and
+sampled requests run here: each sampled request draws from its own PRNG
+stream `fold_in(PRNGKey(seed), request_id)` advanced by a per-request
+draw counter, so its tokens are bit-identical regardless of co-residents
 (DESIGN.md §10).
 
 `Engine` keeps the legacy wave surface: `generate()` is now a thin
@@ -22,7 +28,11 @@ wave path, see tests/test_serving.py and tests/test_paged_families.py),
 and falls back to fixed length-bucketed waves (`generate_wave`) for the
 families without paged KV (M-RoPE, encdec, recurrent state).
 `generate(..., continuous=False)` forces the legacy wave path, which
-remains the parity baseline every serving bench compares against.
+remains the parity baseline every serving bench compares against; wave
+sampling draws from the same per-request `fold_in(PRNGKey(seed), rid)`
+streams as the paged path (one shared split-per-step key historically
+made wave draws depend on batch composition), so sampled output is also
+path-identical.
 """
 from __future__ import annotations
 
@@ -37,13 +47,14 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import model
+from repro.serving.pager import PagePool, PoolStats, PrefixCache
 
 
 @dataclass
 class GenResult:
     """One finished generation: decoded token ids (including the EOS, if
-    hit), the prompt length after any page truncation, and measured
-    prefill / decode wall time attributed to this request."""
+    hit), the prompt length, and measured prefill / decode wall time
+    attributed to this request."""
     tokens: List[int]
     prompt_len: int
     prefill_s: float = 0.0
@@ -60,24 +71,31 @@ class GenResult:
 class EngineEvent:
     """One request-visible state change from a `ContinuousEngine.step()`:
     kind is "admitted" (slot assigned, prefill starting), "token" (one new
-    token id in `token`), or "done" (`result` carries the GenResult)."""
+    token id in `token`), "done" (`result` carries the GenResult), or
+    "shed" (terminal refusal — `reason` says why, e.g. "oversize" for a
+    request that cannot fit its page budget; no tokens were produced and
+    none will be)."""
     rid: int
     kind: str
     token: Optional[int] = None
     result: Optional[GenResult] = None
+    reason: Optional[str] = None
 
 
 @dataclass
 class _Request:
     """Engine-internal per-request state: prompt, prefill/decode
-    progress, the occupied slot, timing, and the sampling mode/stream."""
+    progress, the occupied slot and mapped pages, timing, and the
+    sampling mode/stream."""
     rid: int
     prompt: np.ndarray
     max_new: int
     submitted_s: float
     tokens: List[int] = field(default_factory=list)
-    filled: int = 0                  # prefill progress (tokens in the page)
+    filled: int = 0                  # prefill progress (incl. matched skip)
+    matched: int = 0                 # prefix tokens reused from the cache
     slot: int = -1
+    pages: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
     greedy: bool = True
@@ -86,21 +104,58 @@ class _Request:
     key: Optional[object] = None
 
 
-class ContinuousEngine:
-    """Continuous (slot-level) batching over a paged KV cache.
+@jax.jit
+def _sample_rows(logits, keys, ts, greedy):
+    """One next-token draw per row, all rows in one jitted call.
 
-    The cache is one fixed [L, slots, max_len, G, dh] allocation (the
-    seq dim shrinks to `window` for sliding-window configs — each slot
-    keeps a [window] ring with its own write cursor `pos % window`; for
-    `kv_quant` configs the values are int8 with per-slot [L, slots, S, G]
-    scales); each slot is an independent page with its own `pos` (kv
-    length). Decode steps run all slots at once through
-    `model.decode_step_paged`; admission prefill runs one `prefill_chunk`
-    slice of one prompt per slot per step through
-    `model.prefill_chunk_paged`, interleaved with decode, so the running
-    requests keep streaming while a new prompt fills its page. A slot
-    freed by EOS (or max_new / page exhaustion) admits the next queued
-    request on the following step.
+    logits [B, V]; keys [B, 2] uint32 per-request stream roots; ts [B]
+    per-request draw counters; greedy [B] bool. Greedy rows take argmax,
+    sampled rows draw categorical under fold_in(key, t) — exactly the
+    draw the engine's scalar path computes, row by row (logits upcast to
+    f32 first, matching the host-side draw), so batching the draws
+    changes nothing bitwise while collapsing the per-slot Python loop
+    into a single device call that transfers B ints instead of the full
+    [B, V] logits."""
+    def one(row, key, t, g):
+        row = row.astype(jnp.float32)
+        samp = jax.random.categorical(jax.random.fold_in(key, t), row)
+        return jnp.where(g, jnp.argmax(row), samp).astype(jnp.int32)
+    return jax.vmap(one)(logits, keys, ts, greedy)
+
+
+class ContinuousEngine:
+    """Continuous (slot-level) batching over a block-table paged KV pool.
+
+    The cache is one global page pool [L, num_pages, page_size, G, dh]
+    (int8 values with [L, num_pages, page_size, G] scale planes for
+    `kv_quant` configs); each slot maps an ordered list of pages through
+    its [W] page-table row, so a slot's logical position p lives at pool
+    page `table[p // page_size]`, in-page offset `p % page_size`. Decode
+    steps run all slots at once through `model.decode_step_paged`;
+    admission prefill runs one `prefill_chunk` slice of one prompt per
+    slot per step through `model.prefill_chunk_paged`, interleaved with
+    decode, so the running requests keep streaming while a new prompt
+    fills its pages. A slot freed by EOS (or max_new) admits the next
+    queued request on the following step.
+
+    Prefix reuse (non-sliding-window configs): completed prompts register
+    their pages in a token-keyed trie (serving/pager.py). Admission
+    matches the longest cached prefix, maps its full pages read-only
+    (refcounted — zero copies), copy-on-write forks at most one partially
+    matching page, and starts prefill at the first unmatched token; the
+    skipped chunks are the TTFT win `benchmarks/bench_serving.py
+    --prefix` measures. Shared pages are never written: every store lands
+    at logical position >= the request's matched length, which sits in
+    slot-private pages. Sliding-window configs keep per-slot ring pages
+    (cursor `pos % ring_len`) with sharing disabled — a ring's contents
+    depend on its own wrap history, so its pages are never
+    prefix-reusable.
+
+    Oversize admission: a prompt needing more than the slot's table width
+    in pages (prompt + max_new tokens) is refused with a terminal "shed"
+    event (reason "oversize") — never silently truncated; anything
+    smaller can borrow transiently free pool pages and waits in queue
+    while they are held by live slots.
 
     Sampling: `submit(..., greedy=False, seed=s)` gives the request its
     own PRNG stream `fold_in(PRNGKey(s), rid)`; draw t folds in the
@@ -111,11 +166,15 @@ class ContinuousEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: int = 2,
-                 prefill_chunk: int = 32):
-        """Allocate the paged cache (`slots` pages of `max_len` positions,
-        rounded up to whole prefill chunks; `min(max_len, window)` ring
-        positions for sliding-window configs) and jit the paged decode /
-        chunk-prefill executables. Raises ValueError for configs without
+                 prefill_chunk: int = 32, page_size: int = 32,
+                 oversize_pages: int = 2):
+        """Allocate the page pool (`slots` table-widths of `page_size`
+        pages; sliding-window configs get `min(window, chunk-rounded
+        max_len)` ring positions per slot) and jit the paged decode /
+        chunk-prefill executables. `oversize_pages` widens every table
+        row beyond the ceil(max_len / page_size) baseline so a request
+        slightly over budget can still be admitted from transiently free
+        pages instead of shed. Raises ValueError for configs without
         slot-paged support (`model.supports_paged`)."""
         if not model.supports_paged(cfg):
             raise ValueError(
@@ -127,23 +186,47 @@ class ContinuousEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.prefill_chunk = prefill_chunk
-        # pages are allocated rounded UP to a whole number of prefill
-        # chunks: dynamic_update_slice CLAMPS an out-of-bounds start, so a
-        # final chunk crossing the page end would silently shift backwards
-        # over earlier prompt positions; with the padded allocation every
-        # chunk write fits, and the tail positions (>= max_len) are never
-        # attended because kv_len masking tops out at max_len
-        self._page_len = -(-max_len // prefill_chunk) * prefill_chunk
-        self.cache = model.init_cache(cfg, slots, self._page_len,
-                                      dtype=model.compute_dtype(cfg))
+        self.page_size = page_size
+        self.oversize_pages = oversize_pages
+        ps = page_size
+        # absolute-position scratch length for chunked prefill: rounded
+        # UP to whole chunks so a final ragged chunk's dynamic slice
+        # never clamps backwards over earlier positions
+        self.abs_len = -(-max_len // prefill_chunk) * prefill_chunk
+        if cfg.sliding_window:
+            # per-slot ring over the window (same modulus the wave path
+            # bakes into its rolled layout); prefix sharing disabled
+            self.ring_len = min(cfg.sliding_window, self.abs_len)
+            self.table_width = -(-self.ring_len // ps)
+        else:
+            self.ring_len = 0
+            self.table_width = -(-max_len // ps) + oversize_pages
+        self.num_pages = self.slots * self.table_width
+        self.cache = model.init_page_pool(cfg, self.num_pages, ps,
+                                          dtype=model.compute_dtype(cfg))
+        self.pool = PagePool(self.num_pages)
+        self.prefix: Optional[PrefixCache] = (
+            None if self.ring_len else PrefixCache(self.pool, ps))
+        # host page table + lazily refreshed device mirror
+        self._tbl = np.zeros((slots, self.table_width), np.int32)
+        self._tbl_dev = None
         self._decode = jax.jit(
-            lambda p, c, t, pos, act: model.decode_step_paged(
-                cfg, p, c, t, pos, act),
+            lambda p, c, t, pos, act, tbl: model.decode_step_paged(
+                cfg, p, c, t, pos, act, tbl, page_size=ps,
+                ring_len=self.ring_len),
             donate_argnums=(1,))
         self._chunk = jax.jit(
-            lambda p, c, t, slot, off, lim: model.prefill_chunk_paged(
-                cfg, p, c, t, slot, off, lim, page_len=self._page_len),
+            lambda p, c, t, row, off, lim: model.prefill_chunk_paged(
+                cfg, p, c, t, row, off, lim, page_size=ps,
+                ring_len=self.ring_len, abs_len=self.abs_len),
             donate_argnums=(1,))
+
+        def _copy_page(c, src, dst):
+            out = dict(c)
+            for k in out:
+                out[k] = out[k].at[:, dst].set(out[k][:, src])
+            return out
+        self._copy = jax.jit(_copy_page, donate_argnums=(0,))
         # host-side slot state
         self.pos = np.zeros(slots, np.int32)
         self.last_tok = np.zeros(slots, np.int32)
@@ -152,36 +235,45 @@ class ContinuousEngine:
         self.queue: Deque[_Request] = deque()
         self._inflight: Dict[int, _Request] = {}
         self._next_rid = 0
-        # utilisation counters (decode steps only)
+        # utilisation / pager counters (decode steps only)
         self.steps = 0
         self.active_slot_steps = 0
         self.cancelled = 0
+        self.shed = 0
+        self.prefix_hits = 0
+        self.prefix_tokens_reused = 0
 
     def clone(self, *, slots: Optional[int] = None) -> "ContinuousEngine":
-        """An independent replica: same params/config, its own paged cache
+        """An independent replica: same params/config, its own page pool
         and slot state (the SlotScheduler's unit of failover)."""
         return ContinuousEngine(
             self.cfg, self.params, slots=slots or self.slots,
             max_len=self.max_len, eos_id=self.eos_id,
-            prefill_chunk=self.prefill_chunk)
+            prefill_chunk=self.prefill_chunk, page_size=self.page_size,
+            oversize_pages=self.oversize_pages)
+
+    def _table_dev(self):
+        if self._tbl_dev is None:
+            self._tbl_dev = jnp.asarray(self._tbl)
+        return self._tbl_dev
 
     # ------------------------------------------------------------- intake
 
     def submit(self, prompt: np.ndarray, max_new: int = 32,
                rid: Optional[int] = None, *, greedy: bool = True,
                seed: int = 0) -> int:
-        """Queue one request; returns its rid. The prompt is truncated to
-        the last max_len - max_new tokens so the page can always hold the
-        whole generation. `greedy=False` samples from this request's own
-        PRNG stream `fold_in(PRNGKey(seed), rid)` — pass an explicit
-        `rid` to make a sampled request's draws reproducible across
-        engines/runs regardless of what else is co-resident."""
+        """Queue one request; returns its rid. A prompt whose pages
+        (prompt + max_new tokens) exceed the slot table width is shed
+        with a terminal "shed" event at admission — never silently
+        truncated. `greedy=False` samples from this request's own PRNG
+        stream `fold_in(PRNGKey(seed), rid)` — pass an explicit `rid` to
+        make a sampled request's draws reproducible across engines/runs
+        regardless of what else is co-resident."""
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid) + 1
         p = np.asarray(prompt, np.int32).reshape(-1)
-        keep = max(self.max_len - max_new, 1)
-        req = _Request(rid, p[-keep:], max_new, time.perf_counter(),
+        req = _Request(rid, p, max_new, time.perf_counter(),
                        greedy=greedy)
         if not greedy:
             req.key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
@@ -213,12 +305,26 @@ class ContinuousEngine:
         (what a scheduler should look at, not raw free_slots)."""
         return self.free_slots() - len(self.queue)
 
+    def page_stats(self) -> PoolStats:
+        """Pool occupancy snapshot: total/free pages, the sum of live
+        references (slot mappings + prefix-cache retentions), and how
+        many retentions the prefix cache holds."""
+        retained = self.prefix.retained_count() if self.prefix else 0
+        return PoolStats(self.pool.num_pages, self.pool.free_count,
+                         int(self.pool.refs.sum()), retained)
+
+    def drop_prefix_cache(self) -> int:
+        """Release every prefix-cache page retention (pages still mapped
+        by live slots survive until those slots free them); returns the
+        number of entries dropped."""
+        return self.prefix.drop() if self.prefix else 0
+
     def cancel(self, rid: int) -> bool:
         """Abandon one in-flight request (deadline expiry, hedged copy
-        superseded, scheduler failover): its slot is freed immediately —
-        the next `step()` can admit a queued prompt into it — and no
-        further events are emitted for the rid. Returns False when the
-        rid is unknown or already finished."""
+        superseded, scheduler failover): its slot and page references are
+        freed immediately — the next `step()` can admit a queued prompt
+        into them — and no further events are emitted for the rid.
+        Returns False when the rid is unknown or already finished."""
         req = self._inflight.pop(rid, None)
         if req is None:
             return False
@@ -226,6 +332,7 @@ class ContinuousEngine:
             self.queue.remove(req)
         except ValueError:
             pass
+        self._release_pages(req)
         s = req.slot
         if s >= 0 and self._occupant[s] is req:
             self._occupant[s] = None
@@ -235,12 +342,25 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------- stepping
 
+    def _release_pages(self, req: _Request) -> None:
+        """Drop this request's page references (shared prefix pages
+        survive while the trie or other slots still hold them) and clear
+        its table row."""
+        for pid in req.pages:
+            self.pool.decref(pid)
+        req.pages = []
+        if req.slot >= 0:
+            self._tbl[req.slot, :] = 0
+            self._tbl_dev = None
+
     def _finish(self, req: _Request, events: List[EngineEvent]) -> None:
-        """Free the request's slot and emit its terminal "done" event."""
+        """Free the request's slot + pages and emit its terminal "done"
+        event."""
         s = req.slot
         self.active[s] = False
         self._occupant[s] = None
         self._inflight.pop(req.rid, None)
+        self._release_pages(req)
         events.append(EngineEvent(req.rid, "done", result=GenResult(
             req.tokens, len(req.prompt), req.prefill_s, req.decode_s)))
 
@@ -252,38 +372,123 @@ class ContinuousEngine:
         if tok == self.eos_id or len(req.tokens) >= req.max_new:
             self._finish(req, events)
 
+    def _map_request(self, req: _Request, s: int) -> str:
+        """Try to map `req`'s pages into slot `s`'s table row. Returns
+        "ok" (mapped; prefill resumes at the matched prefix length),
+        "shed" (can never fit: more pages than the table width, or the
+        pool can't cover it even with the engine otherwise idle and the
+        prefix cache fully evicted), or "wait" (transient shortage —
+        pages will free when a live slot finishes)."""
+        plen = len(req.prompt)
+        ps = self.page_size
+        if plen == 0:
+            return "shed"
+        if self.ring_len:
+            # rings wrap, so only the prefill scratch bounds the prompt;
+            # every slot maps a full table width of private pages
+            if plen > self.abs_len:
+                return "shed"
+            full: List[int] = []
+            cow = None
+            matched = 0
+            need_total = self.table_width
+        else:
+            need_total = -(-(plen + req.max_new) // ps)
+            if need_total > self.table_width:
+                return "shed"
+            m = self.prefix.match(req.prompt)
+            full, cow, matched = m.full, m.cow, m.matched
+        # hold the matched pages across eviction/alloc: evicting a leaf
+        # we are about to share must not free it back into the pool
+        for pid in full:
+            self.pool.incref(pid)
+        if cow:
+            self.pool.incref(cow[0])
+        fresh = self.pool.alloc(need_total - len(full))
+        while fresh is None and self.prefix and self.prefix.evict_one():
+            fresh = self.pool.alloc(need_total - len(full))
+        if fresh is None:
+            for pid in full:
+                self.pool.decref(pid)
+            if cow:
+                self.pool.decref(cow[0])
+            # live slots will free pages; with the engine idle and the
+            # trie fully evicted the pool cannot ever cover this request
+            if any(r is not None for r in self._occupant):
+                return "wait"
+            return "shed"
+        t0 = time.perf_counter()
+        if cow:
+            # fork the partially matching page: one page copy, then the
+            # resumed prefill overwrites everything past the match point
+            self.cache = self._copy(self.cache, jnp.int32(cow[0]),
+                                    jnp.int32(fresh[0]))
+            self.pool.decref(cow[0])
+        req.pages = full + fresh
+        req.matched = req.filled = matched
+        req.prefill_s += time.perf_counter() - t0
+        self._tbl[s, :len(req.pages)] = req.pages
+        self._tbl[s, len(req.pages):] = 0
+        self._tbl_dev = None
+        if matched:
+            self.prefix_hits += 1
+            self.prefix_tokens_reused += matched
+        return "ok"
+
     def _admit(self, events: List[EngineEvent]) -> None:
         """Assign queued requests to free slots (prefill starts on the
-        same step, via `_prefill_step`)."""
+        same step, via `_prefill_step`). Oversize requests shed loudly;
+        a transient page shortage leaves the queue intact until live
+        slots free their pages."""
         for s in range(self.slots):
-            if self._occupant[s] is None and self.queue:
+            while self._occupant[s] is None and self.queue:
                 req = self.queue.popleft()
-                req.slot, req.filled = s, 0
+                st = self._map_request(req, s)
+                if st == "wait":
+                    self.queue.appendleft(req)
+                    return
+                if st == "shed":
+                    self._inflight.pop(req.rid, None)
+                    self.shed += 1
+                    events.append(EngineEvent(req.rid, "shed",
+                                              reason="oversize"))
+                    continue
+                req.slot = s
                 self._occupant[s] = req
                 self.active[s] = False
                 events.append(EngineEvent(req.rid, "admitted"))
 
     def _prefill_step(self, events: List[EngineEvent]) -> None:
-        """Advance every admitting slot by one prompt chunk."""
+        """Advance every admitting slot by one prompt chunk. A request
+        resuming past a matched prefix takes a short first chunk up to
+        the next chunk boundary, so all later chunks land on the same
+        grid a cold prefill uses — that alignment (plus identical shared
+        page contents) is what keeps a prefix hit bit-identical to a
+        cold run."""
         c = self.prefill_chunk
         for s in range(self.slots):
             req = self._occupant[s]
             if req is None or self.active[s]:
                 continue
             t0 = time.perf_counter()
-            chunk = req.prompt[req.filled:req.filled + c]
+            end = min(len(req.prompt), (req.filled // c + 1) * c)
+            chunk = req.prompt[req.filled:end]
             real = len(chunk)
             if real < c:
                 chunk = np.concatenate([chunk, np.zeros(c - real, np.int32)])
             logits, self.cache = self._chunk(
                 self.params, self.cache, jnp.asarray(chunk[None]),
-                jnp.int32(s), jnp.int32(req.filled),
+                jnp.asarray(self._tbl[s]), jnp.int32(req.filled),
                 jnp.int32(req.filled + real))
             req.filled += real
             if req.filled >= len(req.prompt):
+                plen = len(req.prompt)
+                if self.prefix is not None:
+                    self.prefix.register(req.prompt,
+                                         req.pages[:-(-plen // self.page_size)])
                 row = np.asarray(logits, np.float32)[0, real - 1]
                 tok = self._draw(req, row)
-                self.pos[s] = len(req.prompt)
+                self.pos[s] = plen
                 self.last_tok[s] = tok
                 self.active[s] = True
                 req.prefill_s += time.perf_counter() - t0
@@ -292,23 +497,28 @@ class ContinuousEngine:
                 req.prefill_s += time.perf_counter() - t0
 
     def _decode_step(self, events: List[EngineEvent]) -> None:
-        """One `decode_step_paged` over every active slot, then one token
-        draw per slot from its own row (greedy argmax or the request's
-        private PRNG stream — see `_draw`)."""
+        """One `decode_step_paged` over every active slot, then one
+        batched `_sample_rows` draw (greedy argmax rows and per-request
+        PRNG-stream rows in the same jitted call — only [slots] ints ever
+        reach the host)."""
         if not self.active.any():
             return
         t0 = time.perf_counter()
-        posv = np.minimum(self.pos, self.max_len - 1)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.last_tok[:, None]),
-            jnp.asarray(posv), jnp.asarray(self.active))
-        # all-greedy steps transfer only [slots] argmax ints; the full
-        # [slots, V] logits come to host only when a sampled occupant
-        # needs its row for a categorical draw
-        sampled = any(self.active[s] and not self._occupant[s].greedy
-                      for s in range(self.slots))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        logits_np = np.asarray(logits, np.float32) if sampled else None
+            jnp.asarray(self.pos), jnp.asarray(self.active),
+            self._table_dev())
+        keys = np.zeros((self.slots, 2), np.uint32)
+        ts = np.zeros(self.slots, np.int32)
+        gr = np.ones(self.slots, bool)
+        for s in range(self.slots):
+            req = self._occupant[s]
+            if self.active[s] and not req.greedy:
+                keys[s] = np.asarray(req.key)
+                ts[s] = len(req.tokens)
+                gr[s] = False
+        nxt = np.asarray(_sample_rows(logits, jnp.asarray(keys),
+                                      jnp.asarray(ts), jnp.asarray(gr)))
         dt = time.perf_counter() - t0
         self.steps += 1
         self.active_slot_steps += int(self.active.sum())
@@ -318,8 +528,7 @@ class ContinuousEngine:
             req = self._occupant[s]
             req.decode_s += dt
             self.pos[s] += 1
-            tok = int(nxt[s]) if req.greedy else self._draw(
-                req, logits_np[s])
+            tok = int(nxt[s])
             self.last_tok[s] = tok
             self._emit_token(req, tok, events)
 
@@ -351,7 +560,9 @@ class ContinuousEngine:
         `greedy=False` samples each request from its own
         fold_in(PRNGKey(seed), rid) stream; rids are pinned to the batch
         index so the same (prompts, seed) call draws the same tokens no
-        matter what the engine served before."""
+        matter what the engine served before. Raises RuntimeError if a
+        request is shed (oversize) — callers of the batch API expect
+        every prompt to produce tokens."""
         assert not self._inflight, "generate() on a busy engine"
         rids = [self.submit(p, max_new, rid=i, greedy=greedy, seed=seed)
                 for i, p in enumerate(prompts)]
@@ -360,6 +571,10 @@ class ContinuousEngine:
             for ev in self.step():
                 if ev.kind == "done":
                     results[ev.rid] = ev.result
+                elif ev.kind == "shed":
+                    raise RuntimeError(
+                        f"request {ev.rid} shed: {ev.reason} "
+                        f"(prompt + max_new exceed the page budget)")
         return [results[r] for r in rids]
 
 
@@ -372,17 +587,19 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  eos_id: int = 2, prefill_chunk: Optional[int] = None,
-                 slots: int = 4):
-        """`max_len`: page/cache budget per request (prompt + generation);
+                 slots: int = 4, page_size: int = 32):
+        """`max_len`: KV budget per request (prompt + generation);
         `slots`: default concurrent-request count of the shared
         ContinuousEngine; `prefill_chunk`: tokens per admission prefill
-        chunk (continuous path only)."""
+        chunk; `page_size`: positions per KV pool page (both continuous
+        path only)."""
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.eos_id = eos_id
         self.slots = slots
         self.prefill_chunk = prefill_chunk or 32
+        self.page_size = page_size
         self._prefill = jax.jit(
             lambda p, b: model.prefill(cfg, p, b))
         self._decode = jax.jit(
@@ -397,7 +614,8 @@ class Engine:
         if n not in self._cont:
             self._cont[n] = ContinuousEngine(
                 self.cfg, self.params, slots=n, max_len=self.max_len,
-                eos_id=self.eos_id, prefill_chunk=self.prefill_chunk)
+                eos_id=self.eos_id, prefill_chunk=self.prefill_chunk,
+                page_size=self.page_size)
         return self._cont[n]
 
     def _grow_cache(self, cache, b: int):
@@ -428,13 +646,11 @@ class Engine:
                  continuous: Optional[bool] = None) -> List[GenResult]:
         """Compatibility wrapper. `continuous=None` auto-routes requests
         through the slot-paged ContinuousEngine when the config supports
-        it (greedy output is token-identical to the wave path; sampled
-        requests draw from per-request fold_in(PRNGKey(seed), rid)
-        streams, so their tokens don't depend on what else is in the
-        batch). `False` forces the legacy length-bucketed waves (equal
-        lengths keep causal semantics exact without pad masking; wave
-        sampling advances one shared key, so its draws DO depend on the
-        batch composition — kept only as the pre-paged baseline)."""
+        it. Both paths draw each request's sampled tokens from its own
+        fold_in(PRNGKey(seed), rid) stream with rid pinned to the prompt
+        index, so greedy AND sampled output are token-identical between
+        the paged path and the legacy length-bucketed waves
+        (`continuous=False`, kept as the pre-paged parity baseline)."""
         if continuous is None:
             continuous = model.supports_paged(self.cfg)
         if continuous:
@@ -447,13 +663,21 @@ class Engine:
         for plen, idxs in sorted(buckets.items()):
             wave = [prompts[i] for i in idxs]
             for i, r in zip(idxs, self.generate_wave(wave, max_new,
-                                                     greedy, seed)):
+                                                     greedy, seed,
+                                                     rids=idxs)):
                 results[i] = r
         return results
 
     def generate_wave(self, prompts: List[np.ndarray], max_new: int = 32,
-                      greedy: bool = True, seed: int = 0) -> List[GenResult]:
-        """prompts: list of 1-D int32 token arrays of EQUAL length."""
+                      greedy: bool = True, seed: int = 0,
+                      rids: Optional[List[int]] = None) -> List[GenResult]:
+        """prompts: list of 1-D int32 token arrays of EQUAL length.
+
+        Sampled draws come from per-request streams
+        fold_in(fold_in(PRNGKey(seed), rid), step) — the same computation
+        the continuous engine's `_sample_rows` performs — so a request's
+        tokens depend only on (seed, rid, its own logits), never on the
+        wave's composition. `rids` defaults to the batch index."""
         b = len(prompts)
         plen = max(len(p) for p in prompts)
         assert all(len(p) == plen for p in prompts), \
@@ -468,15 +692,21 @@ class Engine:
 
         outs = [[] for _ in range(b)]
         done = np.zeros(b, bool)
-        key = jax.random.PRNGKey(seed)
+        if not greedy:
+            if rids is None:
+                rids = list(range(b))
+            root = jax.random.PRNGKey(seed)
+            keys = jnp.asarray(np.stack([
+                np.asarray(jax.random.fold_in(root, r)) for r in rids]))
+            gflags = jnp.zeros(b, bool)
         t1 = time.perf_counter()
-        tok = None
         for step in range(max_new):
             if greedy:
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             else:
-                key, sub = jax.random.split(key)
-                tok = jax.random.categorical(sub, logits)[:, None]
+                tok = _sample_rows(logits, keys,
+                                   jnp.full((b,), step, jnp.int32),
+                                   gflags)[:, None]
             tok_np = np.asarray(tok)[:, 0]
             for i in range(b):
                 if not done[i]:

@@ -59,11 +59,12 @@ class Completion:
 
 @dataclass
 class Shed:
-    """One request the scheduler explicitly gave up on (deadline expiry
-    or queue overflow). Together with `Completion`s these partition every
-    submitted rid: nothing is ever silently lost."""
+    """One request the scheduler explicitly gave up on (deadline expiry,
+    queue overflow, or an engine-side refusal such as an oversize
+    prompt). Together with `Completion`s these partition every submitted
+    rid: nothing is ever silently lost."""
     rid: int
-    reason: str                     # "deadline" | "queue_full"
+    reason: str                     # "deadline" | "queue_full" | "oversize"
     latency_s: float
 
 
@@ -74,6 +75,7 @@ class SchedCounters:
     completed: int = 0
     shed_deadline: int = 0
     shed_queue: int = 0
+    shed_engine: int = 0
     degraded: int = 0
     hedges: int = 0
     strikes: int = 0
@@ -364,6 +366,25 @@ class SlotScheduler:
                                time.perf_counter() - req.submitted_s,
                                req.ever_hedged))
 
+    def _on_shed(self, ridx: int, req: _SlotReq, ev) -> None:
+        """An engine refused this placement (e.g. oversize prompt: its
+        pages can never fit the replica's table width). The refusal is
+        deterministic across identical replicas, so when no hedged
+        placement remains the request is terminally shed — re-queueing
+        it would loop forever — and recorded, never silently lost."""
+        req.placements.pop(ridx, None)
+        if req.placements:
+            return                    # a hedged copy may still finish
+        self._live.pop(req.rid, None)
+        h = self.state[ridx]
+        if h.canary == req.rid:       # a shed canary proves liveness too
+            h.canary = None
+            if h.tracker.record_success():
+                self.counters.recoveries += 1
+        self.counters.shed_engine += 1
+        self.shed.append(Shed(req.rid, ev.reason or "engine",
+                              time.perf_counter() - req.submitted_s))
+
     def _idle(self) -> None:
         """Nothing progressed this pass. Benign while prefill chunks are
         mid-flight or a probe cooldown is pending; fatal when no replica
@@ -412,6 +433,8 @@ class SlotScheduler:
                     req.last_progress_s = time.perf_counter()
                     if ev.kind == "done":
                         self._on_done(ridx, req, ev, done)
+                    elif ev.kind == "shed":
+                        self._on_shed(ridx, req, ev)
             if not progressed:
                 self._idle()
         return done

@@ -68,7 +68,7 @@ class RagEvent:
     """One request-visible state change. kind: "submitted" | "retrieved"
     (payload: doc id list) | "condensed" (payload: prompt token count) |
     "token" (payload: token id) | "done" (payload: completed RAGAnswer) |
-    "shed" (payload: reason — deadline/overload; terminal) | "failed"
+    "shed" (payload: reason — deadline/overload/oversize; terminal) | "failed"
     (payload: repr of the stage error; terminal)."""
     req_id: int
     kind: str
@@ -83,6 +83,7 @@ class SessionCounters:
     completed: int = 0
     shed_deadline: int = 0
     shed_overload: int = 0
+    shed_oversize: int = 0
     degraded: int = 0
     retrieval_retries: int = 0
     failed: int = 0
@@ -259,6 +260,15 @@ class RagSession:
                 continue
             if ev.kind == "token":
                 events.append(RagEvent(req.req_id, "token", ev.token))
+            elif ev.kind == "shed":
+                # engine refused the prompt (oversize: its pages can
+                # never fit a slot's table width) — terminal, counted
+                del self._decoding[ev.rid]
+                req.state = "shed"
+                req.done_s = time.perf_counter()
+                self.counters.shed_oversize += 1
+                events.append(RagEvent(req.req_id, "shed",
+                                       ev.reason or "engine"))
             elif ev.kind == "done":
                 del self._decoding[ev.rid]
                 ans = req.answer

@@ -42,12 +42,14 @@ class ReducedSLM:
     free of the jax model chain."""
 
     def __init__(self, arch: str = "qwen25_0_5b", *, max_prompt: int = 256,
-                 max_new: int = 24, pad_multiple: int = 32, seed: int = 0):
+                 max_new: int = 24, pad_multiple: int = 32, seed: int = 0,
+                 page_size: int = 32):
         self.arch = arch
         self.max_prompt = max_prompt
         self.max_new = max_new
         self.pad_multiple = pad_multiple
         self.seed = seed
+        self.page_size = page_size
         self._engine = None
         self._tok: Optional[HashTokenizer] = None
 
@@ -60,7 +62,8 @@ class ReducedSLM:
             cfg = get_reduced(self.arch)
             params = model.init_params(cfg, jax.random.PRNGKey(self.seed))
             self._engine = Engine(cfg, params,
-                                  max_len=self.max_prompt + self.max_new)
+                                  max_len=self.max_prompt + self.max_new,
+                                  page_size=self.page_size)
             self._tok = HashTokenizer(cfg.vocab_size)
         return self._engine, self._tok
 

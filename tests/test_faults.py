@@ -348,9 +348,14 @@ def test_chaos_soak_terminal_partition_and_recovery(base_engine):
     # the chaos actually fired, and it drained at least one replica
     assert sum(w.injected["replica_crash"] for w in wrapped) >= 1
     assert c.drains >= 1
-    # nothing stranded engine-side either
+    # nothing stranded engine-side either — and the chaos-injected
+    # cancels (crash requeues, hedges, deadline expiries) all walked the
+    # pager's decref path: with every request terminal, no slot holds
+    # page references, only prefix-cache retentions remain
     for w in wrapped:
         assert w.inner.pending == 0
+        st = w.inner.page_stats()
+        assert st.mapped_refs == st.retained, st
 
     # calm tail: drive small batches until a drained replica recovers
     # (past the horizon probes face no chaos, so this converges fast)
@@ -367,6 +372,12 @@ def test_chaos_soak_terminal_partition_and_recovery(base_engine):
         time.sleep(0.05)                 # let probe cooldowns elapse
     assert sched.counters.recoveries >= 1
     assert sched.counters.probes >= 1
+    # full-drain leak check: dropping the prefix cache returns every
+    # page to the free list on every replica
+    for w in wrapped:
+        w.inner.drop_prefix_cache()
+        st = w.inner.page_stats()
+        assert st.free == st.total and st.mapped_refs == 0, st
 
 
 # ------------------------------------------------------ RagSession fire

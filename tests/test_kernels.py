@@ -297,6 +297,38 @@ def test_decode_attention_ring_clamps_per_slot():
                                np.asarray(full, np.float32))
 
 
+def test_decode_attention_paged_matches_gather_and_ref():
+    """Block-table decode: the scalar-prefetched paged kernel walks each
+    slot's page-table row directly in the pool, and must match (a) the
+    pure-jnp paged oracle and (b) gathering the logical buffer through
+    the table and running the plain kernel — including rows that share a
+    prefix page and table tail entries past kv_len (masked junk)."""
+    B, H, G, dh, P, ps, W = 3, 4, 2, 32, 8, 16, 4
+    q = jax.random.normal(k(6), (B, H, dh))
+    pool_k = jax.random.normal(k(7), (P, ps, G, dh))
+    pool_v = jax.random.normal(k(8), (P, ps, G, dh))
+    # rows 0 and 1 share page 2 as their first (prefix) page; tail
+    # entries past each row's kv_len point at junk pages
+    table = jnp.asarray([[2, 0, 1, 7],
+                         [2, 5, 7, 7],
+                         [4, 3, 6, 0]], jnp.int32)
+    lens = jnp.asarray([3 * ps, ps + 5, 2 * ps - 1], jnp.int32)
+    o_kernel = ops.decode_attention_paged(q, pool_k, pool_v, lens, table)
+    o_ref = ref.decode_attention_paged(q, pool_k, pool_v, lens, table)
+    np.testing.assert_allclose(np.asarray(o_kernel, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    # oracle for the oracle: per-row gather + plain decode_attention
+    flat_k = pool_k.reshape(P * ps, G, dh)
+    flat_v = pool_v.reshape(P * ps, G, dh)
+    j = jnp.arange(W * ps)
+    idx = table[:, j // ps] * ps + (j % ps)
+    o_gather = ref.decode_attention(q, jnp.take(flat_k, idx, axis=0),
+                                    jnp.take(flat_v, idx, axis=0), lens)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_gather, np.float32))
+
+
 @pytest.mark.parametrize("B,H,S,dh,window", [
     (1, 2, 256, 32, None),
     (1, 2, 300, 64, 64),

@@ -92,9 +92,13 @@ def test_ring_page_wraparound_mixed_slots():
     cont = eng.generate(prompts, max_new=8, continuous=True)
     for i, (wv, c) in enumerate(zip(wave, cont)):
         assert wv.tokens == c.tokens, f"slot {i} diverged across wraparound"
-    # ring page really is bounded by the window
+    # the per-slot ring really is bounded by the window: each table row
+    # maps just enough pages to cover `window` positions, not max_len
     ce = eng.continuous(2)
-    assert ce.cache["k"].shape[2] == w
+    assert ce.ring_len == w
+    assert ce.table_width == -(-w // ce.page_size)
+    assert ce.cache["k"].shape[1] == ce.slots * ce.table_width  # pool pages
+    assert ce.cache["k"].shape[2] == ce.page_size
 
 
 @pytest.fixture(scope="module")

@@ -1,0 +1,280 @@
+"""Block-table KV pager: refcounts, shared prefixes, COW, oversize.
+
+Covers the PR-8 acceptance contract:
+  - PagePool / PrefixCache bookkeeping (all-or-nothing alloc, refcount
+    round trips, LRU leaf eviction, first-writer-wins registration);
+  - no page leaks under admission/EOS/cancel churn (every page returns
+    to the free list once the engine drains and the trie is dropped);
+  - COW fork correctness: requests sharing a prefix diverge mid-page
+    without cross-talk, bit-identical to isolated cold runs;
+  - prefix-hit parity: a prompt served over cached prefix pages emits
+    BIT-IDENTICAL tokens to a cold engine (greedy and sampled);
+  - oversize admission sheds loudly (terminal "shed" event / session
+    counter), never truncates silently.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs import get_reduced
+from repro.models import model
+from repro.serving.engine import ContinuousEngine, Engine
+from repro.serving.pager import PagePool, PrefixCache
+
+
+# ------------------------------------------------------------- pool units
+
+
+def test_pool_alloc_refcount_roundtrip():
+    pool = PagePool(6)
+    a = pool.alloc(4)
+    assert sorted(a) == [0, 1, 2, 3] and pool.free_count == 2
+    assert pool.alloc(3) is None                  # all-or-nothing
+    assert pool.free_count == 2
+    pool.incref(a[0])
+    assert not pool.decref(a[0])                  # still referenced
+    assert pool.decref(a[0])                      # now freed
+    for p in a[1:]:
+        pool.decref(p)
+    assert pool.free_count == 6
+    assert int(pool.refs.sum()) == 0
+
+
+def test_prefix_trie_match_register_evict():
+    pool = PagePool(8)
+    cache = PrefixCache(pool, page_size=4)
+    prompt = np.asarray([1, 2, 3, 4, 5, 6, 7, 8, 9, 10], np.int32)
+    pages = pool.alloc(3)                         # 2 full + 1 tail page
+    cache.register(prompt, pages)
+    # trie holds one ref per registered page, on top of the slot's
+    assert int(pool.refs[pages[0]]) == 2
+    assert cache.retained_count() == 3
+    # exact full-page walk + tail lcp, capped at plen-1
+    m = cache.match(prompt)
+    assert m.full == pages[:2]
+    assert m.cow == (pages[2], 1)                 # tail [9,10], cap 9-8=1
+    assert m.matched == 9
+    # divergence mid-page -> the full walk stops, the divergent edge COWs
+    d = np.asarray([1, 2, 3, 4, 5, 99, 7, 8], np.int32)
+    md = cache.match(d)
+    assert md.full == pages[:1] and md.cow == (pages[1], 1)
+    # no common prefix at all
+    assert cache.match(np.asarray([42, 43], np.int32)).matched == 0
+    # register is first-writer-wins: re-registering the same prompt from
+    # duplicate pages keeps the original pids and adds no references
+    dup = pool.alloc(3)
+    before = pool.refs.copy()
+    cache.register(prompt, dup)
+    assert (pool.refs == before).all()
+    for p in dup:
+        pool.decref(p)
+    # eviction drops trie refs only; slot refs keep pages alive
+    while cache.evict_one():
+        pass
+    assert cache.retained_count() == 0
+    assert int(pool.refs[pages[0]]) == 1
+    for p in pages:
+        pool.decref(p)
+    assert pool.free_count == pool.num_pages
+
+
+def test_prefix_trie_drop_frees_everything():
+    pool = PagePool(4)
+    cache = PrefixCache(pool, page_size=2)
+    pages = pool.alloc(2)
+    cache.register(np.asarray([5, 6, 7], np.int32), pages)
+    for p in pages:
+        pool.decref(p)                            # slot done
+    assert pool.free_count == 2                   # trie still retains
+    assert cache.drop() == 2
+    assert pool.free_count == 4
+
+
+# --------------------------------------------------------- engine fixtures
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_reduced("qwen25_0_5b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _drain(ce):
+    res = {}
+    sheds = {}
+    while ce.pending:
+        for ev in ce.step():
+            if ev.kind == "done":
+                res[ev.rid] = ev.result
+            elif ev.kind == "shed":
+                sheds[ev.rid] = ev.reason
+    return res, sheds
+
+
+def _assert_no_leak(ce):
+    st = ce.page_stats()
+    assert st.mapped_refs == st.retained, st      # only the trie holds refs
+    ce.drop_prefix_cache()
+    st = ce.page_stats()
+    assert st.free == st.total and st.mapped_refs == 0, st
+
+
+# ------------------------------------------------------------ leak churn
+
+
+def test_no_page_leak_under_churn(dense_setup):
+    """Admission / EOS / cancel / oversize churn across several waves:
+    after the engine drains and the prefix cache is dropped, every pool
+    page is back on the free list (refcount leaks would strand pages)."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(cfg, params, slots=3, max_len=96)
+    rng = np.random.default_rng(0)
+    for wave in range(3):
+        rids = []
+        for i in range(6):
+            p = rng.integers(4, 500, 8 + 11 * i % 40).astype(np.int32)
+            rids.append(ce.submit(p, max_new=4, greedy=bool(i % 2),
+                                  seed=wave))
+        # cancel one queued and (after a step) one in-flight request
+        ce.cancel(rids[4])
+        ce.step()
+        ce.cancel(rids[0])
+        # oversize: can never fit table_width pages -> shed, not stuck
+        big = rng.integers(4, 500, 96 * 3).astype(np.int32)
+        over = ce.submit(big, max_new=8)
+        res, sheds = _drain(ce)
+        assert sheds.get(over) == "oversize"
+        assert rids[0] not in res and rids[4] not in res
+        for r in rids[1:4] + rids[5:]:
+            assert len(res[r].tokens) > 0
+    _assert_no_leak(ce)
+
+
+def test_ring_engine_pages_recycle(dense_setup):
+    """Sliding-window rings disable prefix sharing but still
+    allocate/free through the pool: drained engine -> empty pool."""
+    cfg = get_reduced("h2o_danube_1_8b")
+    params = model.init_params(cfg, jax.random.PRNGKey(1))
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    assert ce.ring_len > 0 and ce.prefix is None
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(4, 500, n).astype(np.int32)
+               for n in (80, 20, 33)]
+    ce.generate(prompts, max_new=4)
+    _assert_no_leak(ce)
+
+
+# ----------------------------------------------------------- COW + parity
+
+
+def test_cow_fork_no_cross_talk(dense_setup):
+    """Two prompts sharing a full page + part of the next page: the
+    second COW-forks mid-page. Both emit exactly what they emit when run
+    cold and alone — the fork copies the shared history, the divergent
+    suffix never leaks into the donor's page."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(7)
+    a = rng.integers(4, 500, 48).astype(np.int32)
+    b = np.concatenate([a[:40], rng.integers(4, 500, 8).astype(np.int32)])
+    solo = {}
+    for name, p in (("a", a), ("b", b)):
+        ce = ContinuousEngine(cfg, params, slots=2, max_len=96)
+        solo[name] = ce.generate([p], max_new=6)[0].tokens
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    assert ce.generate([a], max_new=6)[0].tokens == solo["a"]
+    # page 0 (tokens 0..31) is shared whole; tokens 32..39 COW-fork out
+    # of a's registered second page
+    assert ce.generate([b], max_new=6)[0].tokens == solo["b"]
+    assert ce.prefix_hits == 1
+    assert ce.prefix_tokens_reused == 40
+    # and the donor prompt still replays bit-identically afterwards
+    assert ce.generate([a], max_new=6)[0].tokens == solo["a"]
+    _assert_no_leak(ce)
+
+
+@pytest.mark.parametrize("greedy", [True, False])
+def test_prefix_hit_bit_identical_to_cold(dense_setup, greedy):
+    """Acceptance: a prompt admitted over cached prefix pages (full-page
+    reuse + COW tail + skipped prefill chunks) produces BIT-identical
+    tokens to the same prompt on a cold engine — shared page contents
+    equal what cold prefill writes, and the resumed chunk grid realigns
+    to the cold boundaries."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(11)
+    seed_prompt = rng.integers(4, 500, 70).astype(np.int32)
+    probe = np.concatenate([seed_prompt[:50],
+                            rng.integers(4, 500, 13).astype(np.int32)])
+    cold = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    want = cold.generate([probe], max_new=8, greedy=greedy)[0].tokens
+    warm = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    warm.generate([seed_prompt], max_new=8, greedy=greedy)
+    got = warm.generate([probe], max_new=8, greedy=greedy)[0].tokens
+    assert warm.prefix_hits >= 1 and warm.prefix_tokens_reused >= 32
+    assert got == want
+    # identical resubmission reuses every page but the last token's
+    warm2 = warm.generate([probe], max_new=8, greedy=greedy)[0].tokens
+    assert warm2 == want
+    _assert_no_leak(warm)
+
+
+def test_identical_prompts_share_pages_concurrently(dense_setup):
+    """The same prompt submitted again AFTER its twin completed maps the
+    registered pages read-only; all copies agree with a cold run."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(13)
+    p = rng.integers(4, 500, 50).astype(np.int32)
+    cold = ContinuousEngine(cfg, params, slots=4, max_len=96)
+    want = cold.generate([p], max_new=5)[0].tokens
+    ce = ContinuousEngine(cfg, params, slots=4, max_len=96)
+    res = ce.generate([p, p, p], max_new=5)
+    assert all(r.tokens == want for r in res)
+    _assert_no_leak(ce)
+
+
+# -------------------------------------------------------------- oversize
+
+
+def test_oversize_is_shed_not_truncated(dense_setup):
+    """A prompt whose pages (prompt + max_new) exceed the table width is
+    refused with a terminal "shed" event — the old silent `p[-keep:]`
+    truncation is gone — while in-budget co-residents are unaffected.
+    The batch API surfaces the refusal as an error."""
+    cfg, params = dense_setup
+    ce = ContinuousEngine(cfg, params, slots=2, max_len=96)
+    cap = ce.table_width * ce.page_size
+    rng = np.random.default_rng(17)
+    big = rng.integers(4, 500, cap).astype(np.int32)    # + max_new > cap
+    ok = rng.integers(4, 500, 20).astype(np.int32)
+    r_big = ce.submit(big, max_new=8)
+    r_ok = ce.submit(ok, max_new=4)
+    res, sheds = _drain(ce)
+    assert sheds == {r_big: "oversize"}
+    assert len(res[r_ok].tokens) == 4
+    # slightly-over-max_len prompts ride the oversize_pages slack instead
+    snug = rng.integers(4, 500, ce.max_len + 2).astype(np.int32)
+    r = ce.submit(snug, max_new=4)
+    res, sheds = _drain(ce)
+    assert not sheds and len(res[r].tokens) == 4
+    assert res[r].prompt_len == ce.max_len + 2          # untruncated
+    with pytest.raises(RuntimeError, match="oversize"):
+        ce.generate([big], max_new=8)
+    _assert_no_leak(ce)
+
+
+def test_wave_and_paged_sampling_agree(dense_setup):
+    """The legacy wave sampler now draws from the same per-request
+    fold_in(PRNGKey(seed), rid) streams as the paged path (it used to
+    advance one shared key, making draws depend on batch composition):
+    sampled output is bit-identical across continuous=True/False."""
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_len=96, slots=2)
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(4, 500, n).astype(np.int32)
+               for n in (16, 16, 24)]
+    wave = eng.generate(prompts, max_new=6, greedy=False, seed=9,
+                        continuous=False)
+    cont = eng.generate(prompts, max_new=6, greedy=False, seed=9,
+                        continuous=True)
+    for i, (w, c) in enumerate(zip(wave, cont)):
+        assert w.tokens == c.tokens, f"request {i} diverged"
