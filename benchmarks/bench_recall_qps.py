@@ -1,5 +1,12 @@
-"""Figure 7 (recall vs QPS) + Figure 8 (cluster sizes, efSearch width)."""
+"""Figure 7 (recall vs QPS) + Figure 8 (cluster sizes, efSearch width),
+plus the tiered hot/cold sweep (DESIGN.md §14): `--tiered` serves the
+same corpus under shrinking device budgets and checks that recall is
+unchanged (candidates are tier-invariant, so ids/dists are bit-identical
+at equal n_probe) while reporting resident-device-bytes and the
+tier-hit-rate."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -64,5 +71,71 @@ def run(mode="quick"):
                         break
 
 
+def _batched_p50(idx, Q, k, n_probe, repeats=5):
+    idx.search_device_batched(Q, k=k, n_probe=n_probe)     # jit warm
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ids, dists = idx.search_device_batched(Q, k=k, n_probe=n_probe)
+        times.append((time.perf_counter() - t0) / len(Q))
+    return ids, dists, float(np.median(times))
+
+
+def run_tiered(mode="quick", budgets=(1.0, 0.5, 0.25)):
+    """Tiered sweep: one TieredEcoVector, shrinking device budgets.
+
+    Emits resident-device-bytes, tier-hit-rate, recall and p50-vs-resident
+    columns per budget, and raises if the tiered results are not
+    bit-identical to the all-resident reference at equal n_probe."""
+    from repro.core.tiered import TieredEcoVector
+
+    X, Q = datasets(mode)["SIFT-like"]
+    gt = ground_truth(X, Q)
+    k, n_probe = 10, 4
+    idx = TieredEcoVector(X.shape[1], n_clusters=max(16, len(X) // 256),
+                          M=12, ef_construction=60)
+    t0 = time.perf_counter()
+    idx.build(X)
+    emit("tiered.build", (time.perf_counter() - t0) * 1e6,
+         f"n={len(X)};clusters={idx.n_clusters}")
+
+    ref_ids, ref_dists, ref_p50 = _batched_p50(idx, Q, k, n_probe)
+    recs = [len(set(map(int, ids)) & g) / k for ids, g in zip(ref_ids, gt)]
+    full = idx.all_resident_bytes()
+    emit("tiered.SIFT-like.budget=100%", ref_p50 * 1e6,
+         f"recall@10={np.mean(recs):.3f};resident_bytes={full};"
+         f"hot_hit_rate=1.00;p50_vs_resident=1.00x")
+
+    for frac in budgets:
+        idx.set_device_budget(int(frac * full))
+        s = idx.stats
+        h0, c0 = s.tier_hot_hits, s.tier_cold_hits
+        ids, dists, p50 = _batched_p50(idx, Q, k, n_probe)
+        if not (np.array_equal(ids, ref_ids)
+                and np.array_equal(dists, ref_dists)):
+            raise AssertionError(
+                f"tiered results diverged from all-resident at "
+                f"budget={frac:.0%} (n_probe={n_probe})")
+        recs = [len(set(map(int, i)) & g) / k for i, g in zip(ids, gt)]
+        hits_h, hits_c = s.tier_hot_hits - h0, s.tier_cold_hits - c0
+        rate = hits_h / max(hits_h + hits_c, 1)
+        emit(f"tiered.SIFT-like.budget={frac:.0%}", p50 * 1e6,
+             f"recall@10={np.mean(recs):.3f};"
+             f"resident_bytes={idx.device_resident_bytes()};"
+             f"hot={len(idx.hot_clusters())};cold={len(idx.cold_clusters())};"
+             f"hot_hit_rate={rate:.2f};"
+             f"p50_vs_resident={p50 / max(ref_p50, 1e-12):.2f}x")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="quick", choices=("quick", "full"))
+    ap.add_argument("--tiered", action="store_true",
+                    help="run only the tiered hot/cold budget sweep")
+    a = ap.parse_args()
+    if a.tiered:
+        run_tiered(a.mode)
+    else:
+        run(a.mode)
+        run_tiered(a.mode)

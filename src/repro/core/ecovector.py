@@ -64,6 +64,11 @@ class EcoVectorStats:
     quarantined: int = 0            # clusters CURRENTLY quarantined
     rebuilt: int = 0                # clusters restored (rebuild/auto-heal)
     wal_replayed: int = 0           # mutations replayed by load()
+    # tiering accounting (DESIGN.md §14; stays zero on untirered indexes)
+    tier_hot_hits: int = 0          # probes served from the device pack
+    tier_cold_hits: int = 0         # probes served from the cold host pack
+    promotions: int = 0             # clusters moved cold -> hot
+    demotions: int = 0              # clusters moved hot -> cold
 
 
 class EcoVector:
@@ -534,8 +539,14 @@ class EcoVector:
     # (beyond this, repack falls back to a disk read for the eldest)
     PENDING_GRAPHS_MAX = 8
 
+    def _pack_live(self) -> bool:
+        """Is there a device-side layout that insert/delete must keep in
+        sync (via dirty marks)? Subclasses with their own layout (the
+        tiered index) override this instead of `_mark_dirty`."""
+        return self._device_pack is not None
+
     def _mark_dirty(self, c: int, g: Optional[HNSW] = None):
-        if self._device_pack is not None:
+        if self._pack_live():
             self._dirty.add(c)
             if g is not None:
                 self._pending_graphs.pop(c, None)
@@ -701,16 +712,28 @@ class EcoVector:
                     f.write(j.read_file(g, name))
         self._journal = j
         self._persist_root = root
+        self._restore_extra(j, g)
         if replay_wal:
-            ops_raw, _torn = j.replay()  # torn tail == never acknowledged
-            self._replaying = True
-            try:
-                for raw in ops_raw:
-                    self._apply_wal(pickle.loads(raw))
-            finally:
-                self._replaying = False
-            self.stats.wal_replayed = len(ops_raw)
+            self._replay_journal()
         return self
+
+    def _restore_extra(self, j: "store.Journal", g: int) -> None:
+        """Subclass hook: restore additional generation files (the tiered
+        index's tier assignment + cold pack) after the core state is back
+        but BEFORE the WAL replays, so replayed mutations land on the
+        restored tier layout."""
+
+    def _replay_journal(self) -> None:
+        """Re-apply every acknowledged mutation journaled since the
+        loaded generation (torn tail == never acknowledged)."""
+        ops_raw, _torn = self._journal.replay()
+        self._replaying = True
+        try:
+            for raw in ops_raw:
+                self._apply_wal(pickle.loads(raw))
+        finally:
+            self._replaying = False
+        self.stats.wal_replayed = len(ops_raw)
 
     def _apply_wal(self, op: tuple):
         kind = op[0]
@@ -727,11 +750,34 @@ class EcoVector:
 
     def ram_bytes(self) -> int:
         """Resident memory: centroid graph + ids (Table 1 EcoVector row:
-        4*Nc*(d + M'/(1-p0)) + 8N + one loaded inverted list)."""
+        4*Nc*(d + M'/(1-p0)) + 8N + one loaded inverted list), PLUS
+        everything the runtime actually keeps resident on top of the
+        paper's model — the LRU cluster-graph cache, update-path pending
+        graphs, and the jnp device mirrors. A freshly built index reports
+        exactly the paper number; a warmed-up one reports the truth."""
         base = self.centroid_graph.memory_bytes() if self.centroid_graph else 0
         ids = 8 * len(self.assign)
         one_list = self.avg_cluster_bytes()
-        return base + ids + one_list
+        cached = sum(g.memory_bytes() for g in self._cache.values())
+        pending = sum(g.memory_bytes()
+                      for c, g in self._pending_graphs.items()
+                      if c not in self._cache)
+        return (base + ids + one_list + cached + pending
+                + self.device_resident_bytes())
+
+    def device_resident_bytes(self) -> int:
+        """Bytes currently held on-device (jnp mirrors of the cluster
+        pack + centroids) — the quantity a `device_budget_bytes` knob
+        constrains. Zero until the first device search materialises the
+        mirrors."""
+        total = 0
+        if self._mirror is not None:
+            total += sum(int(m.size) * m.dtype.itemsize
+                         for m in self._mirror)
+        if self._centroids_dev is not None:
+            total += (int(self._centroids_dev.size)
+                      * self._centroids_dev.dtype.itemsize)
+        return total
 
     def disk_bytes(self) -> int:
         return sum(os.path.getsize(self._path(c))

@@ -177,6 +177,7 @@ def apply_scr_batch(queries: Sequence[str],
     for b, row in enumerate(doc_ids_per_query):
         ids_m[b, :len(row)] = row
     data_j, lens_j = index.device_arrays()
+    index.record_select(ids_m)     # per-query DMA'd-block accounting
     scores, wins = ops.scr_select(qvs.astype(np.float32), data_j, lens_j,
                                   ids_m, use_pallas=use_pallas)
     scores = np.asarray(scores)

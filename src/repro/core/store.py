@@ -165,6 +165,23 @@ def write_segment(path: str, records: List[bytes],
     _fsync_dir(os.path.dirname(path))
 
 
+def atomic_write_bytes(path: str, blob: bytes) -> None:
+    """Atomically replace `path` with raw bytes (no segment framing):
+    stage to `.tmp`, fsync, rename, fsync the directory. For payloads
+    whose integrity is tracked externally (e.g. the tiered cold pack,
+    whose per-cluster CRCs live in a companion manifest segment)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        _fs_event("raw.write")
+        f.flush()
+        os.fsync(f.fileno())
+    _fs_event("raw.fsync")
+    os.replace(tmp, path)
+    _fs_event("raw.rename")
+    _fsync_dir(os.path.dirname(path))
+
+
 def decode_segment(blob: bytes,
                    path: str = "<bytes>") -> Tuple[Dict[str, Any],
                                                    List[bytes]]:
@@ -567,7 +584,10 @@ def scrub_path(path: str, deep: bool = True) -> List[Dict[str, Any]]:
     for name in sorted(names):
         p = os.path.join(path, name)
         if not os.path.isfile(p) or name.endswith(
-                (".tmp", ".quarantined")):
+                (".tmp", ".quarantined", ".raw")):
+            # .raw payloads carry no segment framing; their per-cluster
+            # CRCs live in a companion manifest (core/tiered.py scrubs
+            # them via `scrub_cold_pack`)
             continue
         try:
             read_segment(p)

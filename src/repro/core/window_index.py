@@ -47,6 +47,14 @@ class WindowIndexStats:
     embed_calls: int = 0         # batched embed invocations
     windows_embedded: int = 0    # total window texts embedded
     wal_replayed: int = 0        # mutations replayed by load()
+    # residency / traffic accounting ahead of this pack's own tiering
+    # pass (DESIGN.md §14 measures EcoVector; this makes the SCR window
+    # pack — the other RAM-resident block pack — equally measurable)
+    resident_bytes: int = 0      # host pack + device mirror, last pack()
+    select_calls: int = 0        # scr_select batch invocations
+    select_queries: int = 0      # query rows across those batches
+    blocks_dma: int = 0          # doc blocks DMA'd by scr_select, total
+    last_query_dma_blocks: float = 0.0   # blocks per query, last batch
 
 
 class WindowIndex:
@@ -345,3 +353,25 @@ class WindowIndex:
     def ram_bytes(self) -> int:
         data, lens = self.pack()
         return int(data.nbytes + lens.nbytes)
+
+    def resident_bytes(self) -> int:
+        """Total resident footprint of the window pack: the host arrays
+        plus the jnp device mirror when one has been materialised. The
+        number a future tiering pass on this pack will budget against."""
+        total = self.ram_bytes()
+        if self._mirror is not None:
+            total += sum(int(m.size) * m.dtype.itemsize
+                         for m in self._mirror)
+        self.stats.resident_bytes = total
+        return total
+
+    def record_select(self, doc_ids: np.ndarray) -> None:
+        """Account one `scr_select` batch: every valid (query, doc) pair
+        is one doc block DMA'd from the pack into the kernel grid."""
+        doc_ids = np.asarray(doc_ids)
+        blocks = int((doc_ids >= 0).sum())
+        nq = int(doc_ids.shape[0])
+        self.stats.select_calls += 1
+        self.stats.select_queries += nq
+        self.stats.blocks_dma += blocks
+        self.stats.last_query_dma_blocks = blocks / max(nq, 1)

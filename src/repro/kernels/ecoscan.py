@@ -72,8 +72,8 @@ def _merge_topk_argmin(cand_d, cand_i, out_d_ref, out_i_ref, k: int):
 _MERGES = {"sort": _merge_topk_sort, "argmin": _merge_topk_argmin}
 
 
-def _kernel(probe_ref, lens_ref, q_ref, *refs, k: int, cap: int, pt: int,
-            merge: str):
+def _kernel(probe_ref, lens_ref, bmap_ref, q_ref, *refs, k: int, cap: int,
+            pt: int, merge: str):
     data_refs = refs[:pt]                           # pt x [1, CAP, d]
     out_d_ref, out_i_ref = refs[pt], refs[pt + 1]
     t = pl.program_id(1)
@@ -90,7 +90,8 @@ def _kernel(probe_ref, lens_ref, q_ref, *refs, k: int, cap: int, pt: int,
     cand_i = []
     for j in range(pt):
         cid = probe_ref[b, t * pt + j]
-        safe = jnp.maximum(cid, 0)                  # padded probe -> block 0
+        blk = bmap_ref[jnp.maximum(cid, 0)]         # cluster -> scan block
+        safe = jnp.maximum(blk, 0)                  # masked/padded -> block 0
         x = data_refs[j][0]                         # [CAP, d]
         # L2 distance via matmul on the MXU: ||x||^2 - 2 x.q + ||q||^2
         xx = jnp.sum(x * x, axis=1, keepdims=True)  # [CAP, 1]
@@ -98,7 +99,7 @@ def _kernel(probe_ref, lens_ref, q_ref, *refs, k: int, cap: int, pt: int,
                                  preferred_element_type=jnp.float32)
         dist = (xx - 2.0 * xq).T + qq               # [1, CAP]
         slot = jax.lax.broadcasted_iota(jnp.int32, (1, cap), 1)
-        valid = (slot < lens_ref[safe]) & (cid >= 0)
+        valid = (slot < lens_ref[safe]) & (cid >= 0) & (blk >= 0)
         cand_d.append(jnp.where(valid, dist, NEG))
         cand_i.append(jnp.where(valid, safe * cap + slot, -1))
     cand_d = cand_d[0] if pt == 1 else jnp.concatenate(cand_d, axis=1)
@@ -106,21 +107,30 @@ def _kernel(probe_ref, lens_ref, q_ref, *refs, k: int, cap: int, pt: int,
     _MERGES[merge](cand_d, cand_i, out_d_ref, out_i_ref, k)
 
 
-def _data_index(b, t, pr, ln, *, j, pt):
-    # Padded probes (id -1) are clamped to block 0; the kernel masks them.
-    return (jnp.maximum(pr[b, t * pt + j], 0), 0, 0)
+def _data_index(b, t, pr, ln, bm, *, j, pt):
+    # Padded (-1) or unmapped probes are clamped to block 0; the kernel
+    # masks their candidates, so the wasted DMA is harmless.
+    return (jnp.maximum(bm[jnp.maximum(pr[b, t * pt + j], 0)], 0), 0, 0)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "interpret", "merge", "probe_tile"))
 def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True,
-            merge: str = "sort", probe_tile: int | None = None):
-    """q: [B, d] f32; data: [NC, CAP, d] f32; lens: [NC] i32;
+            merge: str = "sort", probe_tile: int | None = None,
+            block_map=None):
+    """q: [B, d] f32; data: [R, CAP, d] f32; lens: [R] i32;
     probe_ids: [B, P] i32 (ids < 0 are skipped padding).
-    Returns (dists [B, k], ids [B, k]) — ids are global slots c*CAP+j,
-    -1 where fewer than k valid candidates exist."""
+    Returns (dists [B, k], ids [B, k]) — ids are global slots r*CAP+j,
+    -1 where fewer than k valid candidates exist.
+
+    `block_map` ([NC] i32, optional) decouples *cluster ids* in
+    `probe_ids` from *scan rows* in `data`: probing cluster c scans block
+    row block_map[c]; entries < 0 mask the cluster entirely (its
+    candidates never surface). Identity when omitted. This is what lets a
+    tiered index scan an arbitrary hot subset plus a per-batch gathered
+    cold scratch through the exact same kernel math (DESIGN.md §14)."""
     B, d = q.shape
-    NC, CAP, _ = data.shape
+    R, CAP, _ = data.shape
     P = probe_ids.shape[1]
     if probe_tile is not None and probe_tile < 1:
         raise ValueError(f"probe_tile must be >= 1, got {probe_tile}")
@@ -133,19 +143,21 @@ def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True,
     if T * pt != P:                                 # pad to a whole tile
         probe_ids = jnp.pad(probe_ids, ((0, 0), (0, T * pt - P)),
                             constant_values=-1)
+    if block_map is None:
+        block_map = jnp.arange(R, dtype=jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                      # probe_ids, lens
+        num_scalar_prefetch=3,                      # probe_ids, lens, bmap
         grid=(B, T),
         in_specs=[
-            pl.BlockSpec((1, d), lambda b, t, pr, ln: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, t, pr, ln, bm: (b, 0)),
             *[pl.BlockSpec((1, CAP, d),
                            functools.partial(_data_index, j=j, pt=pt))
               for j in range(pt)],
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda b, t, pr, ln: (b, 0)),
-            pl.BlockSpec((1, k), lambda b, t, pr, ln: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t, pr, ln, bm: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, t, pr, ln, bm: (b, 0)),
         ],
     )
     kern = pl.pallas_call(
@@ -157,8 +169,24 @@ def ecoscan(q, data, lens, probe_ids, k: int = 10, interpret: bool = True,
     )
     data = data.astype(jnp.float32)
     out_d, out_i = kern(probe_ids, lens.astype(jnp.int32),
+                        block_map.astype(jnp.int32),
                         q.astype(jnp.float32), *([data] * pt))
     return out_d, out_i
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe",))
+def route_topk(q, centroids, n_probe: int):
+    """Centroid routing: one MXU matmul + lax.top_k -> probes [B, n_probe].
+
+    Shared by the fused `route_and_scan` and the tiered index's split
+    route->gather->scan path, so both pick bitwise-identical probes."""
+    q = q.astype(jnp.float32)
+    cent = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, axis=1, keepdims=True)
+          - 2.0 * q @ cent.T
+          + jnp.sum(cent * cent, axis=1)[None, :])  # [B, NC]
+    _, probes = jax.lax.top_k(-d2, n_probe)
+    return probes.astype(jnp.int32)
 
 
 @functools.partial(jax.jit,
@@ -173,13 +201,7 @@ def route_and_scan(q, centroids, data, lens, n_probe: int = 4, k: int = 10,
 
     q: [B, d]; centroids: [NC, d]; data/lens as in `ecoscan`.
     Returns (dists [B, k], slots [B, k], probes [B, n_probe])."""
-    q = q.astype(jnp.float32)
-    cent = centroids.astype(jnp.float32)
-    d2 = (jnp.sum(q * q, axis=1, keepdims=True)
-          - 2.0 * q @ cent.T
-          + jnp.sum(cent * cent, axis=1)[None, :])  # [B, NC]
-    _, probes = jax.lax.top_k(-d2, n_probe)
-    probes = probes.astype(jnp.int32)
+    probes = route_topk(q, centroids, n_probe)
     dists, slots = ecoscan(q, data, lens, probes, k=k, interpret=interpret,
                            merge=merge, probe_tile=probe_tile)
     return dists, slots, probes

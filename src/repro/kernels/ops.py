@@ -9,6 +9,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.ecoscan import ecoscan as _ecoscan
 from repro.kernels.ecoscan import route_and_scan as _route_and_scan
+from repro.kernels.ecoscan import route_topk as _route_topk
 from repro.kernels.kmeans_assign import kmeans_assign as _kmeans_assign
 from repro.kernels.scr_score import scr_score as _scr_score
 from repro.kernels.scr_select import scr_select as _scr_select
@@ -75,14 +76,24 @@ def _with_merge_fallback(call, merge, interpret):
         raise
 
 
-def ecoscan(q, data, lens, probe_ids, k=10, use_pallas=True, merge="sort"):
+def ecoscan(q, data, lens, probe_ids, k=10, use_pallas=True, merge="sort",
+            block_map=None):
     if use_pallas:
         interpret = not _on_tpu()
         return _with_merge_fallback(
             lambda m: _ecoscan(q, data, lens, probe_ids, k=k,
-                               interpret=interpret, merge=m),
+                               interpret=interpret, merge=m,
+                               block_map=block_map),
             merge, interpret)
-    return ref.ecoscan(q, data, lens, probe_ids, k)
+    return ref.ecoscan(q, data, lens, probe_ids, k, block_map=block_map)
+
+
+def route_topk(q, centroids, n_probe=4, use_pallas=True):
+    """Centroid routing only (matmul + lax.top_k) -> probes [B, n_probe].
+    Same math as the routing half of `route_and_scan`, so a split
+    route->scan caller picks bitwise-identical probes."""
+    del use_pallas      # pure jnp either way; one implementation on purpose
+    return _route_topk(q, centroids, n_probe)
 
 
 def route_and_scan(q, centroids, data, lens, n_probe=4, k=10,

@@ -9,22 +9,28 @@ import jax.numpy as jnp
 NEG = 3.4e38
 
 
-def ecoscan(q, data, lens, probe_ids, k):
+def ecoscan(q, data, lens, probe_ids, k, block_map=None):
     """EcoVector inverted-list scan reference.
 
-    q: [B, d]; data: [NC, CAP, d]; lens: [NC] valid counts;
-    probe_ids: [B, P] cluster ids per query (ids < 0 are skipped padding).
+    q: [B, d]; data: [R, CAP, d]; lens: [R] valid counts;
+    probe_ids: [B, P] cluster ids per query (ids < 0 are skipped padding);
+    block_map: optional [NC] i32 cluster-id -> scan-row indirection
+    (entries < 0 mask the cluster; identity when omitted).
     Returns (dists [B,K], ids [B,K]) where ids are global slot ids
-    cluster*CAP+j (-1 for missing candidates), L2 distances ascending.
+    row*CAP+j (-1 for missing candidates), L2 distances ascending.
     """
     B, d = q.shape
-    NC, CAP, _ = data.shape
-    safe = jnp.maximum(probe_ids, 0)
+    R, CAP, _ = data.shape
+    if block_map is None:
+        block_map = jnp.arange(R, dtype=jnp.int32)
+    blk = block_map[jnp.maximum(probe_ids, 0)]    # [B, P] scan rows
+    safe = jnp.maximum(blk, 0)
     gathered = data[safe]                         # [B, P, CAP, d]
     diff = gathered - q[:, None, None, :]
     dist = jnp.sum(diff * diff, axis=-1)          # [B, P, CAP]
     slot = jnp.arange(CAP)[None, None, :]
-    valid = (slot < lens[safe][:, :, None]) & (probe_ids[:, :, None] >= 0)
+    valid = ((slot < lens[safe][:, :, None])
+             & (probe_ids[:, :, None] >= 0) & (blk[:, :, None] >= 0))
     dist = jnp.where(valid, dist, NEG)
     ids = jnp.where(valid, safe[:, :, None] * CAP + slot, -1)
     flat_d = dist.reshape(B, -1)

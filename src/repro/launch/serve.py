@@ -179,12 +179,22 @@ def main():
                     help="KV pool page granularity (positions per page); "
                          "smaller pages share longer prompt prefixes, "
                          "larger ones cut table/gather overhead")
+    ap.add_argument("--device-budget", type=float, default=None,
+                    help="device-memory budget for the retrieval index "
+                         "(DESIGN.md §14): bytes, or a fraction in (0, 1] "
+                         "of the all-resident pack. Builds a tiered "
+                         "hot/cold EcoVector and forces device retrieval "
+                         "so the tiers are exercised")
     args = ap.parse_args()
 
     corpus = make_qa_corpus("squad", n_docs=args.docs,
                             n_questions=args.questions, seed=args.seed)
     emb = HashEmbedder(dim=128)
-    pipe = PIPELINES[args.pipeline](corpus.docs, emb, top_k=3)
+    pipe_kw = {}
+    if args.device_budget is not None:
+        pipe_kw = {"device_budget_bytes": args.device_budget,
+                   "device_retrieval": True}
+    pipe = PIPELINES[args.pipeline](corpus.docs, emb, top_k=3, **pipe_kw)
     if hasattr(pipe, "_ensure_slm"):
         # the Engine is built lazily on first use, so the pool page
         # granularity can still be set here
@@ -198,6 +208,17 @@ def main():
         run_replicas(pipe, corpus, args)
     else:
         run_batch(pipe, corpus, args)
+
+    if args.device_budget is not None:
+        idx, s = pipe.index, pipe.index.stats
+        hits = s.tier_hot_hits + s.tier_cold_hits
+        print(f"[serve --device-budget] hot={len(idx.hot_clusters())} "
+              f"cold={len(idx.cold_clusters())} clusters | "
+              f"resident={idx.device_resident_bytes()}B "
+              f"budget={idx.device_budget_bytes}B "
+              f"(all-resident {idx.all_resident_bytes()}B) | "
+              f"hot-hit-rate={s.tier_hot_hits / max(hits, 1):.2f} | "
+              f"promotions={s.promotions} demotions={s.demotions}")
 
 
 if __name__ == "__main__":

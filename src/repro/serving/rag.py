@@ -72,10 +72,15 @@ class RAGBase:
                  generator: Optional[Callable] = None,
                  device_retrieval: Optional[bool] = None,
                  gen_arch: str = "qwen25_0_5b",
+                 device_budget_bytes: Optional[float] = None,
                  _skip_corpus_embed: bool = False):
         self.docs = list(docs)
         self.embed = embed
         self.top_k = top_k
+        # device-memory budget for the retrieval index (DESIGN.md §14):
+        # None = all-resident; an int is bytes; a float in (0, 1] is a
+        # fraction of the all-resident pack. Builds a TieredEcoVector.
+        self.device_budget_bytes = device_budget_bytes
         self.slm = SLM_SPEEDS[slm]
         self.generator = generator
         # degradation-ladder state: on an index-search exception the
@@ -98,11 +103,26 @@ class RAGBase:
         self.doc_vecs = (None if (_skip_corpus_embed and index is not None)
                          else np.asarray(embed(self.docs), np.float32))
         self.index = index or self._build_index()
+        if (self.device_budget_bytes is not None
+                and hasattr(self.index, "set_device_budget")):
+            self.index.set_device_budget(
+                self._resolve_device_budget(self.index))
         self.build_s = time.perf_counter() - t0
 
+    def _resolve_device_budget(self, index) -> int:
+        b = self.device_budget_bytes
+        if 0 < b <= 1.0:             # fraction of the all-resident pack
+            return int(b * index.all_resident_bytes())
+        return int(b)
+
     def _build_index(self):
-        ev = EcoVector(self.doc_vecs.shape[1],
-                       n_clusters=max(4, len(self.docs) // 64))
+        n_clusters = max(4, len(self.docs) // 64)
+        if self.device_budget_bytes is not None:
+            from repro.core.tiered import TieredEcoVector
+            return TieredEcoVector(
+                self.doc_vecs.shape[1],
+                n_clusters=n_clusters).build(self.doc_vecs)
+        ev = EcoVector(self.doc_vecs.shape[1], n_clusters=n_clusters)
         return ev.build(self.doc_vecs)
 
     def _use_device_retrieval(self) -> bool:
@@ -377,8 +397,14 @@ class MobileRAG(RAGBase):
         loaded_index = None
         loaded_wi = None
         if retrieval_state is not None:
+            loader = EcoVector.load
+            if kw.get("device_budget_bytes") is not None:
+                # budgeted pipeline: restore the tiered index so tier
+                # assignment and the cold pack come back from the snapshot
+                from repro.core.tiered import TieredEcoVector
+                loader = TieredEcoVector.load
             loaded_index = self._load_state_part(
-                EcoVector.load, os.path.join(retrieval_state, "ecovector"))
+                loader, os.path.join(retrieval_state, "ecovector"))
             if use_window_index:
                 loaded_wi = self._load_state_part(
                     lambda root: WindowIndex.load(embed, root),

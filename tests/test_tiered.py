@@ -1,0 +1,456 @@
+"""Tiered hot/cold EcoVector (DESIGN.md §14): bit-identical results at
+every device budget, promotion/demotion under churn without leaking
+device rows or exceeding the budget, crash recovery mid-demotion via the
+store fault hooks, cold-pack corruption healing/quarantine, and the new
+memory-accounting surfaces (ram_bytes, WindowIndex resident/DMA)."""
+import os
+import warnings
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core import store, store_faults
+from repro.core.ecovector import EcoVector
+from repro.core.scr import SCRConfig, apply_scr_batch
+from repro.core.tiered import (ColdPack, TieredEcoVector, TierManager,
+                               scrub_cold_pack, scrub_tier_state)
+from repro.core.window_index import WindowIndex
+from repro.kernels import ref
+from repro.kernels.ecoscan import ecoscan
+from repro.serving.embedder import HashEmbedder
+
+DIM = 16
+
+
+@pytest.fixture(autouse=True)
+def _clean_hooks():
+    store.set_crash_hook(None)
+    store.reset_fs_ops()
+    yield
+    store.set_crash_hook(None)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(11)
+    centers = rng.normal(scale=4.0, size=(8, DIM))
+    X = (centers.repeat(40, axis=0)
+         + rng.normal(size=(320, DIM))).astype(np.float32)
+    Q = (X[rng.choice(len(X), 12)]
+         + 0.05 * rng.normal(size=(12, DIM))).astype(np.float32)
+    return X, Q
+
+
+def _base(X, **kw):
+    kw.setdefault("n_clusters", 8)
+    kw.setdefault("M", 8)
+    kw.setdefault("ef_construction", 32)
+    return EcoVector(DIM, **kw).build(X)
+
+
+def _tiered(X, tmp_path=None, **kw):
+    kw.setdefault("n_clusters", 8)
+    kw.setdefault("M", 8)
+    kw.setdefault("ef_construction", 32)
+    if tmp_path is not None:
+        kw.setdefault("storage_dir", str(tmp_path))
+    return TieredEcoVector(DIM, **kw).build(X)
+
+
+def _no_leaks(tv):
+    """Structural tier invariants: every device row is either owned by
+    exactly one hot cluster or on the free list; hot/cold are disjoint
+    and with quarantined cover every cluster."""
+    occupied = {r for r, c in enumerate(tv._row_cluster) if c >= 0}
+    free = set(tv._free_rows)
+    assert not (occupied & free)
+    assert occupied | free == set(range(len(tv._row_cluster)))
+    hot, cold = tv.hot_clusters(), tv.cold_clusters()
+    assert not (hot & cold)
+    assert hot | cold | tv._quarantined == set(range(tv.n_clusters))
+    if tv.device_budget_bytes is not None:
+        # routing centroids are a fixed floor even when the budget is
+        # set below them (the all-cold degenerate case warns instead)
+        assert (tv.device_resident_bytes()
+                <= max(tv.device_budget_bytes, tv._fixed_device_bytes()))
+
+
+# ----------------------------------------------------- kernel block_map
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_ecoscan_block_map_matches_identity(use_pallas):
+    """A permuted scan layout with a block_map must yield bitwise the
+    same results (after id remap) as the identity layout — both in the
+    interpret-mode Pallas kernel and the numpy reference."""
+    rng = np.random.default_rng(0)
+    NC, CAP, d, B, P, K = 6, 8, 16, 3, 4, 5
+    data = rng.normal(size=(NC, CAP, d)).astype(np.float32)
+    lens = rng.integers(1, CAP + 1, NC).astype(np.int32)
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    probes = rng.integers(0, NC, (B, P)).astype(np.int32)
+    probes[0, -1] = -1                                  # padded probe
+
+    fn = ecoscan if use_pallas else ref.ecoscan
+    d_id, i_id = fn(q, data, lens, probes, k=K)
+
+    perm = rng.permutation(NC).astype(np.int32)          # cluster -> row
+    d_perm, i_perm = fn(q, data[np.argsort(perm)][..., :, :],
+                        lens[np.argsort(perm)], probes, k=K,
+                        block_map=perm)
+    np.testing.assert_array_equal(np.asarray(d_id), np.asarray(d_perm))
+    ii, ip = np.asarray(i_id), np.asarray(i_perm)
+    # identity ids are c*CAP+s; permuted ids are perm[c]*CAP+s
+    remap = np.where(ip >= 0, np.argsort(perm)[np.clip(ip, 0, None)
+                                               // CAP] * CAP + ip % CAP, -1)
+    np.testing.assert_array_equal(ii, remap)
+
+
+def test_ecoscan_block_map_masks_clusters():
+    """block_map entries < 0 hide a cluster: none of its slots appear."""
+    rng = np.random.default_rng(1)
+    NC, CAP, d = 4, 8, 16
+    data = rng.normal(size=(NC, CAP, d)).astype(np.float32)
+    lens = np.full(NC, CAP, np.int32)
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    probes = np.tile(np.arange(NC, dtype=np.int32), (2, 1))
+    bmap = np.arange(NC, dtype=np.int32)
+    bmap[2] = -1
+    for fn in (ecoscan, ref.ecoscan):
+        _, ids = fn(q, data, lens, probes, k=NC * CAP, block_map=bmap)
+        ids = np.asarray(ids)
+        hidden = (ids >= 2 * CAP) & (ids < 3 * CAP)
+        assert not hidden.any()
+
+
+# ------------------------------------------------------------ parity
+
+def test_bit_identical_across_budgets(tmp_path, data):
+    """The tentpole guarantee: ids AND dists from the tiered index are
+    bitwise equal to the all-resident base index at equal n_probe, at
+    100% hot, mixed splits, and all-cold."""
+    X, Q = data
+    base = _base(X)
+    ref_ids, ref_d = base.search_device_batched(Q, k=10, n_probe=4,
+                                                use_pallas=False)
+    tv = _tiered(X, tmp_path / "t")
+    full = tv.all_resident_bytes()
+    for frac in (None, 1.0, 0.5, 0.25, 0.02):
+        with warnings.catch_warnings():
+            # the tiniest budget may dip under the centroid floor, which
+            # legitimately warns "serving all-cold"
+            warnings.simplefilter("ignore", UserWarning)
+            tv.set_device_budget(None if frac is None else int(frac * full))
+            ids, d = tv.search_device_batched(Q, k=10, n_probe=4,
+                                              use_pallas=False)
+        np.testing.assert_array_equal(ids, np.asarray(ref_ids))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(ref_d))
+        _no_leaks(tv)
+    assert tv.cold_clusters()                   # the tiny budget went cold
+    assert tv.stats.tier_cold_hits > 0
+
+
+def test_parity_holds_while_tiers_move(tmp_path, data):
+    """Repeated skewed batches move the EMA (promotions/demotions fire)
+    and every single batch stays bit-identical to the base index."""
+    X, Q = data
+    base = _base(X)
+    tv = _tiered(X, tmp_path / "t")
+    tv.set_device_budget(int(0.5 * tv.all_resident_bytes()))
+    rng = np.random.default_rng(2)
+    for it in range(6):
+        batch = Q if it % 2 == 0 else np.repeat(Q[it % len(Q)][None], 4, 0)
+        bi, bd = base.search_device_batched(batch, k=8, n_probe=3,
+                                            use_pallas=False)
+        ti, td = tv.search_device_batched(batch, k=8, n_probe=3,
+                                          use_pallas=False)
+        np.testing.assert_array_equal(ti, np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(td), np.asarray(bd))
+        _no_leaks(tv)
+    assert tv.stats.promotions + tv.stats.demotions > 0
+    hits = tv.stats.tier_hot_hits + tv.stats.tier_cold_hits
+    assert hits > 0 and tv.stats.tier_hot_hits > 0
+
+
+# ------------------------------------------------------ churn / budget
+
+def test_churn_never_exceeds_budget_or_leaks_rows(tmp_path, data):
+    X, Q = data
+    rng = np.random.default_rng(3)
+    tv = _tiered(X, tmp_path / "t")
+    budget = int(0.4 * tv.all_resident_bytes())
+    tv.set_device_budget(budget)
+    base_vid = 10 ** 6
+    for cycle in range(4):
+        for i in range(5):
+            tv.insert(base_vid + 5 * cycle + i,
+                      rng.normal(size=DIM).astype(np.float32))
+        tv.delete(base_vid + 5 * cycle)
+        ids, _ = tv.search_device_batched(Q[:4], k=8, n_probe=4,
+                                          use_pallas=False)
+        assert ids.shape == (4, 8)
+        _no_leaks(tv)
+        assert tv.device_resident_bytes() <= budget
+
+
+def test_cold_insert_marks_dirty_without_promotion(tmp_path, data):
+    """Inserting into a cold cluster updates the cold pack in place at
+    the next sync — it does not force the cluster hot."""
+    X, Q = data
+    tv = _tiered(X, tmp_path / "t")
+    tv.set_device_budget(int(0.4 * tv.all_resident_bytes()))
+    tv.search_device_batched(Q[:2], k=5, n_probe=2, use_pallas=False)
+    cold = sorted(tv.cold_clusters())
+    assert cold
+    c = cold[0]
+    vid = 7 * 10 ** 6
+    # a point at the centroid is guaranteed to route to cluster c
+    tv.insert(vid, tv.centroids[c].astype(np.float32))
+    assert tv.assign[vid] == c
+    assert c in tv._dirty
+    tv._tier_sync(moves=0)
+    assert c in tv.cold_clusters() and c not in tv.hot_clusters()
+    ids, _ = tv._cold.get(c)
+    assert vid in set(map(int, ids))
+
+
+def test_budget_smaller_than_centroids_serves_all_cold(tmp_path, data):
+    X, Q = data
+    tv = _tiered(X, tmp_path / "t")
+    base = _base(X)
+    with pytest.warns(UserWarning, match="serving all-cold"):
+        tv.set_device_budget(8)
+        ids, d = tv.search_device_batched(Q[:4], k=10, n_probe=4,
+                                          use_pallas=False)
+    bi, bd = base.search_device_batched(Q[:4], k=10, n_probe=4,
+                                        use_pallas=False)
+    np.testing.assert_array_equal(ids, np.asarray(bi))
+    assert not tv.hot_clusters()
+
+
+def test_device_pack_is_refused(tmp_path, data):
+    X, _ = data
+    tv = _tiered(X, tmp_path / "t")
+    with pytest.raises(store.StoreError):
+        tv.device_pack()
+
+
+# ------------------------------------------------------- persistence
+
+def test_save_load_restores_tiers_and_budget(tmp_path, data):
+    X, Q = data
+    tv = _tiered(X, tmp_path / "spill")
+    tv.set_device_budget(int(0.5 * tv.all_resident_bytes()))
+    ref_ids, ref_d = tv.search_device_batched(Q, k=10, n_probe=4,
+                                              use_pallas=False)
+    root = str(tmp_path / "j")
+    tv.save(root)
+    tv2 = TieredEcoVector.load(root)
+    assert tv2.device_budget_bytes == tv.device_budget_bytes
+    tv2._activate()                 # before any search moves tiers
+    assert tv2.hot_clusters() == tv.hot_clusters()
+    ids, d = tv2.search_device_batched(Q, k=10, n_probe=4,
+                                       use_pallas=False)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(ref_d))
+    # WAL replay path: a post-save insert survives reload and reaches
+    # its tier on the next search
+    vid = 9 * 10 ** 6
+    tv2.insert(vid, X[0])
+    tv3 = TieredEcoVector.load(root)
+    assert tv3.stats.wal_replayed >= 1
+    assert vid in tv3.assign
+    i3, _ = tv3.search_device_batched(X[0][None], k=5, n_probe=4,
+                                      use_pallas=False)
+    assert vid in set(map(int, i3[0]))
+    _no_leaks(tv3)
+
+
+def test_kill9_sweep_mid_demotion_and_save(tmp_path, data):
+    """Crash at every Nth fs op while (a) shrinking the budget — the
+    demotion write-through path — and (b) saving the tiered snapshot.
+    Reload must always give a complete index, bit-identical to the
+    uncrashed reference, with a clean tier scrub."""
+    X, Q = data
+    tv = _tiered(X, tmp_path / "spill")
+    tv.set_device_budget(int(0.8 * tv.all_resident_bytes()))
+    tv.search_device_batched(Q, k=10, n_probe=4, use_pallas=False)
+    base_root = str(tmp_path / "base")
+    tv.save(base_root)
+    shrink = int(0.3 * tv.all_resident_bytes())
+
+    def crashable(idx, root):
+        idx.set_device_budget(shrink)     # demotions write through
+        idx.search_device_batched(Q[:2], k=5, n_probe=4,
+                                  use_pallas=False)
+        idx.save(root)
+
+    # reference: the same workload, no crash
+    ref_root = str(tmp_path / "ref")
+    shutil.copytree(base_root, ref_root)
+    ref_idx = TieredEcoVector.load(ref_root)
+    crashable(ref_idx, ref_root)
+    ref_ids, ref_d = ref_idx.search_device_batched(Q, k=10, n_probe=4,
+                                                   use_pallas=False)
+
+    probe_root = str(tmp_path / "probe_cp")
+    shutil.copytree(base_root, probe_root)
+    probe_idx = TieredEcoVector.load(probe_root)
+    total = store_faults.count_fs_ops(
+        lambda: crashable(probe_idx, probe_root))
+    assert total >= 8
+    for at in range(1, total + 1, 3):
+        root = str(tmp_path / f"r{at}")
+        shutil.copytree(base_root, root)
+        idx = TieredEcoVector.load(root)
+        with store_faults.CrashPlan(at) as plan:
+            try:
+                crashable(idx, root)
+            except store_faults.InjectedCrash:
+                pass
+        idx2 = TieredEcoVector.load(root)
+        ids, d = idx2.search_device_batched(Q, k=10, n_probe=4,
+                                            use_pallas=False)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(ref_d))
+        _no_leaks(idx2)
+        assert all(r["ok"] for r in scrub_tier_state(root)), at
+
+
+# ------------------------------------------------------- corruption
+
+def _force_all_synced(tv, Q):
+    tv.search_device_batched(Q[:2], k=5, n_probe=4, use_pallas=False)
+
+
+def test_cold_corruption_heals_from_spill(tmp_path, data):
+    X, Q = data
+    tv = _tiered(X, tmp_path / "t")
+    tv.set_device_budget(int(0.3 * tv.all_resident_bytes()))
+    base = _base(X)
+    _force_all_synced(tv, Q)
+    cold = sorted(tv.cold_clusters())
+    assert cold
+    c = cold[0]
+    off = int(tv._cold.entries[c]["off"]) * tv._cold._row_bytes() + 3
+    store_faults.flip_byte(tv._cold.payload_path, off)
+    tv._cold._verified = set()          # drop the first-touch cache
+    with pytest.warns(UserWarning, match="healing from the spill"):
+        ids, d = tv.search_device_batched(Q, k=10, n_probe=8,
+                                          use_pallas=False)
+    bi, bd = base.search_device_batched(Q, k=10, n_probe=8,
+                                        use_pallas=False)
+    np.testing.assert_array_equal(ids, np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(bd))
+    assert tv.stats.corrupt_reads >= 1
+    assert c not in tv._quarantined
+    assert all(r["ok"] for r in scrub_cold_pack(tv.storage_dir))
+
+
+def test_cold_and_spill_both_corrupt_quarantines_and_widens(tmp_path, data):
+    X, Q = data
+    tv = _tiered(X, tmp_path / "t")
+    tv.set_device_budget(int(0.3 * tv.all_resident_bytes()))
+    _force_all_synced(tv, Q)
+    cold = sorted(tv.cold_clusters())
+    c = cold[0]
+    off = int(tv._cold.entries[c]["off"]) * tv._cold._row_bytes() + 3
+    store_faults.flip_byte(tv._cold.payload_path, off)
+    tv._cold._verified = set()
+    store_faults.flip_byte(
+        os.path.join(tv.storage_dir, f"cluster_{c:05d}.bin"), 40)
+    tv._cache.pop(c, None)
+    tv._pending_graphs.pop(c, None)
+    with pytest.warns(UserWarning):
+        ids, _ = tv.search_device_batched(Q, k=10, n_probe=4,
+                                          use_pallas=False)
+    assert c in tv._quarantined
+    assert (ids >= 0).all()             # probe widening kept k results
+    _no_leaks(tv)
+
+
+# -------------------------------------------------- memory accounting
+
+def test_ram_bytes_counts_cache_and_mirrors(tmp_path, data):
+    """Satellite 1: the LRU cluster cache and device mirrors are part of
+    ram_bytes now."""
+    X, Q = data
+    plain = _base(X)
+    cached = _base(X, cache_clusters=4)
+    r0 = cached.ram_bytes()
+    for q in Q[:6]:
+        cached.search(q, k=5, n_probe=4)
+    assert len(cached._cache) > 0
+    assert cached.ram_bytes() > r0
+    # device mirrors count once the pack is built
+    before = plain.ram_bytes()
+    plain.search_device_batched(Q[:2], k=5, n_probe=4, use_pallas=False)
+    assert plain.device_resident_bytes() > 0
+    assert plain.ram_bytes() >= before + plain.device_resident_bytes()
+
+
+def test_tiered_ram_bytes_counts_cold_manifest(tmp_path, data):
+    X, Q = data
+    tv = _tiered(X, tmp_path / "t")
+    tv.set_device_budget(int(0.3 * tv.all_resident_bytes()))
+    _force_all_synced(tv, Q)
+    assert tv.cold_clusters()
+    ids_bytes = sum(e["ids"].nbytes
+                    for e in tv._cold.entries.values())
+    assert ids_bytes > 0
+    assert tv.ram_bytes() > ids_bytes
+
+
+def test_window_index_resident_bytes_and_dma_counters():
+    docs = [f"sentence {i} one. sentence {i} two. sentence {i} three."
+            for i in range(6)]
+    emb = HashEmbedder(dim=32)
+    wi = WindowIndex(emb, SCRConfig(use_pallas=False)).build(docs)
+    before = wi.resident_bytes()
+    assert before >= wi.ram_bytes()
+    queries = ["sentence 1 one", "sentence 2 two"]
+    doc_ids = [[0, 1, 2], [3, 4]]
+    apply_scr_batch(queries, doc_ids, wi, emb, use_pallas=False)
+    s = wi.stats
+    assert s.select_calls == 1
+    assert s.select_queries == 2
+    assert s.blocks_dma == 5            # five non-padded (q, doc) pairs
+    assert s.last_query_dma_blocks == 2.5
+    # the device mirror built for scr_select now counts toward residency
+    after = wi.resident_bytes()
+    assert after > before
+    assert s.resident_bytes == after
+
+
+# ----------------------------------------------------------- planner
+
+def test_tier_manager_hysteresis_blocks_thrash():
+    tm = TierManager(4, alpha=0.3, hysteresis=1.25)
+    hot = {0, 1}
+    tm.record(np.array([[0, 1], [0, 1]]))     # hot clusters stay warm
+    tm.record(np.array([[2]]))                # 2 warms up but not 1.25x
+    promote, demote = tm.plan(hot, budget_rows=2, blocked=set())
+    assert not promote and not demote
+    for _ in range(6):
+        tm.record(np.array([[2, 2, 2]]))      # now clearly hotter
+    promote, demote = tm.plan(hot, budget_rows=2, blocked=set())
+    assert 2 in promote and len(demote) == 1
+
+
+def test_cold_pack_roundtrip_and_compaction(tmp_path):
+    rng = np.random.default_rng(4)
+    cp = ColdPack(str(tmp_path), dim=8)
+    a = rng.normal(size=(5, 8)).astype(np.float32)
+    b = rng.normal(size=(3, 8)).astype(np.float32)
+    cp.put(0, np.arange(5), a)
+    cp.put(1, np.arange(10, 13), b)
+    cp.put(0, np.arange(5), a * 2)            # supersedes: dead span
+    assert cp.file_bytes() > cp.live_rows() * cp._row_bytes()
+    ids0, v0 = cp.get(0)
+    np.testing.assert_array_equal(v0, a * 2)
+    cp.compact()
+    assert cp.file_bytes() == cp.live_rows() * cp._row_bytes()
+    ids1, v1 = cp.get(1)
+    np.testing.assert_array_equal(v1, b)
+    np.testing.assert_array_equal(ids1, np.arange(10, 13))
+    assert all(r["ok"] for r in scrub_cold_pack(str(tmp_path)))

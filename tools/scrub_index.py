@@ -11,6 +11,12 @@ Handles both layouts `core/store.py` produces:
   * a plain spill directory of segment files (an index's live
     ``storage_dir``).
 
+Tiered indexes (DESIGN.md §14) get two extra passes: cold-pack payload
+spans + per-cluster CRCs (``cold_manifest.seg`` / ``cold_payload.raw``,
+both in journal generations and live spill dirs), and tier-assignment
+consistency for the latest committed generation (hot ∩ cold = ∅,
+hot ∪ cold ∪ quarantined covers every cluster).
+
 Exit status: 0 when everything checks out, 1 when corruption was found
 (CI treats nonzero as failure). ``--quarantine`` moves corrupt plain
 files aside (``<name>.quarantined``) so the owning index rebuilds them
@@ -44,7 +50,7 @@ def main(argv=None) -> int:
                    help="machine-readable report on stdout")
     args = p.parse_args(argv)
 
-    from repro.core import store
+    from repro.core import store, tiered
 
     reports = []
     for path in args.paths:
@@ -56,6 +62,13 @@ def main(argv=None) -> int:
                     and not rep["item"].endswith(".log")):
                 rep["quarantined_to"] = store.quarantine_file(rep["item"])
             reports.append(rep)
+        if not args.shallow and os.path.isdir(path):
+            names = os.listdir(path)
+            if any(n.startswith(("gen_", "wal_")) for n in names):
+                extra = tiered.scrub_tier_state(path)
+            else:
+                extra = tiered.scrub_cold_pack(path)
+            reports.extend(dict(r, root=path) for r in extra)
 
     bad = [r for r in reports if not r["ok"]]
     if args.as_json:
