@@ -94,13 +94,21 @@ def _run_wave(eng, prompts, gens, arrivals):
 
 
 def _run_continuous(ce, prompts, gens, arrivals, greedy=True):
+    """Drive the open-loop workload and derive per-request latency and
+    TTFT from the trace spans (queued -> first_token -> done) instead of
+    ad-hoc timers: the bench reports exactly what the sink records, so a
+    production JSONL export reproduces these numbers. Returns
+    (latency, ttft) arrays in arrival order."""
+    from repro.serving.trace import TraceSink
     n = len(prompts)
+    prev = ce.trace
+    sink = ce.trace = prev if prev is not None else TraceSink()
     ce.steps = ce.active_slot_steps = 0
     t0 = time.perf_counter()
     nxt = 0
-    lat = {}
+    done = set()
     rid2i = {}
-    while len(lat) < n:
+    while len(done) < n:
         now = time.perf_counter() - t0
         while nxt < n and arrivals[nxt] <= now:
             rid2i[ce.submit(prompts[nxt], int(gens[nxt]),
@@ -111,9 +119,16 @@ def _run_continuous(ce, prompts, gens, arrivals, greedy=True):
             continue
         for ev in ce.step():
             if ev.kind == "done":
-                i = rid2i[ev.rid]
-                lat[i] = (time.perf_counter() - t0) - arrivals[i]
-    return np.array([lat[i] for i in range(n)])
+                done.add(ev.rid)
+    lat, ttft = np.zeros(n), np.zeros(n)
+    for rid, i in rid2i.items():
+        q = sink.query(comp="engine", rid=rid, name="queued")[-1].ts
+        lat[i] = sink.query(comp="engine", rid=rid,
+                            name="done")[-1].ts - q
+        ttft[i] = sink.query(comp="engine", rid=rid,
+                             name="first_token")[-1].ts - q
+    ce.trace = prev
+    return lat, ttft
 
 
 def _variant_cfgs(mode: str):
@@ -148,12 +163,14 @@ def _run_variants(mode: str, prompts, gens):
         ce.generate(prompts[:2], max_new=2, greedy=greedy)       # warm
         t0 = time.perf_counter()
         # everything arrives at t=0: a pure drain through the shared loop
-        lat = _run_continuous(ce, prompts, gens, np.zeros(n),
-                              greedy=greedy)
+        lat, ttft = _run_continuous(ce, prompts, gens, np.zeros(n),
+                                    greedy=greedy)
         wall = time.perf_counter() - t0
         p50, p95 = np.percentile(lat, [50, 95])
         emit(f"serving.continuous_{name}", p50 * 1e6,
-             f"p95_ms={p95 * 1e3:.0f};wall_s={wall:.2f};"
+             f"p95_ms={p95 * 1e3:.0f};"
+             f"ttft_p50_ms={np.percentile(ttft, 50) * 1e3:.1f};"
+             f"wall_s={wall:.2f};"
              f"slot_util={ce.utilisation():.2f};n={len(prompts)}")
 
 
@@ -210,16 +227,72 @@ def run_prefix(mode="quick", seed=0):
         f"p50@90%={p50s[0.9]:.4f}s >= p50@0%={p50s[0.0]:.4f}s")
 
 
-def run_chaos(mode="quick", seed=0):
+def run_trace_overhead(mode="quick", seed=0):
+    """Gate: span tracing must cost < 5% on p50 request latency.
+
+    Alternates traced and untraced drains of the same ragged workload on
+    one engine (interleaved so clock/thermal drift cancels), measures
+    each drain with wall timers — identical instrumentation in both arms
+    — and compares the median of per-arm p50s."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import model
+    from repro.serving.engine import ContinuousEngine
+    from repro.serving.trace import TraceSink
+
+    prompts, gens = _workload(mode, seed=seed)
+    n = 8 if mode == "quick" else len(prompts)
+    prompts, gens = prompts[:n], gens[:n]
+    cfg = get_reduced("qwen25_0_5b")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    ce = ContinuousEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
+    ce.warmup()
+
+    def drain():
+        t0 = time.perf_counter()
+        sub = {ce.submit(p, int(g)): time.perf_counter() - t0
+               for p, g in zip(prompts, gens)}
+        lat = {}
+        while ce.pending:
+            for ev in ce.step():
+                if ev.kind == "done":
+                    lat[ev.rid] = (time.perf_counter() - t0
+                                   - sub[ev.rid])
+        return float(np.percentile(list(lat.values()), 50))
+
+    drain()                               # shape warm-up, untimed
+    reps = 3 if mode == "quick" else 5
+    p50s = {True: [], False: []}
+    for _ in range(reps):
+        for traced in (True, False):
+            ce.trace = TraceSink() if traced else None
+            p50s[traced].append(drain())
+    ce.trace = None
+    on = float(np.median(p50s[True]))
+    off = float(np.median(p50s[False]))
+    overhead = (on - off) / off
+    emit("serving.trace_overhead", overhead * 1e6,
+         f"p50_on_ms={on * 1e3:.1f};p50_off_ms={off * 1e3:.1f};"
+         f"reps={reps};n={n}")
+    assert overhead < 0.05, (
+        f"tracing overhead {overhead:.1%} >= 5% p50 "
+        f"(on={on * 1e3:.1f}ms off={off * 1e3:.1f}ms)")
+
+
+def run_chaos(mode="quick", seed=0, trace_export=None):
     """Goodput under a seeded FaultPlan: every request either completes
     within its deadline or is explicitly shed — the emitted row asserts
-    the partition (lost == 0) on top of the latency percentiles."""
+    the partition (lost == 0) on top of the latency percentiles. With
+    `trace_export=PATH` the whole run records into a shared TraceSink
+    whose JSONL export feeds tools/trace_check.py (the nightly CI
+    artifact)."""
     import jax
     from repro.configs import get_reduced
     from repro.models import model
     from repro.serving.engine import ContinuousEngine
     from repro.serving.faults import FaultPlan, wrap_replicas
     from repro.serving.scheduler import SlotScheduler
+    from repro.serving.trace import TraceSink
 
     n = 16 if mode == "quick" else 48
     prompts, gens = _workload(mode, seed=seed)
@@ -235,10 +308,15 @@ def run_chaos(mode="quick", seed=0):
     engines = [base] + [base.clone() for _ in range(2)]
     for e in engines[1:]:
         e.warmup()
+    sink = TraceSink() if trace_export else None
+    if sink is not None:
+        for e in engines:
+            e.trace = sink
 
     plan = FaultPlan.quick(seed)
     sched = SlotScheduler(wrap_replicas(engines, plan), stall_s=1.0,
-                          probe_cooldown_s=0.1, deadline_s=60.0)
+                          probe_cooldown_s=0.1, deadline_s=60.0,
+                          trace=sink)
     t0 = time.perf_counter()
     deadlines = {}
     for i, p in enumerate(prompts):
@@ -259,6 +337,10 @@ def run_chaos(mode="quick", seed=0):
          f"drains={cnt.drains};recoveries={cnt.recoveries};"
          f"wall_s={wall:.2f}")
     assert lost == 0, f"{lost} requests silently lost under chaos"
+    if sink is not None:
+        m = sink.export_jsonl(trace_export)
+        emit("serving.chaos_trace", float(m),
+             f"path={trace_export};evicted={sink.evicted}")
 
 
 def run(mode="quick"):
@@ -292,14 +374,16 @@ def run(mode="quick"):
     arrivals = _arrivals(len(prompts), rate, seed=0)
 
     lat_w = _run_wave(eng, prompts, gens, arrivals)
-    lat_c = _run_continuous(ce, prompts, gens, arrivals)
+    lat_c, ttft_c = _run_continuous(ce, prompts, gens, arrivals)
 
     p50w, p95w = np.percentile(lat_w, [50, 95])
     p50c, p95c = np.percentile(lat_c, [50, 95])
     emit("serving.wave", p50w * 1e6,
          f"p95_ms={p95w * 1e3:.0f};n={len(prompts)};rate={rate:.1f}qps")
     emit("serving.continuous", p50c * 1e6,
-         f"p95_ms={p95c * 1e3:.0f};slot_util={ce.utilisation():.2f}")
+         f"p95_ms={p95c * 1e3:.0f};"
+         f"ttft_p50_ms={np.percentile(ttft_c, 50) * 1e3:.1f};"
+         f"slot_util={ce.utilisation():.2f}")
     emit("serving.p95_speedup", (p95w / max(p95c, 1e-9)) * 1e6,
          f"continuous_beats_wave={bool(p95c < p95w)}")
 
@@ -316,11 +400,18 @@ if __name__ == "__main__":
                     help="goodput-under-chaos section only")
     ap.add_argument("--prefix", action="store_true",
                     help="shared-prefix TTFT sweep only")
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="tracing-overhead gate (< 5%% p50) only")
+    ap.add_argument("--trace-export", default=None, metavar="PATH",
+                    help="with --chaos: export the run's TraceSink as "
+                         "JSONL for tools/trace_check.py")
     ap.add_argument("--seed", type=int, default=0)
     a = ap.parse_args()
     if a.chaos:
-        run_chaos(a.mode, a.seed)
+        run_chaos(a.mode, a.seed, trace_export=a.trace_export)
     elif a.prefix:
         run_prefix(a.mode, a.seed)
+    elif a.trace_overhead:
+        run_trace_overhead(a.mode, a.seed)
     else:
         run(a.mode)

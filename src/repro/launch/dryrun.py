@@ -270,8 +270,38 @@ def main():
             ok += 1
         else:
             bad += 1
+    write_summary(outdir)
     print(f"dryrun: {ok} ok, {bad} failed")
     raise SystemExit(1 if bad else 0)
+
+
+def write_summary(outdir: Path) -> Path:
+    """Fold every per-cell JSON in `outdir` into one summary.json keyed
+    by cell tag — the artifact tools/roofline_diff.py compares across
+    nightly runs to flag roofline regressions."""
+    cells_d = {}
+    for p in sorted(outdir.glob("*.json")):
+        if p.name == "summary.json":
+            continue
+        r = json.loads(p.read_text())
+        if "arch" not in r:
+            continue
+        tag = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        cells_d[tag] = {k: r.get(k) for k in (
+            "status", "dominant", "t_compute_s", "t_memory_s",
+            "t_collective_s", "roofline_fraction",
+            "flops_per_device", "hbm_bytes_per_device",
+            "collective_bytes_per_device", "peak_bytes_per_device",
+            "fits_hbm_16g", "useful_flops_ratio")}
+    summary = {"cells": cells_d,
+               "n_ok": sum(1 for c in cells_d.values()
+                           if c["status"] == "ok"),
+               "n_error": sum(1 for c in cells_d.values()
+                              if c["status"] != "ok")}
+    out = outdir / "summary.json"
+    out.write_text(json.dumps(summary, indent=2, default=str))
+    print(f"summary: {len(cells_d)} cells -> {out}")
+    return out
 
 
 if __name__ == "__main__":

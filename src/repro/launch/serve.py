@@ -65,10 +65,15 @@ def run_stream(pipe, corpus, args) -> None:
     n = args.questions
     gaps = rng.exponential(1.0 / args.arrival_qps, size=n)
     arrivals = np.cumsum(gaps)
+    sink = None
+    if args.trace_export:
+        from repro.serving.trace import TraceSink
+        sink = TraceSink()
     sess = pipe.session(max_new=args.max_new, slots=args.slots,
                         greedy=not args.sample, seed=args.seed,
                         max_pending=args.max_pending,
-                        deadline_s=args.deadline_s)
+                        deadline_s=args.deadline_s,
+                        trace=sink, slo_s=args.slo_s)
     t0 = time.perf_counter()
     submitted = 0
     latencies = []
@@ -101,6 +106,14 @@ def run_stream(pipe, corpus, args) -> None:
           f"done={c.completed} "
           f"shed={c.shed_deadline + c.shed_overload + c.shed_oversize} "
           f"degraded={c.degraded} failed={c.failed}")
+    if args.slo_s is not None:
+        print(f"[serve --slo-s {args.slo_s}] "
+              f"slo_shed={c.shed_slo} slo_degraded={c.degraded_slo}")
+    if sess.trace is not None and args.trace_export:
+        m = sess.trace.export_jsonl(args.trace_export)
+        print(f"[serve --trace-export] {m} records -> "
+              f"{args.trace_export} (check: python tools/trace_check.py "
+              f"{args.trace_export})")
     for t, rid, kind in trace[: 3 * 3]:
         print(f"  t={t:6.3f}s req={rid} {kind}")
 
@@ -115,13 +128,19 @@ def run_replicas(pipe, corpus, args) -> None:
     engines = [slm.continuous(args.slots)]
     for _ in range(1, args.replicas):
         engines.append(engines[0].clone())
+    sink = None
+    if args.trace_export:
+        from repro.serving.trace import TraceSink
+        sink = TraceSink()
+        for e in engines:
+            e.trace = sink
     if args.chaos:
         from repro.serving.faults import FaultPlan, wrap_replicas
         engines = wrap_replicas(engines, FaultPlan.quick(args.seed))
     sched = SlotScheduler(engines, max_queue=args.max_queue,
                           deadline_s=args.deadline_s,
                           stall_s=2.0 if args.chaos else 30.0,
-                          probe_cooldown_s=0.25)
+                          probe_cooldown_s=0.25, trace=sink)
     questions = [e.question for e in corpus.examples[: args.questions]]
     answers = pipe.answer_batch(questions)          # retrieval + SCR
     t0 = time.perf_counter()
@@ -144,6 +163,11 @@ def run_replicas(pipe, corpus, args) -> None:
     for c in completions[:3]:
         print(f"  rid={c.rid} replica={c.replica} hedged={c.hedged} "
               f"tokens={c.tokens[:8]}")
+    if sink is not None:
+        m = sink.export_jsonl(args.trace_export)
+        print(f"[serve --trace-export] {m} records -> "
+              f"{args.trace_export} (check: python tools/trace_check.py "
+              f"{args.trace_export})")
 
 
 def main():
@@ -175,6 +199,15 @@ def main():
     ap.add_argument("--chaos", action="store_true",
                     help="wrap each replica in a seeded FaultPlan "
                          "(crashes/stalls/slow steps) — --replicas path")
+    ap.add_argument("--slo-s", type=float, default=None,
+                    help="per-request latency SLO (--stream): the "
+                         "session degrades retrieve_chunk/n_probe/"
+                         "max_new from observed p95 stage costs before "
+                         "it sheds (docs/OBSERVABILITY.md)")
+    ap.add_argument("--trace-export", default=None, metavar="PATH",
+                    help="record the run into a TraceSink and export "
+                         "JSONL for tools/trace_check.py "
+                         "(--stream / --replicas paths)")
     ap.add_argument("--page-size", type=int, default=32,
                     help="KV pool page granularity (positions per page); "
                          "smaller pages share longer prompt prefixes, "

@@ -48,6 +48,11 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import model
 from repro.serving.pager import PagePool, PoolStats, PrefixCache
+from repro.serving.trace import TraceSink
+
+# monotone engine-instance counter: the `src` tag on trace records, so
+# replicas sharing one TraceSink never collide on request ids
+_ENGINE_SEQ = [0]
 
 
 @dataclass
@@ -167,7 +172,8 @@ class ContinuousEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 512, eos_id: int = 2,
                  prefill_chunk: int = 32, page_size: int = 32,
-                 oversize_pages: int = 2):
+                 oversize_pages: int = 2,
+                 trace: Optional[TraceSink] = None):
         """Allocate the page pool (`slots` table-widths of `page_size`
         pages; sliding-window configs get `min(window, chunk-rounded
         max_len)` ring positions per slot) and jit the paged decode /
@@ -188,6 +194,13 @@ class ContinuousEngine:
         self.prefill_chunk = prefill_chunk
         self.page_size = page_size
         self.oversize_pages = oversize_pages
+        # observability: every request-visible state change is mirrored
+        # into the sink (serving/trace.py); tracing is pure host-side
+        # bookkeeping and never touches device state, so tokens are
+        # bit-identical with or without a sink attached
+        self.trace = trace
+        self.trace_src = f"e{_ENGINE_SEQ[0]}"
+        _ENGINE_SEQ[0] += 1
         ps = page_size
         # absolute-position scratch length for chunked prefill: rounded
         # UP to whole chunks so a final ragged chunk's dynamic slice
@@ -250,12 +263,33 @@ class ContinuousEngine:
             self.cfg, self.params, slots=slots or self.slots,
             max_len=self.max_len, eos_id=self.eos_id,
             prefill_chunk=self.prefill_chunk, page_size=self.page_size,
-            oversize_pages=self.oversize_pages)
+            oversize_pages=self.oversize_pages, trace=self.trace)
 
     def _table_dev(self):
         if self._tbl_dev is None:
             self._tbl_dev = jnp.asarray(self._tbl)
         return self._tbl_dev
+
+    # ------------------------------------------------------------ tracing
+
+    def _emit(self, name: str, rid: int = -1, *, comp: str = "engine",
+              ph: str = "I", **attrs) -> None:
+        """One trace record from this engine (no-op without a sink)."""
+        if self.trace is not None:
+            self.trace.emit(comp, name, rid, src=self.trace_src, ph=ph,
+                            **attrs)
+
+    def _trace_page_stats(self) -> None:
+        """Snapshot pool accounting into the trace: tools/trace_check.py
+        reconciles the last snapshot of a drained engine against the
+        only-the-trie-holds-refs invariant."""
+        if self.trace is not None:
+            st = self.page_stats()
+            self.trace.emit("pager", "page_stats", src=self.trace_src,
+                            total=st.total, free=st.free,
+                            mapped_refs=st.mapped_refs,
+                            retained=st.retained,
+                            inflight=len(self._inflight))
 
     # ------------------------------------------------------------- intake
 
@@ -279,6 +313,8 @@ class ContinuousEngine:
             req.key = jax.random.fold_in(jax.random.PRNGKey(seed), rid)
         self.queue.append(req)
         self._inflight[rid] = req
+        self._emit("queued", rid, prompt_len=len(p), max_new=max_new,
+                   greedy=greedy)
         return rid
 
     def _draw(self, req: _Request, row: np.ndarray) -> int:
@@ -338,6 +374,8 @@ class ContinuousEngine:
             self._occupant[s] = None
             self.active[s] = False
         self.cancelled += 1
+        self._emit("cancelled", rid, slot=s, n_tokens=len(req.tokens))
+        self._trace_page_stats()
         return True
 
     # ------------------------------------------------------------- stepping
@@ -363,12 +401,17 @@ class ContinuousEngine:
         self._release_pages(req)
         events.append(EngineEvent(req.rid, "done", result=GenResult(
             req.tokens, len(req.prompt), req.prefill_s, req.decode_s)))
+        self._emit("done", req.rid, n_tokens=len(req.tokens),
+                   prefill_s=req.prefill_s, decode_s=req.decode_s)
+        self._trace_page_stats()
 
     def _emit_token(self, req: _Request, tok: int,
                     events: List[EngineEvent]) -> None:
         """Record one emitted token; finish the request on EOS/max_new."""
         req.tokens.append(tok)
         events.append(EngineEvent(req.rid, "token", token=tok))
+        self._emit("first_token" if len(req.tokens) == 1 else "token",
+                   req.rid, token=tok)
         if tok == self.eos_id or len(req.tokens) >= req.max_new:
             self._finish(req, events)
 
@@ -424,6 +467,8 @@ class ContinuousEngine:
             self.cache = self._copy(self.cache, jnp.int32(cow[0]),
                                     jnp.int32(fresh[0]))
             self.pool.decref(cow[0])
+            self._emit("cow_fork", req.rid, comp="pager", src_page=cow[0],
+                       dst_page=fresh[0], copy_len=cow[1])
         req.pages = full + fresh
         req.matched = req.filled = matched
         req.prefill_s += time.perf_counter() - t0
@@ -433,6 +478,8 @@ class ContinuousEngine:
         if matched:
             self.prefix_hits += 1
             self.prefix_tokens_reused += matched
+            self._emit("prefix_hit", req.rid, comp="pager",
+                       matched=matched, full_pages=len(full))
         return "ok"
 
     def _admit(self, events: List[EngineEvent]) -> None:
@@ -452,11 +499,16 @@ class ContinuousEngine:
                     self.shed += 1
                     events.append(EngineEvent(req.rid, "shed",
                                               reason="oversize"))
+                    self._emit("shed", req.rid, reason="oversize",
+                               prompt_len=len(req.prompt))
+                    self._trace_page_stats()
                     continue
                 req.slot = s
                 self._occupant[s] = req
                 self.active[s] = False
                 events.append(EngineEvent(req.rid, "admitted"))
+                self._emit("admitted", req.rid, slot=s,
+                           matched=req.matched, pages=len(req.pages))
 
     def _prefill_step(self, events: List[EngineEvent]) -> None:
         """Advance every admitting slot by one prompt chunk. A request
@@ -476,11 +528,14 @@ class ContinuousEngine:
             real = len(chunk)
             if real < c:
                 chunk = np.concatenate([chunk, np.zeros(c - real, np.int32)])
+            self._emit("prefill_chunk", req.rid, ph="B", slot=s,
+                       start=req.filled, n=real)
             logits, self.cache = self._chunk(
                 self.params, self.cache, jnp.asarray(chunk[None]),
                 jnp.asarray(self._tbl[s]), jnp.int32(req.filled),
                 jnp.int32(req.filled + real))
             req.filled += real
+            self._emit("prefill_chunk", req.rid, ph="E")
             if req.filled >= len(req.prompt):
                 plen = len(req.prompt)
                 if self.prefix is not None:
@@ -504,6 +559,7 @@ class ContinuousEngine:
         if not self.active.any():
             return
         t0 = time.perf_counter()
+        self._emit("decode_step", ph="B", active=int(self.active.sum()))
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.last_tok[:, None]),
             jnp.asarray(self.pos), jnp.asarray(self.active),
@@ -520,6 +576,7 @@ class ContinuousEngine:
         nxt = np.asarray(_sample_rows(logits, jnp.asarray(keys),
                                       jnp.asarray(ts), jnp.asarray(gr)))
         dt = time.perf_counter() - t0
+        self._emit("decode_step", ph="E")
         self.steps += 1
         self.active_slot_steps += int(self.active.sum())
         for s in range(self.slots):

@@ -146,6 +146,17 @@ class ChaosEngine:
     def __getattr__(self, name):
         return getattr(self.inner, name)
 
+    def _emit_injected(self, kind: str) -> None:
+        """One comp="chaos" instant per fired fault, into the wrapped
+        engine's sink — so the trace checker can demand that every
+        injected fault surfaces as a well-formed span chain."""
+        sink = getattr(self.inner, "trace", None)
+        if sink is not None:
+            sink.emit("chaos", "injected",
+                      src=getattr(self.inner, "trace_src", ""),
+                      kind=kind, ridx=self.ridx, step=self.step_idx - 1,
+                      inflight=len(getattr(self.inner, "_inflight", ())))
+
     def _crash(self) -> None:
         """A crash loses the engine's in-flight state: cancel everything
         (slots freed, requests forgotten) before raising — the scheduler
@@ -160,6 +171,7 @@ class ChaosEngine:
         self.step_idx += 1
         if fault is not None:
             self.injected[fault] += 1
+            self._emit_injected(fault)
         if fault == "replica_crash":
             self._crash()
         if fault == "slot_stall":
@@ -175,11 +187,13 @@ class ChaosPipeline:
     `_ensure_slm`, so RagSession construction works — delegates to the
     wrapped pipeline."""
 
-    def __init__(self, inner, plan: FaultPlan):
+    def __init__(self, inner, plan: FaultPlan,
+                 trace: Optional[object] = None):
         self.inner = inner
         self.errors = plan.retrieval_errors()
         self.calls = 0
         self.injected = 0
+        self.trace = trace            # optional shared TraceSink
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
@@ -189,6 +203,9 @@ class ChaosPipeline:
         self.calls += 1
         if idx in self.errors:
             self.injected += 1
+            if self.trace is not None:
+                self.trace.emit("chaos", "injected",
+                                kind="retrieval_error", call=idx)
             raise InjectedFault(f"retrieval error @ call {idx}")
         return self.inner.answer_batch(queries, **kw)
 

@@ -77,6 +77,10 @@ class RAGBase:
         self.docs = list(docs)
         self.embed = embed
         self.top_k = top_k
+        # IVF probe width for every retrieval; the SLO controller's
+        # degrade ladder (serving/session.py) lowers it under deadline
+        # pressure and restores it after the chunk
+        self.n_probe = 4
         # device-memory budget for the retrieval index (DESIGN.md §14):
         # None = all-resident; an int is bytes; a float in (0, 1] is a
         # fraction of the all-resident pack. Builds a TieredEcoVector.
@@ -141,10 +145,10 @@ class RAGBase:
         try:
             if self._use_device_retrieval() and hasattr(
                     self.index, "search_device_batched"):
-                ids_b, _ = self.index.search_device_batched(qvs, k=k,
-                                                            n_probe=4)
+                ids_b, _ = self.index.search_device_batched(
+                    qvs, k=k, n_probe=self.n_probe)
             else:
-                ids_b = [self.index.search(qv, k=k, n_probe=4)[0]
+                ids_b = [self.index.search(qv, k=k, n_probe=self.n_probe)[0]
                          for qv in qvs]
         except Exception:
             self.retrieval_fallbacks += 1
@@ -255,18 +259,21 @@ class RAGBase:
     def session(self, *, max_new: int = 16, slots: int = 4,
                 retrieve_chunk: int = 4, greedy: bool = True,
                 seed: int = 0, max_pending: Optional[int] = None,
-                deadline_s: Optional[float] = None):
+                deadline_s: Optional[float] = None,
+                trace=None, slo_s: Optional[float] = None):
         """A RagSession over this pipeline: submit/step/stream with
         continuous-batching decode (raises ValueError when `gen_arch`
         has no slot-paged KV path). `greedy=False` samples each request
         from its own co-residency-independent PRNG stream. `max_pending`
         bounds session admission (degrade past half, shed at the bound);
-        `deadline_s` is the default per-request deadline."""
+        `deadline_s` is the default per-request deadline. `trace` is a
+        shared TraceSink (docs/OBSERVABILITY.md); `slo_s` turns on
+        SLO-aware admission planned from the live trace window."""
         from repro.serving.session import RagSession
         return RagSession(self, max_new=max_new, slots=slots,
                           retrieve_chunk=retrieve_chunk, greedy=greedy,
                           seed=seed, max_pending=max_pending,
-                          deadline_s=deadline_s)
+                          deadline_s=deadline_s, trace=trace, slo_s=slo_s)
 
     def stream(self, queries: Sequence[str] = (), *, max_new: int = 16,
                slots: int = 4, retrieve_chunk: int = 4):

@@ -35,6 +35,9 @@ from typing import Callable, Deque, Dict, List, Optional
 import numpy as np
 
 from repro.dist.fault import HealthConfig, HealthTracker
+from repro.serving.trace import TraceSink
+
+_SCHED_SEQ = [0]
 
 
 @dataclass
@@ -144,7 +147,8 @@ class SlotScheduler:
                  overflow: str = "degrade", max_hedges: int = 2,
                  probe_cooldown_s: float = 0.25,
                  max_probes: Optional[int] = 8,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 trace: Optional[TraceSink] = None):
         """engines: ContinuousEngine-likes (submit/step/available_slots,
         and ideally cancel). `stall_s`: per-slot stall budget — a placed
         request with no new token for this long (while its replica is
@@ -154,9 +158,14 @@ class SlotScheduler:
         (sheds outright past twice the bound), `overflow="reject"` sheds
         at the bound. `probe_cooldown_s`/`max_probes`: drained-replica
         probation (see dist.fault.HealthTracker). `deadline_s`: default
-        per-request deadline (None = unbounded)."""
+        per-request deadline (None = unbounded). `trace`: a shared
+        TraceSink recording comp="sched" lifecycle + replica events
+        (docs/OBSERVABILITY.md)."""
         assert overflow in ("degrade", "reject")
         self.engines = engines
+        self.trace = trace
+        self.trace_src = f"q{_SCHED_SEQ[0]}"
+        _SCHED_SEQ[0] += 1
         hc = HealthConfig(max_strikes=max_strikes,
                           cooldown_s=probe_cooldown_s,
                           max_probes=max_probes)
@@ -171,6 +180,11 @@ class SlotScheduler:
         self.shed: List[Shed] = []
         self.counters = SchedCounters()
         self._next_rid = 0
+
+    def _emit(self, name: str, rid: int = -1, **attrs) -> None:
+        if self.trace is not None:
+            self.trace.emit("sched", name, rid, src=self.trace_src,
+                            **attrs)
 
     def submit(self, prompt: np.ndarray, max_new: int = 32, *,
                greedy: bool = True, seed: int = 0,
@@ -188,14 +202,18 @@ class SlotScheduler:
         self._next_rid += 1
         self.counters.submitted += 1
         now = time.perf_counter()
+        self._emit("queued", rid, max_new=max_new,
+                   prompt_len=len(prompt))
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             if self.overflow == "degrade" \
                     and len(self.queue) < 2 * self.max_queue:
                 max_new = max(1, max_new // 2)
                 self.counters.degraded += 1
+                self._emit("degraded", rid, max_new=max_new)
             else:
                 self.counters.shed_queue += 1
                 self.shed.append(Shed(rid, "queue_full", 0.0))
+                self._emit("shed", rid, reason="queue_full")
                 return rid
         if deadline_s is None:
             deadline_s = self.deadline_s
@@ -231,6 +249,7 @@ class SlotScheduler:
             if erid is None:
                 continue
             self._cancel_placement(ridx, erid)
+            self._emit("requeue", req.rid, replica=ridx)
             if not req.placements:
                 req.hedges = 0
                 self.queue.appendleft(req)
@@ -239,9 +258,12 @@ class SlotScheduler:
         """One failure strike through the HealthTracker; a drain (at
         max_strikes, or any probe failure) re-queues in-flight work."""
         self.counters.strikes += 1
+        self._emit("strike", replica=ridx,
+                   strikes=self.state[ridx].strikes + 1)
         h = self.state[ridx]
         if h.tracker.record_failure():
             self.counters.drains += 1
+            self._emit("drain", replica=ridx)
             h.canary = None
             self._requeue_placements(ridx)
 
@@ -262,6 +284,7 @@ class SlotScheduler:
             self.counters.shed_deadline += 1
             self.shed.append(Shed(req.rid, "deadline",
                                   now - req.submitted_s))
+            self._emit("shed", req.rid, reason="deadline")
 
     def _place(self, req: _SlotReq, ridx: int) -> None:
         """Submit `req` to replica `ridx` and record the placement.
@@ -276,6 +299,7 @@ class SlotScheduler:
                               seed=req.seed)
         req.placements[ridx] = erid
         req.last_progress_s = time.perf_counter()
+        self._emit("placed", req.rid, replica=ridx, erid=erid)
 
     def _probe(self) -> None:
         """Drained-replica probation: a replica whose cooldown elapsed
@@ -298,6 +322,7 @@ class SlotScheduler:
                 continue
             t.begin_probe()
             self.counters.probes += 1
+            self._emit("probe", replica=ridx)
             req = self.queue.popleft()
             h.canary = req.rid
             try:
@@ -342,6 +367,8 @@ class SlotScheduler:
             req.ever_hedged = True
             req.last_hedge_s = now
             self.counters.hedges += 1
+            self._emit("hedge", req.rid, replica=ridx,
+                       stalled=list(stalled))
             self._place(req, ridx)
             for s in stalled:
                 self._strike(s)
@@ -360,8 +387,12 @@ class SlotScheduler:
         self.counters.completed += 1
         if h.tracker.record_success():
             self.counters.recoveries += 1
+            self._emit("recover", replica=ridx)
         if h.canary == req.rid:
             h.canary = None
+        self._emit("done", req.rid, replica=ridx,
+                   n_tokens=len(ev.result.tokens),
+                   hedged=req.ever_hedged)
         done.append(Completion(req.rid, list(ev.result.tokens), ridx,
                                time.perf_counter() - req.submitted_s,
                                req.ever_hedged))
@@ -381,9 +412,11 @@ class SlotScheduler:
             h.canary = None
             if h.tracker.record_success():
                 self.counters.recoveries += 1
+                self._emit("recover", replica=ridx)
         self.counters.shed_engine += 1
         self.shed.append(Shed(req.rid, ev.reason or "engine",
                               time.perf_counter() - req.submitted_s))
+        self._emit("shed", req.rid, reason=ev.reason or "engine")
 
     def _idle(self) -> None:
         """Nothing progressed this pass. Benign while prefill chunks are

@@ -34,10 +34,13 @@ from typing import Deque, Dict, Iterable, Iterator, List, Optional
 from collections import deque
 
 from repro.serving.engine import ContinuousEngine
+from repro.serving.trace import SLOController, TraceSink
 
 # request lifecycle states; "done" / "shed" / "failed" are terminal
 STATES = ("submitted", "retrieved", "condensed", "decoding",
           "done", "shed", "failed")
+
+_SESSION_SEQ = [0]
 
 
 @dataclass
@@ -84,7 +87,9 @@ class SessionCounters:
     shed_deadline: int = 0
     shed_overload: int = 0
     shed_oversize: int = 0
+    shed_slo: int = 0
     degraded: int = 0
+    degraded_slo: int = 0
     retrieval_retries: int = 0
     failed: int = 0
 
@@ -95,7 +100,9 @@ class RagSession:
     def __init__(self, pipe, *, max_new: int = 16, slots: int = 4,
                  retrieve_chunk: int = 4, greedy: bool = True,
                  seed: int = 0, max_pending: Optional[int] = None,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 trace: Optional[TraceSink] = None,
+                 slo_s: Optional[float] = None):
         """`pipe`: a RAG pipeline with `_ensure_slm`/`answer_batch`.
         `greedy=False` samples every request from its own
         fold_in(PRNGKey(seed), engine-rid) stream (ContinuousEngine
@@ -103,8 +110,13 @@ class RagSession:
         `max_pending` bounds admission: past HALF the bound the session
         degrades (halved retrieve_chunk and max_new); at the bound new
         submissions are shed. `deadline_s` is the default per-request
-        deadline. Raises ValueError when the pipeline's generation arch
-        has no slot-paged KV path (`model.supports_paged`)."""
+        deadline. `trace` attaches a shared TraceSink to the session AND
+        its engine (comp="session"/"engine"); `slo_s` is the default SLO
+        budget per request — with a sink attached, each request is planned
+        through `SLOController` (degrade before shed) against the tighter
+        of its deadline and its SLO budget. Raises ValueError when the
+        pipeline's generation arch has no slot-paged KV path
+        (`model.supports_paged`)."""
         self.pipe = pipe
         self.max_new = max_new
         self.retrieve_chunk = retrieve_chunk
@@ -113,9 +125,19 @@ class RagSession:
         self.max_pending = max_pending
         self.deadline_s = deadline_s
         self.counters = SessionCounters()
+        if slo_s is not None and trace is None:
+            trace = TraceSink()     # SLO control needs a live window
+        self.trace = trace
+        self.slo_s = slo_s
+        self.trace_src = f"s{_SESSION_SEQ[0]}"
+        _SESSION_SEQ[0] += 1
+        self._slo = SLOController(trace) if trace is not None else None
         slm = pipe._ensure_slm()
         self.engine: ContinuousEngine = slm.continuous(slots)  # may raise
+        if trace is not None:
+            self.engine.trace = trace
         self._slm = slm
+        self._n_probe0 = getattr(pipe, "n_probe", 4)
         self.requests: Dict[int, RagRequest] = {}
         self._queued: Deque[int] = deque()
         self._decoding: Dict[int, RagRequest] = {}   # engine rid -> request
@@ -125,6 +147,11 @@ class RagSession:
             # compile the chunk-prefill/decode executables off the measured
             # path so the first request's ttft reports execution, not jit
             self.engine.warmup()
+
+    def _emit(self, name: str, rid: int = -1, **attrs) -> None:
+        if self.trace is not None:
+            self.trace.emit("session", name, rid, src=self.trace_src,
+                            **attrs)
 
     # ------------------------------------------------------------- intake
 
@@ -153,10 +180,12 @@ class RagSession:
                          expires_s=(None if deadline_s is None
                                     else now + deadline_s))
         self.requests[rid] = req
+        self._emit("queued", rid, max_new=req.max_new)
         if self.max_pending is not None and self.pending >= self.max_pending:
             req.state = "shed"
             self.counters.shed_overload += 1
             self._events_out.append(RagEvent(rid, "shed", "overload"))
+            self._emit("shed", rid, reason="overload")
             return rid
         if self.overloaded:
             req.max_new = max(1, max_new // 2)
@@ -175,8 +204,12 @@ class RagSession:
               events: List[RagEvent]) -> None:
         req.state = "shed"
         req.done_s = time.perf_counter()
-        self.counters.shed_deadline += 1
+        if reason == "slo":
+            self.counters.shed_slo += 1
+        else:
+            self.counters.shed_deadline += 1
         events.append(RagEvent(req.req_id, "shed", reason))
+        self._emit("shed", req.req_id, reason=reason)
 
     def _expire_step(self, events: List[RagEvent]) -> None:
         """Shed queued and decoding requests past their deadline; a
@@ -217,6 +250,59 @@ class RagSession:
                 answers.append(e)
         return answers
 
+    def _budget_s(self, req: RagRequest, now: float) -> Optional[float]:
+        """Seconds of budget left: the tighter of the request's deadline
+        and its SLO target (None = unbounded)."""
+        cands = []
+        if req.expires_s is not None:
+            cands.append(req.expires_s - now)
+        if self.slo_s is not None:
+            cands.append(req.submitted_s + self.slo_s - now)
+        return min(cands) if cands else None
+
+    def _set_n_probe(self, n: int) -> None:
+        """Set the retrieval probe count on the real pipeline: chaos (and
+        other) wrappers delegate reads via __getattr__ but a plain setattr
+        would land on the wrapper, so walk the `.inner` chain down to the
+        object that actually owns the attribute."""
+        pipe = self.pipe
+        while "n_probe" not in vars(pipe) and \
+                getattr(pipe, "inner", None) is not None:
+            pipe = pipe.inner
+        pipe.n_probe = n
+
+    def _plan_step(self, chunk: int, events: List[RagEvent]) -> tuple:
+        """SLO-plan the head of the queue before retrieval: degrade
+        (clamp max_new, shrink this chunk, fewer probes) before shedding.
+        Returns (chunk, n_probe) for this retrieval round."""
+        n_probe = self._n_probe0
+        if self._slo is None:
+            return chunk, n_probe
+        now = time.perf_counter()
+        keep: Deque[int] = deque()
+        planned = 0
+        while self._queued and planned < chunk:
+            rid = self._queued.popleft()
+            req = self.requests[rid]
+            planned += 1
+            plan = self._slo.plan(self._budget_s(req, now), req.max_new,
+                                  chunk, n_probe)
+            if plan.action == "shed":
+                self._shed(req, "slo", events)
+                continue
+            if plan.action == "degrade":
+                self.counters.degraded_slo += 1
+                self._emit("degraded", rid, max_new=plan.max_new,
+                           retrieve_chunk=plan.retrieve_chunk,
+                           n_probe=plan.n_probe, est_s=plan.est_s)
+                req.max_new = plan.max_new
+                chunk = plan.retrieve_chunk
+                n_probe = plan.n_probe
+            keep.append(rid)
+        keep.extend(self._queued)
+        self._queued = keep
+        return chunk, n_probe
+
     def _retrieve_step(self, events: List[RagEvent]) -> None:
         """Retrieve + condense the next chunk of queued queries (one fused
         answer_batch call) and admit their prompts to the engine. Under
@@ -225,18 +311,32 @@ class RagSession:
         chunk = self.retrieve_chunk
         if self.overloaded:
             chunk = max(1, chunk // 2)
+        chunk, n_probe = self._plan_step(chunk, events)
         take = [self._queued.popleft()
                 for _ in range(min(chunk, len(self._queued)))]
         if not take:
             return
         reqs = [self.requests[r] for r in take]
-        answers = self._condense(reqs)
+        if n_probe != self._n_probe0:
+            self._set_n_probe(n_probe)
+        try:
+            if self.trace is not None:
+                with self.trace.span("session", "retrieve",
+                                     src=self.trace_src, n=len(reqs),
+                                     n_probe=n_probe):
+                    answers = self._condense(reqs)
+            else:
+                answers = self._condense(reqs)
+        finally:
+            if n_probe != self._n_probe0:
+                self._set_n_probe(self._n_probe0)
         for req, ans in zip(reqs, answers):
             if ans is None or isinstance(ans, Exception):
                 req.state = "failed"
                 req.done_s = time.perf_counter()
                 self.counters.failed += 1
                 events.append(RagEvent(req.req_id, "failed", repr(ans)))
+                self._emit("failed", req.req_id, error=repr(ans))
                 continue
             req.answer = ans
             req.state = "condensed"
@@ -244,6 +344,9 @@ class RagSession:
                                    list(ans.doc_ids)))
             events.append(RagEvent(req.req_id, "condensed",
                                    ans.prompt_tokens))
+            self._emit("retrieved", req.req_id, docs=len(ans.doc_ids))
+            self._emit("condensed", req.req_id,
+                       prompt_tokens=ans.prompt_tokens)
             prompt = self._slm.encode_prompt(ans.prompt, bucket=False)
             erid = self.engine.submit(prompt, req.max_new,
                                       greedy=self.greedy, seed=self.seed)
@@ -269,6 +372,8 @@ class RagSession:
                 self.counters.shed_oversize += 1
                 events.append(RagEvent(req.req_id, "shed",
                                        ev.reason or "engine"))
+                self._emit("shed", req.req_id,
+                           reason=ev.reason or "engine")
             elif ev.kind == "done":
                 del self._decoding[ev.rid]
                 ans = req.answer
@@ -280,6 +385,8 @@ class RagSession:
                 req.done_s = time.perf_counter()
                 self.counters.completed += 1
                 events.append(RagEvent(req.req_id, "done", ans))
+                self._emit("done", req.req_id,
+                           n_tokens=len(ev.result.tokens))
 
     def step(self) -> List[RagEvent]:
         """Advance the session: flush submit-time events, shed expired

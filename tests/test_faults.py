@@ -10,6 +10,7 @@ return to service through the probation canary path.
 """
 import time
 from collections import deque
+from pathlib import Path
 from types import SimpleNamespace
 
 import numpy as np
@@ -311,13 +312,19 @@ def test_deadline_expiry_sheds_and_frees_slot(engine):
     assert engine.cancelled >= 1
 
 
-def test_chaos_soak_terminal_partition_and_recovery(base_engine):
+def test_chaos_soak_terminal_partition_and_recovery(base_engine, tmp_path):
     """THE acceptance soak: seeded chaos over 32 requests on 3 replicas.
     Every request ends in exactly one terminal state; drained replicas
-    come back through probation once the plan's horizon passes."""
+    come back through probation once the plan's horizon passes. The
+    whole run records into one shared TraceSink whose export must pass
+    tools/trace_check.py — every injected fault surfaces as a
+    well-formed cancelled/requeue/shed span chain, never a silent drop."""
+    from repro.serving.trace import TraceSink
+    sink = TraceSink()
     engines = [base_engine.clone() for _ in range(3)]
     for e in engines:
         e.warmup()
+        e.trace = sink
     plan = FaultPlan(seed=0, horizon=80,
                      rates={"replica_crash": 0.06, "slot_stall": 0.03,
                             "slow_step": 0.05},
@@ -325,7 +332,7 @@ def test_chaos_soak_terminal_partition_and_recovery(base_engine):
     wrapped = wrap_replicas(engines, plan)
     sched = SlotScheduler(wrapped, stall_s=0.5, probe_cooldown_s=0.05,
                           max_strikes=2, max_hedges=3, max_probes=None,
-                          deadline_s=30.0)
+                          deadline_s=30.0, trace=sink)
     rng = np.random.default_rng(1)
     rids = []
     for i in range(32):
@@ -378,6 +385,47 @@ def test_chaos_soak_terminal_partition_and_recovery(base_engine):
         w.inner.drop_prefix_cache()
         st = w.inner.page_stats()
         assert st.free == st.total and st.mapped_refs == 0, st
+
+    # ---- trace invariants over the whole soak: export the shared sink
+    # and run the standalone checker exactly as the nightly CI does
+    trace_check = _load_trace_check()
+    path = tmp_path / "chaos_soak_trace.jsonl"
+    n = sink.export_jsonl(path)
+    assert n == len(sink)
+    recs = trace_check.load_jsonl(path)
+    violations = trace_check.check_records(recs, complete=True)
+    assert violations == [], "\n".join(violations)
+    # the injected faults are themselves in the trace...
+    injected = [r for r in recs if r["comp"] == "chaos"]
+    assert {r["attrs"]["kind"] for r in injected} >= {"replica_crash"}
+    assert len(injected) == sum(sum(w.injected.values()) for w in wrapped)
+    # ...and every crash with requests in flight produced cancelled
+    # chains (the checker enforces this; spot-check one exists)
+    crashes = [r for r in injected
+               if r["attrs"]["kind"] == "replica_crash"
+               and r["attrs"]["inflight"] > 0]
+    if crashes:
+        cancels = [r for r in recs if r["comp"] == "engine"
+                   and r["name"] == "cancelled"]
+        assert cancels
+    # scheduler-side: every submitted rid reached a sched terminal
+    sched_term = {r["rid"] for r in recs if r["comp"] == "sched"
+                  and r["name"] in ("done", "shed") and r["rid"] >= 0}
+    assert sched_term == set(rids) | set(extra)
+    # replica lifecycle showed up: drain before the recover we waited on
+    names = [r["name"] for r in recs if r["comp"] == "sched"
+             and r["rid"] < 0]
+    assert "drain" in names and "recover" in names
+
+
+def _load_trace_check():
+    """Import tools/trace_check.py (not a package) the way CI runs it."""
+    import importlib.util
+    p = Path(__file__).resolve().parent.parent / "tools" / "trace_check.py"
+    spec = importlib.util.spec_from_file_location("trace_check", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 # ------------------------------------------------------ RagSession fire
@@ -466,6 +514,46 @@ def test_session_deadline_cancels_decoding(corpus):
     # the freed slot serves the next request normally
     out = sess.run([corpus.examples[1].question])
     assert out[0] is not None and out[0].gen_tokens
+
+
+def test_chaos_pipeline_faults_surface_as_failed_span_chains(corpus,
+                                                            tmp_path):
+    """Injected retrieval errors must appear in the trace as chaos
+    records AND terminate the hit rids with well-formed 'failed' chains
+    that tools/trace_check.py accepts — never a stranded request.
+
+    Seed 3 schedules errors at calls {0, 2, 5, 9, 10}: the fused batch
+    (call 0) fails, per-query retries run as calls 1-4, and call 2
+    (query index 1) fails again -> exactly one 'failed' rid."""
+    from repro.serving.session import RagSession
+    from repro.serving.trace import TraceSink
+    sink = TraceSink()
+    plan = FaultPlan(seed=3, horizon=12, rates={"retrieval_error": 0.5})
+    cp = ChaosPipeline(_mobile(corpus), plan, trace=sink)
+    sess = RagSession(cp, max_new=4, slots=2, retrieve_chunk=4,
+                      trace=sink)
+    queries = [e.question for e in corpus.examples[:4]]
+    rids = [sess.submit(q) for q in queries]
+    while sess.pending or sess._events_out:
+        sess.step()
+    assert cp.injected == 2
+    assert sess.counters.failed == 1 and sess.counters.completed == 3
+    assert sess.requests[rids[1]].state == "failed"
+
+    path = tmp_path / "chaos_session_trace.jsonl"
+    sink.export_jsonl(path)
+    trace_check = _load_trace_check()
+    recs = trace_check.load_jsonl(path)
+    violations = trace_check.check_records(recs, complete=True)
+    assert violations == [], "\n".join(violations)
+    injected = [r for r in recs if r["comp"] == "chaos"]
+    assert len(injected) == 2
+    assert all(r["attrs"]["kind"] == "retrieval_error" for r in injected)
+    # session-side terminal partition, straight from the trace
+    terms = {r["rid"]: r["name"] for r in recs if r["comp"] == "session"
+             and r["name"] in ("done", "failed", "shed")}
+    assert terms == {rids[0]: "done", rids[1]: "failed",
+                     rids[2]: "done", rids[3]: "done"}
 
 
 # ----------------------------------------------- pipeline degradation

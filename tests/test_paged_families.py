@@ -189,3 +189,25 @@ def test_moe_decode_never_drops_tokens():
         return res[tid]
 
     assert run(1) == run(2) == run(3)
+
+
+@pytest.mark.parametrize("kind", ["swa", "int8", "moe", "swa_int8"])
+def test_tracing_zero_interference_families(kind):
+    """Tracing must not perturb decode for any paged family: the same
+    mixed-length batch produces bit-identical tokens with a TraceSink
+    attached and with tracing disabled."""
+    from repro.serving.trace import TraceSink
+    cfg = _cfg(kind)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = _prompts(seed=31, lens=(16, 33, 9))
+
+    def run(trace):
+        ce = ContinuousEngine(cfg, params, slots=2, max_len=96,
+                              trace=trace)
+        return [r.tokens for r in ce.generate(prompts, max_new=6)]
+
+    sink = TraceSink()
+    assert run(sink) == run(None)
+    assert len(sink.query(comp="engine", name="done")) == len(prompts)
+    assert len(sink.query(comp="engine", name="first_token")) \
+        == len(prompts)

@@ -232,6 +232,38 @@ def test_identical_prompts_share_pages_concurrently(dense_setup):
     _assert_no_leak(ce)
 
 
+# ------------------------------------------------- tracing interference
+
+
+def test_tracing_zero_interference_dense_and_prefix(dense_setup):
+    """Tracing is observational only: an engine with a TraceSink
+    attached produces BIT-identical tokens to an untraced twin across
+    greedy, sampled, and prefix-hit (page reuse + COW tail) admissions —
+    and the traced run still records the interesting events."""
+    from repro.serving.trace import TraceSink
+    cfg, params = dense_setup
+    rng = np.random.default_rng(29)
+    seed_prompt = rng.integers(4, 500, 70).astype(np.int32)
+    probe = np.concatenate([seed_prompt[:50],
+                            rng.integers(4, 500, 13).astype(np.int32)])
+
+    def run(trace):
+        ce = ContinuousEngine(cfg, params, slots=2, max_len=96,
+                              trace=trace)
+        a = ce.generate([seed_prompt], max_new=8)[0].tokens
+        b = ce.generate([probe], max_new=8, greedy=False,
+                        seed=5)[0].tokens
+        c = ce.generate([probe], max_new=8)[0].tokens   # prefix hit
+        assert ce.prefix_hits >= 1
+        _assert_no_leak(ce)
+        return a, b, c
+
+    sink = TraceSink()
+    assert run(sink) == run(None)
+    assert sink.query(comp="pager", name="prefix_hit")
+    assert len(sink.query(comp="engine", name="done")) == 3
+
+
 # -------------------------------------------------------------- oversize
 
 

@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Roofline-regression diff over dryrun summary.json artifacts.
+
+Compares two `launch/dryrun.py` campaign summaries (the nightly CI keeps
+the previous run's summary.json as an artifact) cell by cell and flags:
+
+  - a cell that compiled before and errors now (hard regression);
+  - a dominant-term flip (e.g. compute-bound -> collective-bound);
+  - a roofline time term (t_compute/t_memory/t_collective) that grew by
+    more than `--tol` (relative, default 10%);
+  - peak device memory that grew past the HBM fit line.
+
+New cells and improvements are reported informationally. With no
+baseline (first nightly) the diff degrades to a summary print and exit
+0, so the workflow bootstraps itself.
+
+Deliberately stdlib-only (no repo imports — `launch.dryrun` forces a
+512-device XLA host platform on import, which must never leak into the
+checker process).
+
+Usage:
+  python tools/roofline_diff.py NEW_SUMMARY [BASELINE_SUMMARY]
+      [--tol 0.10] [--out DIFF.md]
+
+Exit 1 when any hard regression is found, else 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+TERMS = ("t_compute_s", "t_memory_s", "t_collective_s")
+
+
+def _load(path) -> dict:
+    return json.loads(Path(path).read_text())["cells"]
+
+
+def diff_cells(new: dict, base: dict, tol: float):
+    """(regressions, notes) between two summary cell maps."""
+    regressions, notes = [], []
+    for tag in sorted(set(new) | set(base)):
+        n, b = new.get(tag), base.get(tag)
+        if b is None:
+            notes.append(f"NEW {tag}: {n['status']}")
+            continue
+        if n is None:
+            regressions.append(f"GONE {tag}: present in baseline, "
+                               f"missing from this run")
+            continue
+        if b["status"] == "ok" and n["status"] != "ok":
+            regressions.append(f"BROKE {tag}: ok -> {n['status']}")
+            continue
+        if n["status"] != "ok":
+            notes.append(f"STILL-FAILING {tag}")
+            continue
+        if b["status"] != "ok":
+            notes.append(f"FIXED {tag}")
+            continue
+        if n.get("dominant") != b.get("dominant"):
+            regressions.append(
+                f"DOMINANT-FLIP {tag}: {b.get('dominant')} -> "
+                f"{n.get('dominant')}")
+        for term in TERMS:
+            nv, bv = n.get(term), b.get(term)
+            if nv is None or bv is None or bv <= 0:
+                continue
+            rel = (nv - bv) / bv
+            if rel > tol:
+                regressions.append(
+                    f"SLOWER {tag}: {term} {bv:.4g}s -> {nv:.4g}s "
+                    f"(+{rel:.0%} > {tol:.0%})")
+            elif rel < -tol:
+                notes.append(f"faster {tag}: {term} {bv:.4g}s -> "
+                             f"{nv:.4g}s ({rel:.0%})")
+        if b.get("fits_hbm_16g") and n.get("fits_hbm_16g") is False:
+            regressions.append(
+                f"OOM {tag}: peak "
+                f"{n.get('peak_bytes_per_device', 0) / 1e9:.2f} GB no "
+                f"longer fits 16 GB HBM")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="this run's summary.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="previous run's summary.json (omit to bootstrap)")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="relative slowdown tolerance per roofline term")
+    ap.add_argument("--out", default=None,
+                    help="also write the diff as markdown")
+    args = ap.parse_args(argv)
+
+    new = _load(args.new)
+    lines = [f"# Roofline diff ({len(new)} cells)"]
+    rc = 0
+    if args.baseline is None or not Path(args.baseline).exists():
+        lines.append("no baseline summary: bootstrap run, nothing to "
+                     "diff against")
+        ok = sum(1 for c in new.values() if c["status"] == "ok")
+        lines.append(f"this run: {ok}/{len(new)} cells ok")
+    else:
+        regressions, notes = diff_cells(new, _load(args.baseline),
+                                        args.tol)
+        if regressions:
+            lines.append(f"## {len(regressions)} regression(s)")
+            lines += [f"- {r}" for r in regressions]
+            rc = 1
+        else:
+            lines.append("no regressions")
+        if notes:
+            lines.append(f"## {len(notes)} note(s)")
+            lines += [f"- {n}" for n in notes]
+    text = "\n".join(lines)
+    print(text)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
